@@ -1,0 +1,54 @@
+"""Hillclimb driver: measure one cell's corrected roofline terms under a
+PERF-flag configuration (hypothesis -> change -> measure loop, §Perf).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb <arch> <shape> \
+        [flag=0/1 ...] [--quick]      (--quick: full compile only, no
+                                       depth variants — term deltas only
+                                       approximate for scanned parts)
+"""
+import json
+import sys
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    quick = "--quick" in sys.argv
+    from repro.launch import dryrun
+    for a in sys.argv[3:]:
+        if "=" in a:
+            k, v = a.split("=")
+            assert k in dryrun.PERF, k
+            dryrun.PERF[k] = bool(int(v))
+    print("PERF:", dryrun.PERF)
+
+    results = {}
+    jobs = [("full", None)]
+    if not quick:
+        jobs += dryrun.depth_variants(
+            __import__("repro.configs", fromlist=["x"]).get(arch))
+    for tag, cfg_over in jobs:
+        rec = dryrun.run_cell(arch, shape, multi_pod=False,
+                              cfg_override=cfg_over, tag=tag)
+        results[f"{arch}|{shape}|16x16|{tag}"] = rec
+        print(f"  [{tag}] flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e} "
+              f"wire={rec['collective_wire_bytes']:.3e} "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"compile={rec['compile_s']}s")
+
+    if not quick:
+        from benchmarks.roofline import corrected_cell
+        r = corrected_cell(results, arch, shape)
+        print(f"corrected: compute={r['compute_s']:.3e}s "
+              f"memory={r['memory_s']:.3e}s "
+              f"collective={r['collective_s']:.3e}s "
+              f"dominant={r['dominant']} frac={r['roofline_frac']:.2%} "
+              f"MODEL/HLO={r['useful_ratio']:.2f}")
+        out = f"/tmp/hillclimb_{arch}_{shape}.json"
+        with open(out, "a") as f:
+            json.dump({"perf": dryrun.PERF, **r}, f)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Benchmarks reproducing the paper's four experiment groups (Figs 8–11,
+Table IV), one function per table/figure.  Each returns ``(name,
+us_per_call, derived)`` rows: the timing is for the vectorized engine
+sweep that computes the figure, ``derived`` is the figure's headline
+quantity (so regressions in *either* speed or semantics are visible).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import paper_scenario, refsim, sweep
+
+M_SWEEP = range(1, 21)
+
+
+def _timed(batch, reps=5):
+    fn = sweep.simulate_batch
+    out = fn(batch)
+    out.makespan.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(batch)
+        out.makespan.block_until_ready()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return out, us
+
+
+def group1_fig8a():
+    """Fig 8a: execution time (avg/max/min) vs MR combination."""
+    batch = sweep.paper_grid(m_range=M_SWEEP)
+    out, us = _timed(batch)
+    avg = out.avg_exec[:, 0]
+    drop = float(1 - avg[2] / avg[0])          # rapid early drop
+    flatness = float((max(avg[5:]) - min(avg[5:])) / avg[0])
+    return [("group1_fig8a_earlydrop", us, f"{drop:.3f}"),
+            ("group1_fig8a_flatness_M6plus", us, f"{flatness:.4f}")]
+
+
+def group1_fig8b():
+    """Fig 8b: makespan with vs without network delay."""
+    rows = []
+    for nd in (True, False):
+        batch = sweep.paper_grid(m_range=M_SWEEP, network_delay=nd)
+        out, us = _timed(batch)
+        rows.append((f"group1_fig8b_makespan_M1_delay={int(nd)}", us,
+                     f"{float(out.makespan[0, 0]):.1f}"))
+    return rows
+
+
+def group2_fig9_table4():
+    """Fig 9 (avg exec vs VM number) + Table IV (network cost invariance)."""
+    outs = {}
+    us_total = 0.0
+    for v in (3, 6, 9):
+        batch = sweep.paper_grid(m_range=M_SWEEP, vm_numbers=(v,))
+        outs[v], us = _timed(batch)
+        us_total += us
+    red6 = float(np.mean(1 - outs[6].map_avg_exec[:, 0]
+                         / outs[3].map_avg_exec[:, 0]))
+    red9 = float(np.mean(1 - outs[9].map_avg_exec[:, 0]
+                         / outs[3].map_avg_exec[:, 0]))
+    # Table IV: exact values + invariance across VM number
+    tbl = np.stack([outs[v].network_cost[:, 0] for v in (3, 6, 9)])
+    invariant = bool(np.allclose(tbl[0], tbl[1]) and np.allclose(tbl[0], tbl[2]))
+    expected = 4250.0 / (np.arange(1, 21) + 1)
+    exact = bool(np.allclose(np.asarray(tbl[0]), expected, rtol=1e-4))
+    return [
+        ("group2_fig9_reduction_3to6_vms", us_total, f"{red6:.3f}"),
+        ("group2_fig9_reduction_3to9_vms", us_total, f"{red9:.3f}"),
+        ("group2_table4_vm_invariant", us_total, str(invariant)),
+        ("group2_table4_exact_4250_over_Mplus1", us_total, str(exact)),
+    ]
+
+
+def group3_fig10():
+    """Fig 10: avg exec time vs VM configuration (paper ~60%/~80% less)."""
+    outs = {}
+    us_total = 0.0
+    for vt in ("small", "medium", "large"):
+        batch = sweep.paper_grid(m_range=M_SWEEP, vm_types=(vt,))
+        outs[vt], us = _timed(batch)
+        us_total += us
+    s = float(np.mean(outs["small"].avg_exec[:, 0]))
+    rows = []
+    for vt, claim in (("medium", 0.60), ("large", 0.80)):
+        r = 1 - float(np.mean(outs[vt].avg_exec[:, 0])) / s
+        rows.append((f"group3_fig10_{vt}_reduction(paper~{claim})",
+                     us_total, f"{r:.3f}"))
+    return rows
+
+
+def group4_fig11():
+    """Fig 11: VM computation cost vs job configuration (linear)."""
+    outs = {}
+    us_total = 0.0
+    for jt in ("small", "medium", "big"):
+        batch = sweep.paper_grid(m_range=M_SWEEP, job_types=(jt,))
+        outs[jt], us = _timed(batch)
+        us_total += us
+    s = float(np.mean(outs["small"].vm_cost[:, 0]))
+    m = float(np.mean(outs["medium"].vm_cost[:, 0]))
+    b = float(np.mean(outs["big"].vm_cost[:, 0]))
+    return [("group4_fig11_medium_over_small(expect2)", us_total, f"{m/s:.3f}"),
+            ("group4_fig11_big_over_small(expect4)", us_total, f"{b/s:.3f}")]
+
+
+def refsim_baseline():
+    """Paper-faithful sequential baseline speed (for §Perf before/after)."""
+    scs = [paper_scenario(n_maps=m) for m in M_SWEEP]
+    t0 = time.perf_counter()
+    for s in scs:
+        refsim.simulate(s)
+    us = (time.perf_counter() - t0) / len(scs) * 1e6
+    return [("refsim_sequential_us_per_scenario", us, "baseline")]
+
+
+def all_rows():
+    rows = []
+    for fn in (group1_fig8a, group1_fig8b, group2_fig9_table4, group3_fig10,
+               group4_fig11, refsim_baseline):
+        rows += fn()
+    return rows

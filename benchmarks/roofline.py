@@ -1,0 +1,222 @@
+"""Roofline extraction: dryrun_results.json -> per-cell three-term table.
+
+Methodology (see EXPERIMENTS.md §Roofline):
+
+* The compiled SPMD module's shapes are per-device, so ``cost_analysis()``
+  FLOPs/bytes and the parsed collective bytes are *per-device* quantities.
+* XLA counts a ``lax.scan`` body once, so per-cell we also compile depth
+  variants (1 period, 0 periods) and correct:
+      X(L) = X_full + (periods - 1) · (X(L1) - X(L0))
+  for FLOPs, bytes and collective traffic (the layer scan is the only
+  collective-carrying loop).
+* Intra-layer scans (flash-style attention block loops, the chunked
+  cross-entropy) are corrected analytically — their bodies contain no
+  collectives, and the analytic terms are exact for matmul FLOPs.
+* SSM time-scan recurrences (mamba/rwkv elementwise updates) are < 1 % of
+  layer FLOPs at the assigned sizes and are noted, not corrected.
+
+Terms (TPU v5e): compute = F / 197e12, memory = B / 819e9,
+collective = wire_bytes / 50e9 (per-device wire bytes under ring
+algorithms, one ICI link conservative).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro import configs
+from repro.configs import SHAPES
+from repro.launch.dryrun import microbatches
+from repro.models.stacks import _pattern_period
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6·N·D, active params for MoE) + scan corrections
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> dict:
+    """Total and active parameter counts from the config."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    per_layer_tot = per_layer_act = 0.0
+    for entry in cfg.block_pattern():
+        if entry["mixer"] == "attn":
+            mix = D * cfg.head_dim * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        elif entry["mixer"] == "mamba":
+            di = cfg.mamba.expand * D
+            dtr = cfg.mamba.dt_rank or max(D // 16, 1)
+            ds = cfg.mamba.d_state
+            mix = D * 2 * di + di * (dtr + 2 * ds) + dtr * di + 2 * di * D
+        else:                                   # rwkv tmix
+            mix = 5 * D * D + 2 * D * (cfg.rwkv.decay_lora
+                                       + 5 * cfg.rwkv.mix_lora)
+        if entry["mlp"] == "moe":
+            e_tot = cfg.moe.n_experts * 3 * D * F
+            e_act = cfg.moe.top_k * 3 * D * F
+            mlp_tot, mlp_act = e_tot, e_act
+        elif entry["mlp"] == "rwkv_cmix":
+            mlp_tot = mlp_act = D * F + F * D + D * D
+        else:
+            n_mat = 3 if cfg.act == "swiglu" else 2
+            mlp_tot = mlp_act = n_mat * D * F
+        per_layer_tot += mix + mlp_tot
+        per_layer_act += mix + mlp_act
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    return {"total": per_layer_tot + embed,
+            "active": per_layer_act + embed,
+            "active_no_embed": per_layer_act,
+            "head": V * D}
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference), global."""
+    s = SHAPES[shape_name]
+    tokens = s.global_batch * (1 if s.kind == "decode" else s.seq_len)
+    n = param_counts(cfg)["active"]
+    mult = 6.0 if s.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for e in cfg.block_pattern() if e["mixer"] == "attn")
+
+
+def analytic_attention_flops(cfg, shape_name: str) -> float:
+    """Exact matmul FLOPs of the blocked attention loops (global).
+
+    QKᵀ + PV = 4·B·Hq·S·T·Dh per layer forward; the blocked schedule
+    computes all block pairs (no causal skip).  Train: ×4 (fwd + remat
+    recompute + backward ≈ 2×fwd).  Decode cells don't scan — no term.
+    """
+    s = SHAPES[shape_name]
+    if s.kind == "decode" or _attn_layers(cfg) == 0:
+        return 0.0
+    T = s.seq_len
+    f = 4.0 * s.global_batch * cfg.n_heads * s.seq_len * T * cfg.head_dim
+    mult = 4.0 if s.kind == "train" else 1.0
+    return f * mult * _attn_layers(cfg)
+
+
+def analytic_xent_flops(cfg, shape_name: str) -> float:
+    """LM-head matmul FLOPs hidden inside the chunked-xent scan (global)."""
+    s = SHAPES[shape_name]
+    if s.kind != "train":
+        return 0.0
+    f = 2.0 * s.global_batch * s.seq_len * cfg.d_model * cfg.padded_vocab
+    return 4.0 * f                              # fwd + recompute + bwd
+
+
+def analytic_attention_bytes(cfg, shape_name: str) -> float:
+    """HBM traffic of the attention block loops (q/k/v block streams)."""
+    s = SHAPES[shape_name]
+    if s.kind == "decode" or _attn_layers(cfg) == 0:
+        return 0.0
+    B, S = s.global_batch, s.seq_len
+    bq, bk = 512, 1024
+    n_pairs = (S // bq) * (S // bk)
+    per_pair = (bq + 2 * bk) * cfg.head_dim * B * cfg.n_heads * 2
+    mult = 4.0 if s.kind == "train" else 1.0
+    return n_pairs * per_pair * mult * _attn_layers(cfg)
+
+
+# ---------------------------------------------------------------------------
+# record assembly
+# ---------------------------------------------------------------------------
+
+def corrected_cell(results: dict, arch: str, shape: str) -> dict | None:
+    key = f"{arch}|{shape}|16x16|"
+    full = results.get(key + "full")
+    if full is None:
+        return None
+    l1, l0 = results.get(key + "L1"), results.get(key + "L0")
+    cfg = configs.get(arch)
+    periods = full["n_periods"] or 1
+
+    def corr(field):
+        x = full[field]
+        if l1 is not None and l0 is not None:
+            x += (periods - 1) * (l1[field] - l0[field])
+        return x
+
+    # grad-accumulation scan: body counted once -> multiply by n_micro
+    # (the optimizer update outside the scan is ~10 flops/param, < 0.1 %)
+    n_micro = microbatches(cfg, SHAPES[shape])
+    flops = corr("flops") * n_micro
+    byts = corr("bytes_accessed") * n_micro
+    wire = corr("collective_wire_bytes") * n_micro
+    operand = corr("collective_operand_bytes") * n_micro
+    # analytic intra-layer scan corrections (global, full batch -> /device)
+    flops += (analytic_attention_flops(cfg, shape)
+              + analytic_xent_flops(cfg, shape)) / CHIPS
+    byts += analytic_attention_bytes(cfg, shape) / CHIPS
+
+    mf = model_flops(cfg, shape) / CHIPS
+    terms = {"compute_s": flops / PEAK_FLOPS, "memory_s": byts / HBM_BW,
+             "collective_s": wire / LINK_BW}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape,
+        "flops": flops, "bytes": byts, "wire": wire,
+        "collective_operand_bytes": operand,
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_gib": full["memory"]["temp_bytes"] / 2**30,
+        "microbatches": microbatches(cfg, SHAPES[shape]),
+    }
+
+
+def all_corrected(path: str) -> list[dict]:
+    with open(path) as f:
+        results = json.load(f)
+    out = []
+    for arch, shape in configs.all_cells():
+        rec = corrected_cell(results, arch, shape)
+        if rec is not None:
+            out.append(rec)
+    return out
+
+
+def render_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2%} | {r['temp_gib']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_opt.json"
+    rows = all_corrected(path)
+    print(render_table(rows))
+    print()
+    worst = sorted(rows, key=lambda r: r["roofline_frac"])[:5]
+    coll = sorted(rows, key=lambda r: -r["collective_s"] /
+                  max(r["compute_s"], 1e-30))[:5]
+    print("worst roofline fraction:", [(r["arch"], r["shape"]) for r in worst])
+    print("most collective-bound:", [(r["arch"], r["shape"]) for r in coll])
+    out_csv = os.path.join(os.path.dirname(path) or ".", "roofline.csv")
+    with open(out_csv, "w") as f:
+        cols = list(rows[0].keys()) if rows else []
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+    print("wrote", out_csv)
+
+
+if __name__ == "__main__":
+    main()

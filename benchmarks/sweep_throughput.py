@@ -1,0 +1,48 @@
+"""Sweep-throughput benchmark: the TPU adaptation's headline number.
+
+CloudSim runs one scenario per process; the vectorized engine runs a whole
+parameter grid per ``pjit`` call.  We measure scenarios/second on the host
+CPU (single device) and — because the sweep is embarrassingly parallel with
+zero collectives (verified by the dry-run) — the pod-scale figure is
+devices × single-device throughput, reported as the derived column.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import sweep
+
+
+def throughput_rows(batch_sizes=(64, 512, 2048), reps=3):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in batch_sizes:
+        params = dict(
+            n_maps=rng.integers(1, 21, n).astype(np.int32),
+            n_reduces=np.ones(n, np.int32),
+            n_vms=rng.integers(1, 10, n).astype(np.int32),
+            vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
+            vm_pes=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+            vm_cost=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+            job_length=rng.choice([362880.0, 725760.0, 1451520.0], n
+                                  ).astype(np.float32),
+            job_data=rng.choice([2e5, 4e5, 8e5], n).astype(np.float32),
+        )
+        batch = sweep.grid_arrays(params, pad_tasks=21, pad_vms=9)
+        out = sweep.simulate_batch(batch)
+        out.makespan.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sweep.simulate_batch(batch).makespan.block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        us_per_call = dt * 1e6
+        scen_per_s = n / dt
+        rows.append((f"sweep_throughput_b{n}", us_per_call,
+                     f"{scen_per_s:.0f}_scen/s"))
+    return rows
+
+
+def all_rows():
+    return throughput_rows()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: data pipeline -> sharded train loop ->
+checkpoints, with fault tolerance on.
+
+Presets:
+  smoke  —   ~6M-param model,  60 steps: finishes in minutes on CPU
+             (what the integration test runs);
+  100m   — ~100M-param dense model, 300 steps: the assignment's
+             reference driver (hours on 1 CPU core; minutes on a TPU
+             host — the loop, sharding and checkpoint logic are
+             identical, only the config differs).
+
+    PYTHONPATH=src python examples/train_lm.py --preset smoke
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+
+import jax
+
+from repro.models import ArchConfig, init_model
+from repro.train import OptConfig, TrainConfig, train
+
+PRESETS = {
+    "smoke": dict(
+        cfg=ArchConfig(name="lm-smoke", family="dense", n_layers=4,
+                       d_model=128, n_heads=8, n_kv_heads=4, d_ff=512,
+                       vocab=2048, vocab_pad_to=8, dtype="float32"),
+        steps=60, seq_len=128, global_batch=8, lr=1e-3),
+    "100m": dict(
+        cfg=ArchConfig(name="lm-100m", family="dense", n_layers=12,
+                       d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                       vocab=32768, vocab_pad_to=128, dtype="float32"),
+        steps=300, seq_len=512, global_batch=16, lr=6e-4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="smoke")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = p["cfg"]
+    n_params = sum(
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))))
+    tc = TrainConfig(
+        steps=args.steps or p["steps"], seq_len=p["seq_len"],
+        global_batch=p["global_batch"],
+        opt=OptConfig(lr=p["lr"], warmup_steps=20),
+        ckpt_dir=f"{args.ckpt_dir}/{cfg.name}", ckpt_every=50, log_every=10)
+
+    print(f"training {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{tc.steps} steps, batch {tc.global_batch}x{tc.seq_len}, "
+          f"{len(jax.devices())} device(s)")
+    hist = train(cfg, tc)
+    losses = hist["loss"]
+    print(f"resumed_at={hist['resumed_at']} restarts={hist['restarts']} "
+          f"stragglers={hist['straggler_steps']}")
+    print(f"loss: first5={sum(losses[:5])/5:.4f} "
+          f"last5={sum(losses[-5:])/5:.4f} final={hist['final_loss']:.4f}")
+    assert losses[-1] < losses[0], "loss should decrease"
+    print("checkpoints committed under", tc.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Assigned input shapes and their abstract input specs.
+
+LM transformer shapes are ``seq_len × global_batch``:
+
+* ``train_4k``     — seq 4096,    batch 256 → lowers ``train_step``;
+* ``prefill_32k``  — seq 32768,   batch 32  → lowers the prefill forward;
+* ``decode_32k``   — seq 32768,   batch 128 → lowers ``serve_step`` (one
+  new token against a seq_len KV cache / recurrent state);
+* ``long_500k``    — seq 524288,  batch 1   → ``serve_step``; only for
+  sub-quadratic archs (SSM / hybrid / sliding-window).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins — weak-type correct,
+shardable, no device allocation (the dry-run contract).  Frontend-stubbed
+archs ([audio]/[vlm]) get ``(B, S, d_model)`` embedding inputs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig
+from repro.models.model import init_decode_state
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """Assignment rules: which (arch × shape) cells are runnable."""
+    s = SHAPES[shape]
+    if s.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "pure full attention: 500k decode needs sub-quadratic"
+    return True, ""
+
+
+def supported_shapes(cfg: ArchConfig) -> list[str]:
+    return [s for s in SHAPES if cell_supported(cfg, s)[0]]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Sliding-window archs cap the decode cache at the window size."""
+    if cfg.window is not None:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """Abstract inputs for the step function this shape lowers.
+
+    train:   {"batch": {"inputs", "labels"}}
+    prefill: {"inputs"}
+    decode:  {"tokens", "state", "t"}   (state = KV caches / SSM states)
+    """
+    s = SHAPES[shape]
+    B, S = s.global_batch, s.seq_len
+    if cfg.embedding_inputs:
+        inputs = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inputs = _sds((B, S), jnp.int32)
+    if s.kind == "train":
+        return {"batch": {"inputs": inputs,
+                          "labels": _sds((B, S), jnp.int32)}}
+    if s.kind == "prefill":
+        return {"inputs": inputs}
+    # decode: state built abstractly (eval_shape — no allocation)
+    cache_len = decode_cache_len(cfg, S)
+    state = jax.eval_shape(lambda: init_decode_state(cfg, B, cache_len))
+    return {"tokens": _sds((B,), jnp.int32), "state": state,
+            "t": _sds((), jnp.int32)}

@@ -1,0 +1,29 @@
+"""IOTSim-JAX core: the paper's contribution, vectorized for TPU.
+
+Public API:
+
+* configs — :class:`~repro.core.config.Scenario` and the paper's Table I–III
+  presets (:func:`~repro.core.config.paper_scenario`);
+* :func:`~repro.core.refsim.simulate` — sequential paper-faithful oracle;
+* :func:`~repro.core.engine.simulate` — vectorized JAX engine (single cell);
+* :mod:`~repro.core.sweep` — vmapped / mesh-sharded scenario sweeps;
+* :mod:`~repro.core.workload` — LM-training-step → scenario bridge
+  (stragglers, failures, checkpoint goodput).
+"""
+from . import engine, network, refsim, sweep, workload
+from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
+                     VM_MEDIUM, VM_SMALL, VM_TYPES, DatacenterSpec, JobSpec,
+                     NetworkSpec, Scenario, VMSpec, paper_scenario)
+from .engine import JobMetrics, ScenarioArrays, SimOutput
+from .workload import ChipSpec, StepCost
+
+__all__ = [
+    "engine", "network", "refsim", "sweep", "workload",
+    "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
+    "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
+    "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
+    "paper_scenario", "JobMetrics", "ScenarioArrays", "SimOutput",
+    "ChipSpec", "StepCost",
+]
+
+from . import speculative, streaming  # noqa: E402  (beyond-paper layers)

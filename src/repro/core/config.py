@@ -1,0 +1,123 @@
+"""Scenario configuration for IOTSim-JAX.
+
+Mirrors the paper's independent variables (§5.2): datacentre configuration
+(Table I), VM configuration (Table II), VM number, job configuration
+(Table III), and MR combination.  A :class:`Scenario` bundles one complete
+simulation input; ``ScenarioBatch`` (see ``sweep.py``) stacks many of them
+into arrays for the vectorized engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Sequence
+
+
+# ---------------------------------------------------------------------------
+# Specs (paper §5.2, Tables I–III)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class VMSpec:
+    """One virtual machine (paper Table II).
+
+    ``mips`` is per-PE, as in CloudSim.  A 1-PE cloudlet running alone gets
+    ``mips``; with ``n`` concurrent cloudlets on the VM it gets
+    ``mips * min(1, pes / n)`` (CloudletSchedulerTimeShared fluid semantics,
+    see DESIGN.md §2.1).
+    """
+    name: str = "small"
+    mips: float = 250.0
+    pes: int = 1
+    ram_mb: int = 512
+    bw_mbps: float = 1000.0
+    image_size_mb: int = 10_000
+    cost_per_sec: float = 1.0
+
+
+@dataclass(frozen=True)
+class DatacenterSpec:
+    """Physical datacentre capacity (paper Table I)."""
+    pes: int = 500
+    ram_mb: int = 20_480
+    storage_mb: int = 1_000_000
+    bw_mbps: float = 1000.0
+    mips: float = 1000.0
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One MapReduce job (paper Table III + §5.2.5 MR combination).
+
+    ``length_mi`` is the total map work in MI; each of the ``n_maps`` map
+    tasks gets ``length_mi / n_maps``.  Each of the ``n_reduces`` reduce
+    tasks gets ``reduce_factor * length_mi / n_reduces`` (β, DESIGN.md §2.1).
+    """
+    name: str = "small"
+    length_mi: float = 362_880.0
+    data_mb: float = 200_000.0
+    n_maps: int = 1
+    n_reduces: int = 1
+    submit_time: float = 0.0
+    reduce_factor: float = 0.5
+    # Per-task multiplicative length noise (straggler modelling, beyond-paper).
+    # 1.0 == deterministic paper behaviour.
+    straggler_scale: float = 1.0
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """Stage-in + shuffle delay model (DESIGN.md §2.1).
+
+    ``DelayTime(job) = (kappa_in + kappa_shuffle) * S / ((M + 1) * BW)``;
+    kappa values are calibrated so the paper's Table IV is reproduced
+    exactly (kappa_in + kappa_shuffle = 21.25 for S=200000, BW=1000 gives
+    4250/(M+1)).
+    """
+    enabled: bool = True
+    bw_mbps: float = 1000.0
+    kappa_in: float = 17.0
+    kappa_shuffle: float = 4.25
+    cost_per_unit: float = 1.0
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One complete simulation input (one CloudSim "run")."""
+    vms: Sequence[VMSpec] = field(default_factory=lambda: (VM_SMALL,) * 3)
+    jobs: Sequence[JobSpec] = field(default_factory=lambda: (JOB_SMALL,))
+    datacenter: DatacenterSpec = field(default_factory=DatacenterSpec)
+    network: NetworkSpec = field(default_factory=NetworkSpec)
+
+    def total_tasks(self) -> int:
+        return sum(j.n_maps + j.n_reduces for j in self.jobs)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paper presets
+# ---------------------------------------------------------------------------
+
+VM_SMALL = VMSpec("small", mips=250.0, pes=1, ram_mb=512,
+                  image_size_mb=10_000, cost_per_sec=1.0)
+VM_MEDIUM = VMSpec("medium", mips=500.0, pes=2, ram_mb=1024,
+                   image_size_mb=20_000, cost_per_sec=2.0)
+VM_LARGE = VMSpec("large", mips=1000.0, pes=4, ram_mb=2048,
+                  image_size_mb=40_000, cost_per_sec=4.0)
+VM_TYPES = {"small": VM_SMALL, "medium": VM_MEDIUM, "large": VM_LARGE}
+
+JOB_SMALL = JobSpec("small", length_mi=362_880.0, data_mb=200_000.0)
+JOB_MEDIUM = JobSpec("medium", length_mi=725_760.0, data_mb=400_000.0)
+JOB_BIG = JobSpec("big", length_mi=1_451_520.0, data_mb=800_000.0)
+JOB_TYPES = {"small": JOB_SMALL, "medium": JOB_MEDIUM, "big": JOB_BIG}
+
+
+def paper_scenario(*, job: str = "small", vm: str = "small", n_vms: int = 3,
+                   n_maps: int = 1, n_reduces: int = 1,
+                   network_delay: bool = True) -> Scenario:
+    """The paper's §5 experimental cell: one job, homogeneous VMs."""
+    j = dataclasses.replace(JOB_TYPES[job], n_maps=n_maps, n_reduces=n_reduces)
+    return Scenario(vms=(VM_TYPES[vm],) * n_vms, jobs=(j,),
+                    network=NetworkSpec(enabled=network_delay))

@@ -1,0 +1,318 @@
+"""Vectorized discrete-event engine (the TPU-native IOTSim core).
+
+The sequential CloudSim event loop (``refsim.py``) is re-expressed as a
+fixed-shape state machine advanced by ``jax.lax.while_loop``: each iteration
+processes one *event epoch* — it advances the processor-sharing fluid state
+to the earliest next completion/arrival and fires every event at that
+instant.  Rates only change at events, so the fluid dynamics are exact (this
+is not time-stepping).
+
+Because every per-scenario state is a fixed-shape array bundle
+(:class:`ScenarioArrays`), the whole simulation is ``vmap``-able over
+scenarios and ``pjit``-able over a pod mesh — one lowering simulates millions
+of IOTSim scenarios in parallel (see ``sweep.py``).  This is the
+hardware-adaptation of the paper's sequential Java architecture (DESIGN.md
+§2).
+
+Semantics are tested to match ``refsim.py`` exactly
+(``tests/test_engine_vs_refsim.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Scenario
+
+_BIG = 1e30          # stand-in for +inf that survives arithmetic
+_TIME_EPS = 1e-6     # relative tie window for simultaneous events
+
+
+# ---------------------------------------------------------------------------
+# Array-of-structs scenario encoding
+# ---------------------------------------------------------------------------
+
+class ScenarioArrays(NamedTuple):
+    """One scenario as fixed-shape arrays (all leaves vmappable).
+
+    Shapes: T = padded task count, J = padded job count, V = padded VM count.
+    Task structure (which job, map/reduce, VM binding) is *data*, so sweeps
+    may vary MR combination, job sizes, VM speeds … under ``vmap`` without
+    re-tracing.
+    """
+    # tasks
+    task_job: jax.Array        # i32[T] job index
+    task_is_reduce: jax.Array  # bool[T]
+    task_vm: jax.Array         # i32[T] round-robin VM binding
+    task_valid: jax.Array      # bool[T]
+    task_mult: jax.Array       # f32[T] straggler length multiplier
+    # jobs
+    job_length: jax.Array      # f32[J] MI
+    job_data: jax.Array        # f32[J] MB
+    job_n_maps: jax.Array      # i32[J]
+    job_n_reduces: jax.Array   # i32[J]
+    job_submit: jax.Array      # f32[J]
+    job_reduce_factor: jax.Array  # f32[J]
+    job_valid: jax.Array       # bool[J]
+    # vms
+    vm_mips: jax.Array         # f32[V]
+    vm_pes: jax.Array          # f32[V]
+    vm_cost: jax.Array         # f32[V]
+    vm_valid: jax.Array        # bool[V]
+    # network (scalars)
+    net_enabled: jax.Array     # f32 (0/1)
+    net_bw: jax.Array          # f32
+    kappa_in: jax.Array        # f32
+    kappa_shuffle: jax.Array   # f32
+    net_cost_per_unit: jax.Array  # f32
+
+
+class SimOutput(NamedTuple):
+    """Raw per-task schedule + bookkeeping, all f32/i32 arrays."""
+    start: jax.Array     # f32[T]
+    finish: jax.Array    # f32[T]
+    ready: jax.Array     # f32[T]
+    exec_time: jax.Array  # f32[T]
+    n_epochs: jax.Array  # i32 — event epochs executed (bench metric)
+    finish_time: jax.Array  # f32 — last completion
+
+
+class JobMetrics(NamedTuple):
+    """Paper §5.3 dependent variables, per job (padded J)."""
+    avg_exec: jax.Array
+    max_exec: jax.Array
+    min_exec: jax.Array
+    makespan: jax.Array
+    delay_time: jax.Array
+    vm_cost: jax.Array
+    network_cost: jax.Array
+    map_avg_exec: jax.Array
+    reduce_avg_exec: jax.Array
+
+
+def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
+                  pad_jobs: int | None = None,
+                  pad_vms: int | None = None) -> ScenarioArrays:
+    """Encode one :class:`Scenario` into padded arrays (numpy, host-side)."""
+    T = pad_tasks or sc.total_tasks()
+    J = pad_jobs or len(sc.jobs)
+    V = pad_vms or len(sc.vms)
+    assert T >= sc.total_tasks() and J >= len(sc.jobs) and V >= len(sc.vms)
+
+    t_job = np.zeros(T, np.int32)
+    t_red = np.zeros(T, bool)
+    t_vm = np.zeros(T, np.int32)
+    t_val = np.zeros(T, bool)
+    k = 0
+    rr = 0
+    for ji, job in enumerate(sc.jobs):
+        for phase, n in ((False, job.n_maps), (True, job.n_reduces)):
+            for _ in range(n):
+                t_job[k], t_red[k], t_val[k] = ji, phase, True
+                t_vm[k] = rr % len(sc.vms)
+                rr += 1
+                k += 1
+
+    f32 = np.float32
+    return ScenarioArrays(
+        task_job=t_job, task_is_reduce=t_red, task_vm=t_vm, task_valid=t_val,
+        task_mult=np.ones(T, f32),
+        job_length=_padf([j.length_mi for j in sc.jobs], J),
+        job_data=_padf([j.data_mb for j in sc.jobs], J),
+        job_n_maps=_padi([j.n_maps for j in sc.jobs], J),
+        job_n_reduces=_padi([j.n_reduces for j in sc.jobs], J),
+        job_submit=_padf([j.submit_time for j in sc.jobs], J),
+        job_reduce_factor=_padf([j.reduce_factor for j in sc.jobs], J),
+        job_valid=np.arange(J) < len(sc.jobs),
+        vm_mips=_padf([v.mips for v in sc.vms], V, fill=1.0),
+        vm_pes=_padf([v.pes for v in sc.vms], V, fill=1.0),
+        vm_cost=_padf([v.cost_per_sec for v in sc.vms], V),
+        vm_valid=np.arange(V) < len(sc.vms),
+        net_enabled=f32(1.0 if sc.network.enabled else 0.0),
+        net_bw=f32(sc.network.bw_mbps),
+        kappa_in=f32(sc.network.kappa_in),
+        kappa_shuffle=f32(sc.network.kappa_shuffle),
+        net_cost_per_unit=f32(sc.network.cost_per_unit),
+    )
+
+
+def _padf(xs, n, fill=0.0):
+    out = np.full(n, fill, np.float32)
+    out[:len(xs)] = xs
+    return out
+
+
+def _padi(xs, n):
+    out = np.ones(n, np.int32)
+    out[:len(xs)] = xs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
+    """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly."""
+    T = sc.task_job.shape[0]
+    J = sc.job_length.shape[0]
+    V = sc.vm_mips.shape[0]
+
+    # --- derived per-task/per-job quantities (traced: sweepable) ----------
+    n_maps_f = sc.job_n_maps.astype(jnp.float32)
+    n_red_f = sc.job_n_reduces.astype(jnp.float32)
+    stage_in = (sc.net_enabled * sc.kappa_in * sc.job_data
+                / ((n_maps_f + 1.0) * sc.net_bw))
+    shuffle = (sc.net_enabled * sc.kappa_shuffle * sc.job_data
+               / ((n_maps_f + 1.0) * sc.net_bw))
+    map_len = sc.job_length / n_maps_f
+    red_len = sc.job_reduce_factor * sc.job_length / n_red_f
+    task_len = jnp.where(sc.task_is_reduce, red_len[sc.task_job],
+                         map_len[sc.task_job]) * sc.task_mult
+    task_len = jnp.where(sc.task_valid, task_len, 0.0)
+
+    # Maps ready at submit + stage-in; reduces unknown until maps complete.
+    ready0 = jnp.where(
+        sc.task_valid & ~sc.task_is_reduce,
+        (sc.job_submit + stage_in)[sc.task_job], _BIG)
+
+    is_map = sc.task_valid & ~sc.task_is_reduce
+    maps_left0 = jax.ops.segment_sum(is_map.astype(jnp.int32), sc.task_job,
+                                     num_segments=J)
+
+    class Carry(NamedTuple):
+        time: jax.Array
+        rem: jax.Array        # f32[T] remaining MI
+        running: jax.Array    # bool[T]
+        start: jax.Array      # f32[T]
+        finish: jax.Array     # f32[T]
+        ready: jax.Array      # f32[T]
+        maps_left: jax.Array  # i32[J]
+        epoch: jax.Array      # i32
+
+    c0 = Carry(time=jnp.float32(0.0), rem=task_len,
+               running=jnp.zeros(T, bool),
+               start=jnp.full(T, _BIG, jnp.float32),
+               finish=jnp.full(T, _BIG, jnp.float32),
+               ready=ready0, maps_left=maps_left0,
+               epoch=jnp.int32(0))
+
+    def rates(running):
+        n_on_vm = jax.ops.segment_sum(running.astype(jnp.float32),
+                                      sc.task_vm, num_segments=V)
+        share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
+                                         / jnp.maximum(n_on_vm, 1.0))
+        return jnp.where(running, share[sc.task_vm], 0.0)
+
+    def cond(c: Carry):
+        unfinished = sc.task_valid & (c.finish >= _BIG / 2)
+        return jnp.any(unfinished) & (c.epoch < 4 * T + 8)
+
+    def body(c: Carry):
+        r = rates(c.running)
+        eta = jnp.where(c.running, c.time + c.rem / jnp.maximum(r, 1e-30),
+                        _BIG)
+        not_started = sc.task_valid & ~c.running & (c.finish >= _BIG / 2) \
+            & (c.start >= _BIG / 2)
+        arr = jnp.where(not_started, c.ready, _BIG)
+        t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
+        live = t_next < _BIG / 2
+        tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
+
+        # advance fluid state
+        rem = jnp.where(c.running, c.rem - (t_next - c.time) * r, c.rem)
+
+        # completions
+        done_now = live & c.running & (eta <= t_next + tie)
+        finish = jnp.where(done_now, t_next, c.finish)
+        running = c.running & ~done_now
+        rem = jnp.where(done_now, 0.0, rem)
+
+        # job map-phase completion -> release reduces after shuffle delay
+        maps_done_now = jax.ops.segment_sum(
+            (done_now & ~sc.task_is_reduce).astype(jnp.int32),
+            sc.task_job, num_segments=J)
+        maps_left = c.maps_left - maps_done_now
+        phase_done = (maps_left == 0) & (c.maps_left > 0)
+        red_ready = jnp.where(phase_done, t_next + shuffle, _BIG)
+        ready = jnp.where(
+            sc.task_is_reduce & phase_done[sc.task_job],
+            red_ready[sc.task_job], c.ready)
+
+        # arrivals (time-shared: start immediately when ready)
+        start_now = live & not_started & (c.ready <= t_next + tie)
+        start = jnp.where(start_now, t_next, c.start)
+        running = running | start_now
+
+        time = jnp.where(live, t_next, c.time)
+        return Carry(time, rem, running, start, finish, ready,
+                     maps_left, c.epoch + 1)
+
+    cf = jax.lax.while_loop(cond, body, c0)
+    exec_time = jnp.where(sc.task_valid, cf.finish - cf.start, 0.0)
+    return SimOutput(start=cf.start, finish=cf.finish, ready=cf.ready,
+                     exec_time=exec_time, n_epochs=cf.epoch,
+                     finish_time=jnp.max(jnp.where(sc.task_valid, cf.finish,
+                                                   0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Dependent variables (paper §5.3) as JAX ops
+# ---------------------------------------------------------------------------
+
+def job_metrics(sc: ScenarioArrays, out: SimOutput) -> JobMetrics:
+    J = sc.job_length.shape[0]
+    is_map = sc.task_valid & ~sc.task_is_reduce
+    is_red = sc.task_valid & sc.task_is_reduce
+
+    def seg_sum(x, m):
+        return jax.ops.segment_sum(jnp.where(m, x, 0.0), sc.task_job,
+                                   num_segments=J)
+
+    def seg_max(x, m):
+        return jax.ops.segment_max(jnp.where(m, x, -_BIG), sc.task_job,
+                                   num_segments=J)
+
+    def seg_min(x, m):
+        return -seg_max(-x, m)
+
+    nm = jnp.maximum(seg_sum(jnp.ones_like(out.exec_time), is_map), 1.0)
+    nr = jnp.maximum(seg_sum(jnp.ones_like(out.exec_time), is_red), 1.0)
+    m_avg = seg_sum(out.exec_time, is_map) / nm
+    r_avg = seg_sum(out.exec_time, is_red) / nr
+    m_max, r_max = seg_max(out.exec_time, is_map), seg_max(out.exec_time, is_red)
+    m_min, r_min = seg_min(out.exec_time, is_map), seg_min(out.exec_time, is_red)
+
+    last_map_fin = seg_max(out.finish, is_map)
+    last_red_fin = seg_max(out.finish, is_red)
+    last_map_st = seg_max(out.start, is_map)
+    last_red_st = seg_max(out.start, is_red)
+    delay = last_map_st + last_red_st - last_map_fin
+
+    cost_rate = sc.vm_cost[sc.task_vm]
+    vm_cost = seg_sum(out.exec_time * cost_rate, is_map | is_red)
+
+    return JobMetrics(
+        avg_exec=m_avg + r_avg,
+        max_exec=m_max + r_max,
+        min_exec=m_min + r_min,
+        makespan=last_red_fin - sc.job_submit,
+        delay_time=delay,
+        vm_cost=vm_cost,
+        network_cost=delay * sc.net_cost_per_unit * sc.net_enabled,
+        map_avg_exec=m_avg,
+        reduce_avg_exec=r_avg,
+    )
+
+
+@jax.jit
+def _simulate_jit(arrs: ScenarioArrays) -> JobMetrics:
+    return job_metrics(arrs, simulate_arrays(arrs))
+
+
+def simulate(sc: Scenario) -> JobMetrics:
+    """Convenience single-scenario entry point (returns device arrays)."""
+    return _simulate_jit(from_scenario(sc))

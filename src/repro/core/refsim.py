@@ -1,0 +1,273 @@
+"""Sequential discrete-event reference simulator (the paper-faithful oracle).
+
+This module mirrors IOTSim's entity structure (paper Figures 5–7) directly:
+
+* :class:`IoTSimBroker`  — accepts multiple cloudlet lists and executes them
+  *sequentially* (reduce list of a job only after its map list), the paper's
+  §4.5 extension to CloudSim's single-list broker;
+* :class:`JobTracker`    — splits a job into ``MapCloudlet``/``ReduceCloudlet``
+  tasks, tracks map completion, triggers the shuffle and the reduce launch;
+* :class:`TaskTracker`   — binds tasks to VMs (round-robin, as CloudSim's
+  DatacenterBroker does) and reports status;
+* the datacentre executes cloudlets under **time-shared** scheduling
+  (CloudletSchedulerTimeShared): ``n`` concurrent 1-PE cloudlets on a VM with
+  ``pes`` PEs at ``mips`` each run at ``mips * min(1, pes / n)``.
+
+The event loop is a classic heapq calendar; processor-sharing completions are
+computed lazily between calendar events (rates only change at arrivals and
+completions, so the fluid dynamics are exact, not time-stepped).
+
+This implementation is deliberately *sequential and simple*: it is the oracle
+the vectorized JAX engine (``engine.py``) is tested against, and the
+"paper-faithful baseline" row of EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from . import network
+from .config import Scenario
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Task records
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Task:
+    """One MapCloudlet or ReduceCloudlet instance."""
+    job: int
+    index: int                 # index within its job's phase
+    is_reduce: bool
+    length_mi: float           # work in MI
+    vm: int = -1               # bound VM (round-robin at creation)
+    ready: float = math.inf    # time the task may start (stage-in/shuffle done)
+    start: float = math.inf
+    finish: float = math.inf
+    remaining: float = 0.0     # MI left (engine state)
+
+    @property
+    def exec_time(self) -> float:
+        return self.finish - self.start
+
+
+@dataclass
+class JobResult:
+    """Per-job dependent variables (paper §5.3).
+
+    ``map_avg_exec`` / ``reduce_avg_exec`` split the paper's Average
+    Execution Time into its two addends: the paper's Fig 9 percentages
+    (≈40%/≈50%) are reproduced by the *map-phase* average (see
+    EXPERIMENTS.md §Paper-validation).
+    """
+    avg_exec: float
+    max_exec: float
+    min_exec: float
+    makespan: float
+    delay_time: float
+    vm_cost: float
+    network_cost: float
+    map_avg_exec: float = 0.0
+    reduce_avg_exec: float = 0.0
+
+
+@dataclass
+class SimResult:
+    tasks: list[Task]
+    jobs: list[JobResult]
+    finish_time: float
+    n_events: int = 0
+
+    def job(self, j: int = 0) -> JobResult:
+        return self.jobs[j]
+
+
+# ---------------------------------------------------------------------------
+# Entities
+# ---------------------------------------------------------------------------
+
+class TaskTracker:
+    """Binds tasks to VMs round-robin and tracks per-VM active sets."""
+
+    def __init__(self, n_vms: int):
+        self.n_vms = n_vms
+        self._rr = 0
+        self.active: list[set[int]] = [set() for _ in range(n_vms)]
+
+    def bind(self, task: Task) -> None:
+        task.vm = self._rr % self.n_vms
+        self._rr += 1
+
+    def launch(self, tid: int, task: Task) -> None:
+        self.active[task.vm].add(tid)
+
+    def complete(self, tid: int, task: Task) -> None:
+        self.active[task.vm].discard(tid)
+
+
+class JobTracker:
+    """Splits jobs, watches map completion, triggers shuffle + reduce."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self.maps_left = [j.n_maps for j in scenario.jobs]
+        self.tasks: list[Task] = []
+        self.map_ids: list[list[int]] = []
+        self.reduce_ids: list[list[int]] = []
+        for ji, job in enumerate(scenario.jobs):
+            m_ids, r_ids = [], []
+            for mi in range(job.n_maps):
+                m_ids.append(len(self.tasks))
+                self.tasks.append(Task(ji, mi, False,
+                                       job.length_mi / job.n_maps))
+            for ri in range(job.n_reduces):
+                r_ids.append(len(self.tasks))
+                self.tasks.append(Task(
+                    ji, ri, True,
+                    job.reduce_factor * job.length_mi / job.n_reduces))
+            self.map_ids.append(m_ids)
+            self.reduce_ids.append(r_ids)
+
+    def map_finished(self, task: Task, now: float) -> float | None:
+        """Returns the reduce-ready time if this was the job's last map."""
+        self.maps_left[task.job] -= 1
+        if self.maps_left[task.job] == 0:
+            job = self.scenario.jobs[task.job]
+            return now + network.shuffle_delay(job, self.scenario.network)
+        return None
+
+
+class IoTSimBroker:
+    """Drives the simulation: sequential cloudlet lists per job (paper §4.5)."""
+
+    def __init__(self, scenario: Scenario,
+                 length_multipliers: list[float] | None = None):
+        self.scenario = scenario
+        self.jt = JobTracker(scenario)
+        self.tt = TaskTracker(len(scenario.vms))
+        # Bind every task round-robin in submission order: per job, the map
+        # list is submitted first, then (later, after maps) the reduce list;
+        # CloudSim's broker keeps one rolling VM pointer across submissions.
+        for t in self.jt.tasks:
+            self.tt.bind(t)
+        if length_multipliers is not None:
+            assert len(length_multipliers) == len(self.jt.tasks)
+            for t, m in zip(self.jt.tasks, length_multipliers):
+                t.length_mi *= m
+
+    # ---- event-driven run ------------------------------------------------
+
+    def run(self) -> SimResult:
+        sc = self.scenario
+        tasks = self.jt.tasks
+        vms = sc.vms
+        calendar: list[tuple[float, int, int]] = []   # (time, seq, task_id)
+        seq = itertools.count()
+
+        # Map tasks become ready at submit + stage-in delay.
+        for ji, job in enumerate(sc.jobs):
+            ready = job.submit_time + network.stage_in_delay(job, sc.network)
+            for tid in self.jt.map_ids[ji]:
+                tasks[tid].ready = ready
+                heapq.heappush(calendar, (ready, next(seq), tid))
+
+        for t in tasks:
+            t.remaining = t.length_mi
+
+        running: set[int] = set()
+        now = 0.0
+        n_events = 0
+
+        def rate(tid: int) -> float:
+            t = tasks[tid]
+            n = len(self.tt.active[t.vm])
+            vm = vms[t.vm]
+            return vm.mips * min(1.0, vm.pes / n)
+
+        while calendar or running:
+            n_events += 1
+            # Next completion under current processor-sharing rates.
+            t_comp, comp_ids = math.inf, []
+            for tid in running:
+                eta = now + tasks[tid].remaining / rate(tid)
+                if eta < t_comp - _EPS:
+                    t_comp, comp_ids = eta, [tid]
+                elif eta <= t_comp + _EPS:
+                    comp_ids.append(tid)
+            t_evt = calendar[0][0] if calendar else math.inf
+            t_next = min(t_comp, t_evt)
+
+            # Advance fluid state.
+            for tid in running:
+                tasks[tid].remaining -= (t_next - now) * rate(tid)
+            now = t_next
+
+            if t_comp <= t_evt:            # completions fire first
+                for tid in comp_ids:
+                    task = tasks[tid]
+                    task.remaining = 0.0
+                    task.finish = now
+                    running.discard(tid)
+                    self.tt.complete(tid, task)
+                    if not task.is_reduce:
+                        r_ready = self.jt.map_finished(task, now)
+                        if r_ready is not None:
+                            for rid in self.jt.reduce_ids[task.job]:
+                                tasks[rid].ready = r_ready
+                                heapq.heappush(calendar,
+                                               (r_ready, next(seq), rid))
+            else:                          # arrivals: task(s) become ready
+                while calendar and calendar[0][0] <= now + _EPS:
+                    _, _, tid = heapq.heappop(calendar)
+                    task = tasks[tid]
+                    task.start = now      # time-shared: starts immediately
+                    self.tt.launch(tid, task)
+                    running.add(tid)
+
+        return SimResult(tasks=tasks, jobs=self._job_metrics(tasks),
+                         finish_time=now, n_events=n_events)
+
+    # ---- dependent variables (paper §5.3) ---------------------------------
+
+    def _job_metrics(self, tasks: list[Task]) -> list[JobResult]:
+        sc = self.scenario
+        out = []
+        for ji, job in enumerate(sc.jobs):
+            maps = [tasks[i] for i in self.jt.map_ids[ji]]
+            reds = [tasks[i] for i in self.jt.reduce_ids[ji]]
+            met = (sum(t.exec_time for t in maps) / len(maps),
+                   max(t.exec_time for t in maps),
+                   min(t.exec_time for t in maps))
+            ret = (sum(t.exec_time for t in reds) / len(reds),
+                   max(t.exec_time for t in reds),
+                   min(t.exec_time for t in reds))
+            last_map = max(maps, key=lambda t: t.finish)
+            last_red = max(reds, key=lambda t: t.finish)
+            delay = (max(t.start for t in maps) + max(t.start for t in reds)
+                     - last_map.finish)
+            vm_cost = sum(t.exec_time * sc.vms[t.vm].cost_per_sec
+                          for t in maps + reds)
+            out.append(JobResult(
+                avg_exec=met[0] + ret[0],
+                max_exec=met[1] + ret[1],
+                min_exec=met[2] + ret[2],
+                makespan=last_red.finish - job.submit_time,
+                delay_time=delay,
+                vm_cost=vm_cost,
+                network_cost=delay * sc.network.cost_per_unit
+                if sc.network.enabled else 0.0,
+                map_avg_exec=met[0],
+                reduce_avg_exec=ret[0],
+            ))
+        return out
+
+
+def simulate(scenario: Scenario,
+             length_multipliers: list[float] | None = None) -> SimResult:
+    """Run one scenario through the sequential reference simulator."""
+    return IoTSimBroker(scenario, length_multipliers).run()

@@ -1,0 +1,158 @@
+"""Massive scenario sweeps: vmap over scenarios, pjit over the pod mesh.
+
+CloudSim/IOTSim runs one scenario per JVM process; every figure in the paper
+is a parameter sweep re-run by hand.  Here a sweep is one ``vmap`` of the
+vectorized engine over a stacked :class:`ScenarioArrays` batch, sharded over
+every mesh axis — a pod simulates millions of datacentre scenarios in one
+``pjit`` call.  This is the headline TPU adaptation of the paper's technique
+(DESIGN.md §2) and the subject of ``benchmarks/sweep_throughput.py``.
+
+Two batch builders:
+
+* :func:`stack_scenarios` — host-side: encode arbitrary ``Scenario`` objects
+  (heterogeneous jobs/VMs) and stack with common padding;
+* :func:`encode_cell` / :func:`grid_arrays` — device-side: build the paper's
+  homogeneous experiment cells directly from scalar parameters, entirely in
+  jnp, so huge grids never materialize on the host.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Scenario
+from .engine import (JobMetrics, ScenarioArrays, from_scenario, job_metrics,
+                     simulate_arrays)
+
+
+# ---------------------------------------------------------------------------
+# Host-side batch builder
+# ---------------------------------------------------------------------------
+
+def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioArrays:
+    """Encode + stack scenarios with shared padding (leading batch dim)."""
+    T = max(s.total_tasks() for s in scenarios)
+    J = max(len(s.jobs) for s in scenarios)
+    V = max(len(s.vms) for s in scenarios)
+    encoded = [from_scenario(s, pad_tasks=T, pad_jobs=J, pad_vms=V)
+               for s in scenarios]
+    return ScenarioArrays(*(np.stack([np.asarray(getattr(e, f))
+                                      for e in encoded])
+                            for f in ScenarioArrays._fields))
+
+
+# ---------------------------------------------------------------------------
+# Device-side cell encoder (paper §5 experiment cells)
+# ---------------------------------------------------------------------------
+
+def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
+                job_length, job_data, *, pad_tasks: int, pad_vms: int,
+                reduce_factor=0.5, net_enabled=1.0, net_bw=1000.0,
+                kappa_in=17.0, kappa_shuffle=4.25, net_cost_per_unit=1.0,
+                task_mult=None) -> ScenarioArrays:
+    """One homogeneous paper cell as traced arrays.
+
+    All scalar args may be traced — ``vmap`` this over parameter grids.
+    ``pad_tasks``/``pad_vms`` are static paddings (>= max M+R / max V).
+    """
+    f32 = partial(jnp.asarray, dtype=jnp.float32)
+    i32 = partial(jnp.asarray, dtype=jnp.int32)
+    t = jnp.arange(pad_tasks)
+    n_maps, n_reduces, n_vms = i32(n_maps), i32(n_reduces), i32(n_vms)
+    n_tasks = n_maps + n_reduces
+    is_red = t >= n_maps
+    valid = t < n_tasks
+    if task_mult is None:
+        task_mult = jnp.ones(pad_tasks, jnp.float32)
+    return ScenarioArrays(
+        task_job=jnp.zeros(pad_tasks, jnp.int32),
+        task_is_reduce=is_red,
+        task_vm=(t % jnp.maximum(n_vms, 1)).astype(jnp.int32),
+        task_valid=valid,
+        task_mult=task_mult,
+        job_length=f32([job_length])[0:1] * jnp.ones(1, jnp.float32),
+        job_data=f32(job_data)[None],
+        job_n_maps=n_maps[None],
+        job_n_reduces=n_reduces[None],
+        job_submit=jnp.zeros(1, jnp.float32),
+        job_reduce_factor=f32(reduce_factor)[None],
+        job_valid=jnp.ones(1, bool),
+        vm_mips=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_mips), 1.0),
+        vm_pes=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_pes), 1.0),
+        vm_cost=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_cost), 0.0),
+        vm_valid=jnp.arange(pad_vms) < n_vms,
+        net_enabled=f32(net_enabled), net_bw=f32(net_bw),
+        kappa_in=f32(kappa_in), kappa_shuffle=f32(kappa_shuffle),
+        net_cost_per_unit=f32(net_cost_per_unit),
+    )
+
+
+def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
+                pad_vms: int) -> ScenarioArrays:
+    """vmap :func:`encode_cell` over equal-length 1-D parameter arrays."""
+    names = list(params)
+    vals = [jnp.asarray(params[n]) for n in names]
+
+    def one(*xs):
+        return encode_cell(**dict(zip(names, xs)), pad_tasks=pad_tasks,
+                           pad_vms=pad_vms)
+
+    return jax.vmap(one)(*vals)
+
+
+# ---------------------------------------------------------------------------
+# Batched simulation entry points
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def simulate_batch(batch: ScenarioArrays) -> JobMetrics:
+    """vmap the engine + metrics over a leading scenario dim."""
+    def one(sc):
+        return job_metrics(sc, simulate_arrays(sc))
+    return jax.vmap(one)(batch)
+
+
+def simulate_batch_sharded(batch: ScenarioArrays,
+                           mesh: jax.sharding.Mesh) -> JobMetrics:
+    """The pod-scale path: scenarios sharded over every mesh axis.
+
+    The engine is embarrassingly parallel across scenarios, so the batch dim
+    is sharded over the flattened mesh; no collectives are emitted (verified
+    in the dry-run — this workload is the compute-roofline end of the
+    simulator story).
+    """
+    spec = jax.sharding.PartitionSpec(mesh.axis_names)
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+    fn = jax.jit(
+        lambda b: jax.vmap(lambda s: job_metrics(s, simulate_arrays(s)))(b),
+        in_shardings=(jax.tree.map(lambda _: sharding, batch),),
+        out_shardings=sharding)
+    return fn(batch)
+
+
+def paper_grid(m_range=range(1, 21), vm_numbers=(3,), vm_types=("small",),
+               job_types=("small",), network_delay=True) -> ScenarioArrays:
+    """Cartesian paper grid (Groups 1–4) as a device-side batch."""
+    from .config import JOB_TYPES, VM_TYPES
+    cells = [(m, v, VM_TYPES[vt], JOB_TYPES[jt])
+             for m in m_range for v in vm_numbers
+             for vt in vm_types for jt in job_types]
+    params = dict(
+        n_maps=np.array([c[0] for c in cells], np.int32),
+        n_reduces=np.ones(len(cells), np.int32),
+        n_vms=np.array([c[1] for c in cells], np.int32),
+        vm_mips=np.array([c[2].mips for c in cells], np.float32),
+        vm_pes=np.array([float(c[2].pes) for c in cells], np.float32),
+        vm_cost=np.array([c[2].cost_per_sec for c in cells], np.float32),
+        job_length=np.array([c[3].length_mi for c in cells], np.float32),
+        job_data=np.array([c[3].data_mb for c in cells], np.float32),
+        net_enabled=np.full(len(cells), 1.0 if network_delay else 0.0,
+                            np.float32),
+    )
+    pad_tasks = max(m_range) + 1
+    pad_vms = max(vm_numbers)
+    return grid_arrays(params, pad_tasks=pad_tasks, pad_vms=pad_vms)

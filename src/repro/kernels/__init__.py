@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+* flash_attention — tiled online-softmax GQA attention (causal/window)
+* rwkv6           — VMEM-resident WKV6 recurrence, time-block streamed
+* mr_sched        — batched IOTSim event loop (the paper's hot path)
+"""

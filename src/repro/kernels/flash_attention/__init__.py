@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ops import flash_attention

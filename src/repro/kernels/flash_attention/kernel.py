@@ -1,0 +1,119 @@
+"""Flash attention TPU kernel: tiled online-softmax with VMEM accumulators.
+
+Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the kv-block axis is
+minor (sequential on a TensorCore), so the (m, l, acc) accumulators live in
+VMEM scratch and persist across kv steps — the canonical TPU flash
+schedule.  GQA is handled in the k/v index maps (q-head h reads kv-head
+h // group); causal and sliding-window masking skip fully-masked kv blocks
+(``pl.when`` guards, so skipped blocks cost no MXU work).
+
+Block sizes default to (512, 512): q, k, v, acc tiles at head_dim 128 are
+512·128·(2+2+2+4) B ≈ 640 KiB — comfortably inside the ~16 MiB VMEM with
+double buffering.  All matmul dims are multiples of the 128-lane MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            bq: int, bk: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level visibility: any (t, s) with t >= s (causal) and
+    # t - s < window can be live in this tile
+    live = True
+    if causal:
+        live = jnp.asarray(q_start + bq - 1 >= k_start)
+    if window is not None:
+        live = jnp.logical_and(live,
+                               jnp.asarray(k_start + bk - 1
+                                           > q_start - window))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= qpos >= kpos
+        if window is not None:
+            ok &= qpos - kpos < window
+        s = jnp.where(ok, s, _NEG)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: int | None = None, block_q: int = 512,
+                         block_k: int = 512, interpret: bool = True):
+    """q: (B, Hq, S, Dh); k/v: (B, Hkv, T, Dh) -> (B, Hq, S, Dh)."""
+    B, Hq, S, Dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq, bk = min(block_q, S), min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+    scale = Dh ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, qi, ki, g=G: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, Dh),
+                         lambda b, h, qi, ki, g=G: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, Dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

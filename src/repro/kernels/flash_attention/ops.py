@@ -1,0 +1,33 @@
+"""Jit'd public wrapper: model-layout (B,S,H,Dh) <-> kernel layout, block
+sizing, and the interpret-on-CPU / compiled-on-TPU switch."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    """q: (B, S, Hq, Dh); k/v: (B, T, Hkv, Dh) — model layout."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    S, T = q.shape[1], k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    # shrink to divisors (assigned shapes are powers of two; this guards
+    # odd test shapes)
+    while S % bq:
+        bq //= 2
+    while T % bk:
+        bk //= 2
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        block_q=max(bq, 1), block_k=max(bk, 1), interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes S×T)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None):
+    """q: (B, Hq, S, Dh); k/v: (B, Hkv, T, Dh) -> (B, Hq, S, Dh)."""
+    B, Hq, S, Dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, Dh)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * Dh ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window is not None:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, S, Dh).astype(q.dtype)

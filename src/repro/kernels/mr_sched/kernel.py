@@ -1,0 +1,130 @@
+"""Batched MapReduce-schedule kernel: the IOTSim event loop on a TensorCore.
+
+One grid step simulates a *tile* of scenarios entirely in VMEM: the
+(tasks × scenarios) fluid state (remaining MI, readiness, processor-sharing
+rates) is advanced through a statically-bounded ``fori_loop`` of event
+epochs — every epoch fires at least one arrival or completion, so
+``2·T + 2`` epochs suffice for T tasks.  The XLA while-loop engine
+(``repro.core.engine``) round-trips this state through HBM every epoch;
+here a whole sweep tile stays resident, which is the same
+locality transformation flash attention applies to softmax state.
+
+Scope: one job per scenario (the paper's §5 experiment cells — exactly
+what ``repro.core.sweep.encode_cell`` produces), arbitrary M/R/VM mix.
+Semantics oracle: ``repro.core.engine.simulate_arrays`` (ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 1e30
+
+
+def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
+            shuffle_ref, vm_mips_ref, vm_pes_ref,
+            start_ref, finish_ref, *, T: int, V: int, n_epochs: int):
+    task_len = task_len_ref[...]                 # (tile, T) f32
+    task_vm = task_vm_ref[...]                   # (tile, T) i32
+    is_red = is_red_ref[...] != 0                # (tile, T)
+    valid = valid_ref[...] != 0
+    shuffle = shuffle_ref[...]                   # (tile, 1) f32
+    vm_mips = vm_mips_ref[...]                   # (tile, V)
+    vm_pes = vm_pes_ref[...]                     # (tile, V)
+    vm_onehot = (task_vm[..., None]
+                 == jax.lax.broadcasted_iota(jnp.int32,
+                                             (1, 1, V), 2))  # (tile,T,V)
+    vm_onehot = vm_onehot.astype(jnp.float32)
+
+    tile = task_len.shape[0]
+    state = (
+        jnp.zeros((tile,), jnp.float32),                 # time
+        task_len,                                        # rem
+        jnp.zeros((tile, T), jnp.bool_),                 # running
+        jnp.full((tile, T), _BIG, jnp.float32),          # start
+        jnp.full((tile, T), _BIG, jnp.float32),          # finish
+        ready0_ref[...],                                 # ready
+    )
+
+    def epoch(_, st):
+        time, rem, running, start, finish, ready = st
+        runf = running.astype(jnp.float32)
+        n_on_vm = jnp.einsum("stv,st->sv", vm_onehot, runf)
+        share = vm_mips * jnp.minimum(1.0, vm_pes
+                                      / jnp.maximum(n_on_vm, 1.0))
+        rate = jnp.einsum("stv,sv->st", vm_onehot, share) * runf
+        eta = jnp.where(running, time[:, None]
+                        + rem / jnp.maximum(rate, 1e-30), _BIG)
+        not_started = valid & ~running & (finish >= _BIG / 2) \
+            & (start >= _BIG / 2)
+        arr = jnp.where(not_started, ready, _BIG)
+        t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
+        live = t_next < _BIG / 2
+        tie = 1e-6 * jnp.maximum(t_next, 1.0)
+
+        dt = jnp.where(live, t_next - time, 0.0)
+        rem = jnp.where(running, rem - dt[:, None] * rate, rem)
+
+        done_now = live[:, None] & running & (eta <= (t_next + tie)[:, None])
+        finish = jnp.where(done_now, t_next[:, None], finish)
+        running = running & ~done_now
+        rem = jnp.where(done_now, 0.0, rem)
+
+        maps_left = jnp.sum((valid & ~is_red
+                             & (finish >= _BIG / 2)).astype(jnp.int32),
+                            axis=1)
+        maps_done_prev = jnp.sum((valid & ~is_red & done_now)
+                                 .astype(jnp.int32), axis=1)
+        phase_done = (maps_left == 0) & (maps_done_prev > 0)
+        ready = jnp.where(phase_done[:, None] & is_red,
+                          (t_next + shuffle[:, 0])[:, None], ready)
+
+        start_now = live[:, None] & not_started \
+            & (ready <= (t_next + tie)[:, None])
+        start = jnp.where(start_now, t_next[:, None], start)
+        running = running | start_now
+        time = jnp.where(live, t_next, time)
+        return (time, rem, running, start, finish, ready)
+
+    _, _, _, start, finish, _ = jax.lax.fori_loop(0, n_epochs, epoch, state)
+    start_ref[...] = start
+    finish_ref[...] = finish
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def mr_schedule(task_len, task_vm, ready0, is_red, valid, shuffle,
+                vm_mips, vm_pes, *, tile: int = 64,
+                interpret: bool = True):
+    """All args lead with the scenario dim N (padded to a tile multiple).
+
+    task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
+    shuffle: (N,1) f32; vm_mips/vm_pes: (N,V) f32.
+    Returns (start, finish): (N,T) f32.
+    """
+    N, T = task_len.shape
+    V = vm_mips.shape[1]
+    tile = min(tile, N)
+    while N % tile:
+        tile //= 2
+    grid = (N // tile,)
+
+    def row(i):
+        return (i, 0)
+
+    spec_t = pl.BlockSpec((tile, T), row)
+    spec_1 = pl.BlockSpec((tile, 1), row)
+    spec_v = pl.BlockSpec((tile, V), row)
+    out = pl.pallas_call(
+        functools.partial(_kernel, T=T, V=V, n_epochs=2 * T + 2),
+        grid=grid,
+        in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
+                  spec_v, spec_v],
+        out_specs=(spec_t, spec_t),
+        out_shape=(jax.ShapeDtypeStruct((N, T), jnp.float32),
+                   jax.ShapeDtypeStruct((N, T), jnp.float32)),
+        interpret=interpret,
+    )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes)
+    return out

@@ -1,0 +1,43 @@
+"""Wrapper: ScenarioArrays (J=1) -> kernel inputs -> (start, finish).
+
+The derived per-task quantities (task lengths, stage-in readiness,
+shuffle delays) are computed in plain jnp — cheap, O(N·T) — and the
+event-loop hot path runs in the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ScenarioArrays
+
+from .kernel import mr_schedule
+
+
+def schedule(batch: ScenarioArrays, *, tile: int = 64,
+             interpret: bool | None = None):
+    """batch: stacked single-job scenarios (leading dim N)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nm = batch.job_n_maps.astype(jnp.float32)[:, 0]        # (N,)
+    nr = batch.job_n_reduces.astype(jnp.float32)[:, 0]
+    stage_in = (batch.net_enabled * batch.kappa_in * batch.job_data[:, 0]
+                / ((nm + 1.0) * batch.net_bw))
+    shuffle = (batch.net_enabled * batch.kappa_shuffle
+               * batch.job_data[:, 0] / ((nm + 1.0) * batch.net_bw))
+    map_len = batch.job_length[:, 0] / nm
+    red_len = batch.job_reduce_factor[:, 0] * batch.job_length[:, 0] / nr
+    task_len = jnp.where(batch.task_is_reduce, red_len[:, None],
+                         map_len[:, None]) * batch.task_mult
+    task_len = jnp.where(batch.task_valid, task_len, 0.0)
+    ready0 = jnp.where(batch.task_valid & ~batch.task_is_reduce,
+                       (batch.job_submit[:, 0] + stage_in)[:, None], 1e30)
+    return mr_schedule(
+        task_len.astype(jnp.float32), batch.task_vm.astype(jnp.int32),
+        ready0.astype(jnp.float32),
+        batch.task_is_reduce.astype(jnp.int32),
+        batch.task_valid.astype(jnp.int32),
+        shuffle.astype(jnp.float32)[:, None],
+        batch.vm_mips.astype(jnp.float32),
+        batch.vm_pes.astype(jnp.float32),
+        tile=tile, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Oracle: the XLA while-loop engine (repro.core.engine)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import engine, sweep
+
+
+def schedule_ref(batch: "engine.ScenarioArrays"):
+    """Returns (start, finish) arrays for a stacked scenario batch."""
+    out = jax.vmap(engine.simulate_arrays)(batch)
+    return out.start, out.finish

@@ -1,0 +1,17 @@
+"""Jit'd wrapper: model layout (B,T,H,hs) <-> kernel layout (B,H,T,hs)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import wkv6_bhts
+
+
+def wkv6(r, k, v, w, u, *, block_t: int = 64,
+         interpret: bool | None = None):
+    """r/k/v/w: (B, T, H, hs) (model layout); u: (H, hs)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    y = wkv6_bhts(tr(r), tr(k), tr(v), tr(w), u, block_t=block_t,
+                  interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: sequential WKV6 scan (same math as repro.models.ssm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r/k/v/w: (B, H, T, hs); u: (H, hs) -> y: (B, H, T, hs)."""
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = (i.astype(jnp.float32) for i in inp)
+        kv = k_t[..., None] * v_t[..., None, :]           # (B,H,hs,hs)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + uf[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    B, H, T, hs = r.shape
+    s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  Do
+not set that flag anywhere global — smoke tests and benches see 1 device.
+
+Per cell this driver:
+
+1. builds abstract inputs (``configs.input_specs`` — ShapeDtypeStruct,
+   no allocation) and resolves shardings (``repro.sharding.rules``);
+2. lowers + compiles the cell's step function:
+     train_*   → loss + grad + AdamW update (params/opt donated),
+     prefill_* → prefill forward (logits + materialized KV/SSM state),
+     decode_*  → one-token serve_step against the full-length state;
+3. prints ``compiled.memory_analysis()`` (proves it fits) and
+   ``cost_analysis()`` (FLOPs/bytes for §Roofline), parses the optimized
+   HLO for collective traffic (``hlo_stats``);
+4. appends everything to a JSON results file (incremental: re-runs skip
+   completed cells) that ``benchmarks/roofline.py`` consumes.
+
+``--variants`` additionally lowers depth-reduced variants (1 period / 0
+periods) of each cell on the single-pod mesh: XLA counts a scanned layer
+body once, so §Roofline derives F(L) = F_full + (periods−1)·(F(1)−F(0)).
+
+Usage:
+  python -m repro.launch.dryrun --all --variants --out dryrun.json
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_model, loss_fn, model_axes
+from repro.models.model import decode_step, prefill
+from repro.models.stacks import _pattern_period
+from repro.sharding import rules
+from repro.train import optimizer
+
+
+# Perf toggles (see EXPERIMENTS.md §Perf). Baseline numbers in
+# dryrun_baseline.json were taken with everything False.
+PERF = {
+    "bf16_params": True,     # bf16 compute-params: halve weight-gather wire
+    "kv_seq_shard": True,    # flash-decoding cache layout
+    "serve_no_fsdp": True,   # serving weights not data-sharded
+    "fsdp2": False,          # train: pure-FSDP weights, no activation TP
+}
+
+
+def _cast_params(params):
+    if not PERF["bf16_params"]:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if p.dtype == jnp.float32 else p, params)
+
+
+def _serve_weight_rules(cfg, global_batch: int = 1 << 30):
+    """Serving weights: replicating over `data` kills the per-step weight
+    all-gathers — but only when it fits and amortizes.  Keep FSDP when
+    (a) the batch doesn't occupy the data axis (long_500k: streaming the
+    replicated weights per token costs more than gathering shards), or
+    (b) the arch is MoE (total expert params de-replicated over data are
+    what keeps 50-100B-total models inside 16 GiB; only top-k experts
+    activate per token, so gathers stay proportional to *active* use)."""
+    if not PERF["serve_no_fsdp"] or global_batch < 16 or cfg.moe is not None:
+        return rules.WEIGHT_RULES
+    r = dict(rules.WEIGHT_RULES)
+    r.pop("embed", None)     # no optimizer in serving: replicate over data
+    r.pop("embed2", None)
+    return r
+
+
+def _param_shardings(mesh, cfg, *, serve: bool = False,
+                     global_batch: int = 1 << 30):
+    sds = abstract_model(cfg)
+    if serve and PERF["bf16_params"]:
+        # serving keeps weights in bf16 (no optimizer): reading the f32
+        # master + converting per step costs 3x the HBM traffic
+        sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, sds)
+    rl = _serve_weight_rules(cfg, global_batch) if serve else (
+        rules.WEIGHT_RULES_FSDP2 if PERF["fsdp2"] else rules.WEIGHT_RULES)
+    return sds, rules.tree_shardings(mesh, model_axes(cfg), sds, rules=rl)
+
+
+
+
+
+def _batch_axes_for(mesh):
+    """Under FSDP2 the batch is data-parallel over every mesh axis."""
+    if PERF["fsdp2"]:
+        return tuple(mesh.axis_names)
+    return rules.batch_axes(mesh)
+
+
+def _batch_shardings(mesh, batch_sds):
+    ba = _batch_axes_for(mesh)
+
+    def spec(x):
+        if x.shape and x.shape[0] % _prod(mesh, ba) == 0:
+            return NamedSharding(mesh, PartitionSpec(ba))
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree.map(spec, batch_sds)
+
+
+def _prod(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def microbatches(cfg, spec, batch_shards: int = 16) -> int:
+    """Gradient-accumulation depth per train step (memory knob: jamba's
+    heterogeneous 8-block period holds the most live state).  Capped so
+    each microbatch stays divisible by the (pod x data) shard extent —
+    an indivisible microbatch would silently replicate activations."""
+    if spec.kind != "train":
+        return 1
+    if cfg.family == "hybrid":
+        n = 16
+    elif cfg.moe is not None:
+        n = 4
+    else:
+        n = 2
+    return max(1, min(n, spec.global_batch // batch_shards))
+
+
+def build_cell(cfg, shape_name: str, mesh):
+    """Returns (fn, args_sds, in_shardings, donate) for one cell."""
+    spec = configs.SHAPES[shape_name]
+    ins = configs.input_specs(cfg, shape_name)
+
+    if spec.kind == "train":
+        params_sds, psh = _param_shardings(mesh, cfg)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        osh = optimizer.OptState(
+            step=NamedSharding(mesh, PartitionSpec()),
+            m=jax.tree.map(lambda s: s, psh), v=jax.tree.map(lambda s: s, psh))
+        bsh = _batch_shardings(mesh, ins["batch"])
+        opt_cfg = optimizer.OptConfig(total_steps=10_000)
+        n_micro = microbatches(cfg, spec, _prod(mesh, _batch_axes_for(mesh)))
+        mb_ba = _batch_axes_for(mesh)
+
+        act_rules = rules.ACT_RULES_FSDP2 if PERF["fsdp2"] else None
+
+        def train_step(params, opt_state, batch):
+            # scanned gradient accumulation (MaxText-style): activation
+            # memory is bounded at one microbatch.  XLA counts the scan
+            # body once — §Roofline multiplies the measured terms by
+            # n_micro (the optimizer outside is negligible).
+            with rules.mesh_ctx(mesh, act_rules):
+                mbs = jax.tree.map(
+                    lambda a: a.reshape(n_micro, a.shape[0] // n_micro,
+                                        *a.shape[1:]), batch)
+                mbs = jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(
+                        a, NamedSharding(mesh, PartitionSpec(
+                            None, mb_ba, *[None] * (a.ndim - 2)))), mbs)
+
+                params_c = _cast_params(params)
+
+                def micro_step(carry, mb):
+                    loss_acc, grads_acc = carry
+                    li, gi = jax.value_and_grad(
+                        lambda p: loss_fn(p, cfg, mb,
+                                          attn_impl="chunked"))(params_c)
+                    grads_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32),
+                        grads_acc, gi)
+                    return (loss_acc + li, grads_acc), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    micro_step, (jnp.float32(0.0), zeros), mbs)
+                scale = 1.0 / n_micro
+                grads = jax.tree.map(lambda g: g * scale, grads)
+                params, opt_state, _ = optimizer.update(
+                    opt_cfg, grads, opt_state, params)
+            return params, opt_state, loss * scale
+
+        return (train_step, (params_sds, opt_sds, ins["batch"]),
+                (psh, osh, bsh), (0, 1))
+
+    if spec.kind == "prefill":
+        params_sds, psh = _param_shardings(mesh, cfg, serve=True,
+                                           global_batch=spec.global_batch)
+        bsh = _batch_shardings(mesh, ins["inputs"])
+        cache_len = configs.decode_cache_len(cfg, spec.seq_len)
+
+        def prefill_step(params, inputs):
+            with rules.mesh_ctx(mesh):
+                return prefill(_cast_params(params), cfg, inputs,
+                               cache_len, attn_impl="chunked")
+
+        return prefill_step, (params_sds, ins["inputs"]), (psh, bsh), ()
+
+    # decode
+    params_sds, psh = _param_shardings(mesh, cfg, serve=True,
+                                       global_batch=spec.global_batch)
+    st_sds = ins["state"]
+    st_rules = rules.STATE_RULES if PERF["kv_seq_shard"] else rules.ACT_RULES
+    st_sh = rules.tree_shardings(mesh, rules.state_axes(st_sds), st_sds,
+                                 rules=st_rules)
+    tok_sh = _batch_shardings(mesh, ins["tokens"])
+    t_sh = NamedSharding(mesh, PartitionSpec())
+
+    def serve_step(params, tokens, state, t):
+        with rules.mesh_ctx(mesh):
+            return decode_step(_cast_params(params), cfg, tokens, state, t)
+
+    return (serve_step,
+            (params_sds, ins["tokens"], st_sds, ins["t"]),
+            (psh, tok_sh, st_sh, t_sh), (2,))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             cfg_override=None, tag: str = "") -> dict:
+    cfg = cfg_override or configs.get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, donate = build_cell(cfg, shape_name, mesh)
+    t0 = time.perf_counter()
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = hlo_stats.collective_stats(txt)
+    period = _pattern_period(cfg) if cfg.n_layers else []
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag,
+        "n_layers": cfg.n_layers,
+        "period_len": len(period) or 1,
+        "n_periods": (cfg.n_layers // len(period)) if period else 0,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collectives": colls,
+        **hlo_stats.totals(colls),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    return rec
+
+
+def depth_variants(cfg):
+    """(tag, cfg) for the roofline depth correction: 1 period and 0."""
+    period = len(_pattern_period(cfg))
+    return [("L1", cfg.replace(n_layers=period)),
+            ("L0", cfg.replace(n_layers=0))]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variants", action="store_true",
+                    help="also lower 1-period/0-period variants (roofline)")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = (
+        configs.all_cells() if args.all else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    done: dict[str, dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            done = json.load(f)
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            jobs = [("full", None)]
+            if args.variants and not mp:
+                jobs += [(t, c) for t, c in
+                         depth_variants(configs.get(arch))]
+            for tag, cfg_over in jobs:
+                key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}|{tag}"
+                if key in done:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   cfg_override=cfg_over, tag=tag)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    traceback.print_exc()
+                    failures.append((key, str(e)))
+                    continue
+                if not args.quiet:
+                    print(f"  flops={rec['flops']:.3e} "
+                          f"bytes={rec['bytes_accessed']:.3e} "
+                          f"coll_wire={rec['collective_wire_bytes']:.3e} "
+                          f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                          f"compile={rec['compile_s']}s", flush=True)
+                done[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(done, f, indent=1)
+
+    print(f"[dryrun] completed {len(done)} records -> {args.out}")
+    if failures:
+        print("[dryrun] FAILURES:")
+        for k, e in failures:
+            print("  ", k, e)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Post-compilation HLO introspection: collective inventory + byte counts.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+optimized HLO text: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction,
+summing *operand* bytes (the assignment's definition) and also recording
+result bytes + replica-group size so the roofline can apply per-algorithm
+wire multipliers (ring all-reduce moves 2·(k−1)/k · bytes, etc.).
+
+Instructions inside ``while`` bodies (scan-over-layers) appear once; the
+roofline extractor corrects trip counts by depth-variant differencing
+(EXPERIMENTS.md §Roofline methodology).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\]")
+_COLL = re.compile(
+    r"=\s*(?:\(.*?\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op_kind: {"count", "operand_bytes", "result_bytes",
+    "wire_bytes"}} summed over all collective instructions."""
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+
+    out: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0, "result_bytes": 0,
+                 "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        cm = _COLL.search(line)
+        if not cm:
+            continue
+        kind = cm.group(1)
+        im = _INSTR.match(line)
+        result_b = _shape_bytes(im.group(2), im.group(3)) if im else 0
+        # operands: %names inside the first (...) after the opcode
+        args = line[cm.end():line.find(")", cm.end())]
+        operand_b = 0
+        for name in re.findall(r"%?([\w.\-]+)", args):
+            operand_b += sizes.get(name, 0)
+        k = _group_size(line)
+        rec = out[kind]
+        rec["count"] += 1
+        rec["operand_bytes"] += operand_b
+        rec["result_bytes"] += result_b
+        rec["wire_bytes"] += _wire_bytes(kind, operand_b, result_b, k)
+    return dict(out)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(kind: str, operand_b: int, result_b: int, k: int) -> float:
+    """Per-device wire traffic under ring/bidirectional algorithms."""
+    if kind == "collective-permute":     # point-to-point: no replica groups
+        return float(operand_b)
+    if k <= 1:
+        return 0.0
+    f = (k - 1) / k
+    if kind == "all-gather":
+        return f * result_b            # each device receives result minus own
+    if kind == "all-reduce":
+        return 2.0 * f * operand_b     # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return f * operand_b
+    if kind == "all-to-all":
+        return f * operand_b
+    if kind == "collective-permute":
+        return float(operand_b)
+    return float(operand_b)
+
+
+def totals(stats: dict) -> dict:
+    return {
+        "collective_count": sum(r["count"] for r in stats.values()),
+        "collective_operand_bytes": sum(r["operand_bytes"]
+                                        for r in stats.values()),
+        "collective_wire_bytes": sum(r["wire_bytes"]
+                                     for r in stats.values()),
+    }

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A *function*, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax
+import; smoke tests and benches see the default single device).
+
+Topology: TPU v5e pods, 256 chips each.
+
+* single-pod:  (data=16, model=16)           — 256 chips
+* multi-pod:   (pod=2, data=16, model=16)    — 512 chips, the "pod" axis
+  carries pure data parallelism across the inter-pod (DCN) boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally, as a 1-D 'data' mesh (examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

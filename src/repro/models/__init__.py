@@ -1,0 +1,14 @@
+"""LM workload substrate: composable model definitions for all assigned
+architecture families (dense GQA, encoder-only, VLM backbone, MoE, hybrid
+Mamba+attention, RWKV6)."""
+from . import attention, layers, moe, ssm, stacks
+from .config import ArchConfig, Family, MambaSpec, MoESpec, RWKVSpec
+from .model import (abstract_model, decode_step, forward, init_decode_state,
+                    init_model, loss_fn, model_axes, model_decls, prefill)
+
+__all__ = [
+    "attention", "layers", "moe", "ssm", "stacks",
+    "ArchConfig", "Family", "MoESpec", "MambaSpec", "RWKVSpec",
+    "abstract_model", "decode_step", "forward", "init_decode_state",
+    "init_model", "loss_fn", "model_axes", "model_decls", "prefill",
+]

@@ -1,0 +1,244 @@
+"""Grouped-query attention: training/prefill forward + KV-cache decode.
+
+Shapes follow the logical-axis convention: q/k/v projections are kept 3-D
+``(embed, heads, head_dim)`` so the sharding rules may shard either the
+``heads`` or the ``head_dim`` axis (the latter rescues archs whose head
+count does not divide the model-parallel axis, e.g. llama4-scout's 40
+heads on a 16-way mesh).
+
+The jnp path below is the reference; ``use_flash=True`` routes the core
+softmax(QKᵀ)V through the Pallas flash-attention kernel
+(``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_act
+
+from .config import ArchConfig
+from .layers import P, apply_rope, rope_freqs
+
+_NEG = -1e30
+# chunked-attention tile sizes (module-level so perf experiments can sweep)
+BLOCK_Q = 512
+BLOCK_K = 1024
+
+
+def attn_decls(cfg: ArchConfig) -> dict:
+    dh = cfg.head_dim
+    return {
+        "wq": P((cfg.d_model, cfg.n_heads, dh), ("embed", "heads", "head_dim")),
+        "wk": P((cfg.d_model, cfg.n_kv_heads, dh),
+                ("embed", "kv_heads", "head_dim")),
+        "wv": P((cfg.d_model, cfg.n_kv_heads, dh),
+                ("embed", "kv_heads", "head_dim")),
+        "wo": P((cfg.n_heads, dh, cfg.d_model),
+                ("heads", "head_dim", "embed"), "scaled"),
+    }
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    q = shard_act(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)),
+                  ("batch", "seq", "heads", "head_dim"))
+    k = shard_act(jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype)),
+                  ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_act(jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype)),
+                  ("batch", "seq", "kv_heads", "head_dim"))
+    cos, sin = rope_freqs(cfg, positions)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def _gqa_scores_mask(cfg: ArchConfig, q_pos, k_pos):
+    """mask[(...,) S, T] — True where attendable."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if cfg.causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if cfg.window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < cfg.window
+    return ok
+
+
+def sdpa(cfg: ArchConfig, q, k, v, mask):
+    """Reference scaled-dot-product attention with GQA grouping.
+
+    q: (B,S,Hq,Dh)  k,v: (B,T,Hkv,Dh)  mask: (S,T) or (B,S,T).
+    """
+    B, S, Hq, Dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    # preferred_element_type keeps operands bf16 (a converted-f32 operand
+    # would be gathered at 2x wire cost under GSPMD)
+    scores = jnp.einsum("bshgk,bthk->bhgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= Dh ** -0.5
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthk->bshgk", w, v)
+    return out.reshape(B, S, Hq, Dh)
+
+
+def chunked_sdpa(cfg: ArchConfig, q, k, v, *, block_q: int | None = None,
+                 block_k: int | None = None):
+    """Flash-style online-softmax attention in pure jnp (nested scans over
+    q/kv blocks).  Never materializes the S×T score matrix — this is what
+    makes the 4k-train / 32k-prefill shapes fit HBM in the compiled
+    dry-run; the Pallas kernel is the TPU-native version of the same
+    schedule with explicit VMEM tiling.
+
+    Assumes contiguous positions 0..S-1 (training/prefill).  FLOPs inside
+    the block scans are counted once by XLA cost analysis — the roofline
+    extractor adds the analytic attention term (EXPERIMENTS.md §Roofline).
+    """
+    B, S, Hq, Dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q or BLOCK_Q, S)
+    bk = min(block_k or BLOCK_K, T)
+    nq, nk = S // bq, T // bk
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    scale = Dh ** -0.5
+
+    qr = q.reshape(B, nq, bq, Hkv, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, bk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, bk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+
+    def q_block(_, qi_qb):
+        qi, qb = qi_qb                       # qb: (B,Hkv,G,bq,Dh)
+        qpos = qi * bq + jnp.arange(bq)
+
+        def kv_block(carry, ki_kb):
+            m, l, acc = carry
+            ki, kb, vb = ki_kb               # kb/vb: (B,Hkv,bk,Dh)
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            ok = jnp.ones((bq, bk), bool)
+            if cfg.causal:
+                ok &= qpos[:, None] >= kpos[None, :]
+            if cfg.window is not None:
+                ok &= qpos[:, None] - kpos[None, :] < cfg.window
+            s = jnp.where(ok, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq), -jnp.inf, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_block), init, (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)     # (B,Hkv,G,bq,Dh)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qr))
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, Dh)
+    return out
+
+
+def _core_attention(cfg: ArchConfig, q, k, v, positions, impl: str):
+    if impl == "auto":
+        impl = "chunked" if q.shape[1] >= 2048 else "dense"
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=cfg.causal,
+                                      window=cfg.window)
+    if impl == "chunked":
+        return chunked_sdpa(cfg, q, k, v)
+    mask = _gqa_scores_mask(cfg, positions[0], positions[0])
+    return sdpa(cfg, q, k, v, mask)
+
+
+def apply_attention(p, x, cfg: ArchConfig, positions=None, *,
+                    impl: str = "auto"):
+    """Full-sequence path (training / prefill). x: (B,S,D)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _core_attention(cfg, q, k, v, positions, impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def prefill_attention(p, x, cfg: ArchConfig, cache_len: int, *,
+                      impl: str = "auto"):
+    """Full-sequence forward that also materializes the KV cache.
+
+    With ``cache_len < S`` (sliding-window long-context serving) only the
+    last ``cache_len`` positions are kept, ring-buffer addressed so a
+    subsequent :func:`decode_attention` continues seamlessly.
+    """
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _core_attention(cfg, q, k, v, positions, impl)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+    keep = min(cache_len, S)
+    kpos = jnp.arange(S - keep, S)
+    slots = jnp.mod(kpos, cache_len)
+    cache = init_kv_cache(cfg, B, cache_len)
+    cache["k"] = cache["k"].at[:, slots].set(
+        k[:, -keep:].astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, slots].set(
+        v[:, -keep:].astype(cache["v"].dtype))
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(
+        kpos.astype(jnp.int32))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                  dtype=None) -> dict:
+    """Ring-buffer KV cache.  ``slot_pos`` holds each slot's absolute
+    position (-1 = empty); with sliding-window archs ``cache_len`` may be
+    just the window size (the 500k-decode trick for mixtral)."""
+    dtype = dtype or jnp.dtype(cfg.kv_dtype or cfg.dtype)
+    kv = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dtype),
+        "v": jnp.zeros(kv, dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def decode_attention(p, x, cache, cfg: ArchConfig, t):
+    """One-token decode step.  x: (B,1,D); t: scalar absolute position.
+
+    Returns (out (B,1,D), updated cache).  Batch-uniform position (our
+    serving shapes decode in lockstep).
+    """
+    B = x.shape[0]
+    Sc = cache["k"].shape[1]
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, pos)
+    slot = jnp.mod(t, Sc)
+    cache = dict(cache)
+    kv_dt = cache["k"].dtype
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(kv_dt), slot, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(kv_dt), slot, 1)
+    cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), t, jnp.int32), slot, 0)
+
+    kpos = cache["slot_pos"]
+    ok = (kpos >= 0) & (kpos <= t)
+    if cfg.window is not None:
+        ok &= (t - kpos) < cfg.window
+    mask = ok[None, None, :]                      # (1, S=1, T)
+    out = sdpa(cfg, q, cache["k"].astype(q.dtype),
+               cache["v"].astype(q.dtype), mask.astype(bool))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache

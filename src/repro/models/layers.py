@@ -1,0 +1,160 @@
+"""Shared layers + the parameter-declaration convention.
+
+Every block declares its parameters as a nested dict of :class:`P`
+``(shape, logical_axes, init)`` entries.  From one declaration tree we
+derive (a) randomly initialized params, (b) abstract ``ShapeDtypeStruct``
+params for the no-allocation dry-run, and (c) the logical-axis tree the
+sharding rules consume (``repro.sharding``).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_act
+
+from .config import ArchConfig
+
+
+class P(NamedTuple):
+    shape: tuple
+    axes: tuple                      # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | scaled
+
+
+def init_params(key, decls, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        elif p.init == "arange_log":
+            # mamba A_log: log(1..d_state) broadcast over leading dims
+            row = jnp.log(jnp.arange(1, p.shape[-1] + 1, dtype=dtype))
+            out.append(jnp.broadcast_to(row, p.shape).astype(dtype))
+        else:
+            scale = 0.02 if p.init == "normal" else 0.02 / math.sqrt(2.0)
+            out.append(scale * jax.random.normal(k, p.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(decls, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), decls,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_axes(decls):
+    return jax.tree.map(lambda p: p.axes, decls,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_decls(decls, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers parameter stacking)."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init), decls,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_decls(cfg: ArchConfig) -> dict:
+    d = {"scale": P((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = P((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def apply_norm(p, x, cfg: ArchConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = ((xf - mu) * jax.lax.rsqrt(var + eps)
+             * p["scale"].astype(jnp.float32)
+             + p["bias"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchConfig, positions):
+    """positions: i32[...]; returns (cos, sin) with trailing head_dim/2."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta
+                 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., n_heads, head_dim); cos/sin broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def mlp_decls(cfg: ArchConfig) -> dict:
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": P((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_up": P((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+            "w_down": P((cfg.d_ff, cfg.d_model), ("mlp", "embed"), "scaled"),
+        }
+    return {
+        "w_up": P((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+        "b_up": P((cfg.d_ff,), ("mlp",), "zeros"),
+        "w_down": P((cfg.d_ff, cfg.d_model), ("mlp", "embed"), "scaled"),
+        "b_down": P((cfg.d_model,), ("embed",), "zeros"),
+    }
+
+
+def apply_mlp(p, x, cfg: ArchConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) \
+            * (x @ p["w_up"].astype(x.dtype))
+        h = shard_act(h, ("batch", "seq", "mlp"))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype)
+                    + p["b_up"].astype(x.dtype))
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_decls(cfg: ArchConfig) -> dict:
+    d = {"embedding": P((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        d["head"] = P((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(p, tokens, cfg: ArchConfig):
+    return p["embedding"].astype(jnp.dtype(cfg.dtype))[tokens]
+
+
+def lm_head(p, x, cfg: ArchConfig):
+    w = (p["embedding"].T if cfg.tie_embeddings else p["head"])
+    return x @ w.astype(x.dtype)

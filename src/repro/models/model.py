@@ -1,0 +1,150 @@
+"""Top-level model: embedding → stack → head, loss, prefill/decode.
+
+Works for every assigned family; frontend-stubbed archs
+(``cfg.embedding_inputs``: hubert frames, pixtral patches) take
+``(B, S, d_model)`` embeddings instead of token ids, per the assignment
+("the modality frontend is a STUB — input_specs() provides precomputed
+frame/patch embeddings").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_act
+
+from . import stacks
+from .config import ArchConfig
+from .layers import (abstract_params, apply_norm, embed_decls, embed_tokens,
+                     init_params, lm_head, norm_decls, param_axes)
+
+
+def model_decls(cfg: ArchConfig) -> dict:
+    return {
+        "embed": embed_decls(cfg),
+        "stack": stacks.stack_param_decls(cfg),
+        "final_norm": norm_decls(cfg),
+    }
+
+
+def init_model(key, cfg: ArchConfig):
+    return init_params(key, model_decls(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def abstract_model(cfg: ArchConfig):
+    """ShapeDtypeStruct param tree — the no-allocation dry-run input."""
+    return abstract_params(model_decls(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def model_axes(cfg: ArchConfig):
+    """Logical-axis tree mirroring the params (for sharding rules)."""
+    return param_axes(model_decls(cfg))
+
+
+def forward(params, cfg: ArchConfig, inputs, *, attn_impl: str = "auto",
+            unroll: bool = False, remat: bool = True):
+    """Logits for a full sequence.  inputs: (B,S) int32 or (B,S,D) embeds."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embedding_inputs:
+        x = inputs.astype(dt)
+    else:
+        x = embed_tokens(params["embed"], inputs, cfg)
+    x = shard_act(x, ("batch", "seq", "embed"))
+    x = stacks.apply_stack(params["stack"], x, cfg, attn_impl=attn_impl,
+                           unroll=unroll, remat=remat)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return shard_act(lm_head(params["embed"], x, cfg),
+                     ("batch", "seq", "vocab"))
+
+
+def forward_hidden(params, cfg: ArchConfig, inputs, *,
+                   attn_impl: str = "auto", unroll: bool = False,
+                   remat: bool = True):
+    """Final-normed hidden states (B,S,D) — the LM head is applied by the
+    caller (``loss_fn`` fuses it into chunked cross-entropy)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embedding_inputs:
+        x = inputs.astype(dt)
+    else:
+        x = embed_tokens(params["embed"], inputs, cfg)
+    x = shard_act(x, ("batch", "seq", "embed"))
+    x = stacks.apply_stack(params["stack"], x, cfg, attn_impl=attn_impl,
+                           unroll=unroll, remat=remat)
+    return apply_norm(params["final_norm"], x, cfg)
+
+
+def _xent_chunk(params, cfg: ArchConfig, xc, lc):
+    """Σ nll over one sequence chunk.  xc: (B,ck,D); lc: (B,ck)."""
+    logits = shard_act(lm_head(params["embed"], xc, cfg),
+                       ("batch", "seq", "vocab")).astype(jnp.float32)
+    mask = lc >= 0
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.maximum(lc, 0)[..., None],
+                             axis=-1)[..., 0]
+    return -jnp.sum(jnp.where(mask, ll, 0.0)), jnp.sum(mask)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, attn_impl: str = "auto",
+            unroll: bool = False, remat: bool = True,
+            xent_chunk: int = 512):
+    """Mean next-token (or masked-label) cross-entropy.  batch:
+    {"inputs": ids or embeds, "labels": (B,S) int32, -1 = unlabelled}.
+
+    The LM head + softmax runs in rematerialized sequence chunks: full
+    (B, S, vocab) fp32 logits at the assigned sizes are tens of GiB per
+    device; chunking bounds the live set at (B, chunk, vocab).
+    """
+    x = forward_hidden(params, cfg, batch["inputs"], attn_impl=attn_impl,
+                       unroll=unroll, remat=remat)
+    labels = batch["labels"]
+    B, S = labels.shape
+    ck = xent_chunk
+    if S > ck and S % ck == 0:
+        nc = S // ck
+        xcs = jnp.moveaxis(x.reshape(B, nc, ck, x.shape[-1]), 1, 0)
+        lcs = jnp.moveaxis(labels.reshape(B, nc, ck), 1, 0)
+
+        def body(carry, xl):
+            nll, n = jax.checkpoint(
+                lambda xc, lc: _xent_chunk(params, cfg, xc, lc))(*xl)
+            return (carry[0] + nll, carry[1] + n), None
+
+        (nll, n), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.int32(0)), (xcs, lcs))
+    else:
+        nll, n = _xent_chunk(params, cfg, x, labels)
+    return nll / jnp.maximum(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int):
+    return stacks.init_stack_state(cfg, batch, cache_len)
+
+
+def prefill(params, cfg: ArchConfig, inputs, cache_len: int, *,
+            attn_impl: str = "auto"):
+    """Returns (last-position logits, decode state)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embedding_inputs:
+        x = inputs.astype(dt)
+    else:
+        x = embed_tokens(params["embed"], inputs, cfg)
+    x, state = stacks.prefill_stack(params["stack"], x, cfg, cache_len,
+                                    attn_impl=attn_impl)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params["embed"], x[:, -1:], cfg)[:, 0], state
+
+
+def decode_step(params, cfg: ArchConfig, tokens, state, t):
+    """One decode step.  tokens: (B,) int32; t: scalar position of them.
+
+    Returns (logits (B, vocab), new state).  This is the function the
+    ``decode_*`` / ``long_*`` dry-run shapes lower (``serve_step``).
+    """
+    x = embed_tokens(params["embed"], tokens[:, None], cfg)
+    x, state = stacks.step_stack(params["stack"], x, state, cfg, t)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params["embed"], x, cfg)[:, 0], state

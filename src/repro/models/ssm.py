@@ -1,0 +1,308 @@
+"""State-space / linear-recurrence mixers: Mamba (jamba) and RWKV6 (finch).
+
+Both are implemented as exact sequential recurrences via ``lax.scan`` over
+time — the semantic reference.  The recurrences are O(1)-state, which is
+what makes the ``long_500k`` decode shape runnable for these families.
+The chunked matmul formulation of RWKV6 (TPU-friendly, MXU-aligned) lives
+in ``repro.kernels.rwkv6`` with this scan as its oracle.
+
+FLOP accounting note (EXPERIMENTS.md §Roofline): the projections — the
+dominant FLOPs — sit *outside* the time scan and are counted by XLA's
+cost analysis; the elementwise recurrence inside the scan is counted once
+per trip, so the roofline extractor adds the analytic correction
+(< 1% of layer FLOPs for both families at the assigned sizes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_act
+
+from .config import ArchConfig
+from .layers import P
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or max(cfg.d_model // 16, 1)
+    return d_inner, dt_rank, m.d_state, m.d_conv
+
+
+def mamba_decls(cfg: ArchConfig) -> dict:
+    di, dtr, ds, dc = _mamba_dims(cfg)
+    return {
+        "in_proj": P((cfg.d_model, 2 * di), ("embed", "inner")),
+        "conv_w": P((dc, di), ("conv", "inner")),
+        "conv_b": P((di,), ("inner",), "zeros"),
+        "x_proj": P((di, dtr + 2 * ds), ("inner", "proj")),
+        "dt_w": P((dtr, di), ("proj", "inner")),
+        "dt_b": P((di,), ("inner",), "zeros"),
+        "a_log": P((di, ds), ("inner", "state"), "arange_log"),
+        "d_skip": P((di,), ("inner",), "ones"),
+        "out_proj": P((di, cfg.d_model), ("inner", "embed"), "scaled"),
+    }
+
+
+def _mamba_pre(p, x, cfg: ArchConfig, conv_state=None):
+    """Shared projections. x: (B,S,D). Returns (xin, z, dt, Bc, Cc, conv_tail)."""
+    di, dtr, ds, dc = _mamba_dims(cfg)
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard_act(xin, ("batch", "seq", "inner"))
+    z = shard_act(z, ("batch", "seq", "inner"))
+    # causal depthwise conv over time
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, di), dt_)
+    else:
+        pad = conv_state.astype(dt_)
+    xin_p = jnp.concatenate([pad, xin], axis=1)
+    conv_tail = xin_p[:, -(dc - 1):, :]
+    w = p["conv_w"].astype(dt_)
+    xin = sum(xin_p[:, i:i + xin.shape[1], :] * w[i] for i in range(dc))
+    xin = jax.nn.silu(xin + p["conv_b"].astype(dt_))
+
+    xp = xin @ p["x_proj"].astype(dt_)
+    dt_low, Bc, Cc = jnp.split(xp, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"].astype(dt_)
+                         + p["dt_b"].astype(dt_)).astype(jnp.float32)
+    dt = shard_act(dt, ("batch", "seq", "inner"))
+    return xin, z, dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32), conv_tail
+
+
+def _mamba_scan(p, xin, dt, Bc, Cc, h0, *, chunk: int = 256):
+    """h_t = exp(dt A) h + dt x B ; y_t = h C + D x. Carries h (B,di,ds).
+
+    Time-chunked with per-chunk rematerialization: a flat reverse-mode
+    scan would save the (B, di, ds) carry for *every* step (hundreds of
+    GiB at the assigned sizes); checkpointing per chunk keeps only
+    chunk-boundary carries and recomputes inside — the standard
+    sqrt-remat trade for long recurrences.
+    """
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (di, ds)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                        # (B,di),(B,di),(B,ds)
+        dA = jnp.exp(dt_t[..., None] * A)                # (B,di,ds)
+        h = h * dA + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xin.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bc, 1, 0),
+          jnp.moveaxis(Cc, 1, 0))
+    S = xs[0].shape[0]
+    if S > chunk and S % chunk == 0:
+        xs = jax.tree.map(
+            lambda a: a.reshape(S // chunk, chunk, *a.shape[1:]), xs)
+
+        def chunk_body(h, xc):
+            h = shard_act(h, ("batch", "inner", "state"))
+            return jax.lax.scan(step, h, xc)
+
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+        ys = ys.reshape(S, *ys.shape[2:])
+    else:
+        h, ys = jax.lax.scan(step, h0, xs)
+    return h, jnp.moveaxis(ys, 0, 1)                     # (B,S,di)
+
+
+def apply_mamba(p, x, cfg: ArchConfig, *, return_state: bool = False):
+    """Training / prefill path. x: (B,S,D)."""
+    di, _, ds, _ = _mamba_dims(cfg)
+    xin, z, dt, Bc, Cc, conv_tail = _mamba_pre(p, x, cfg)
+    h0 = jnp.zeros((x.shape[0], di, ds), jnp.float32)
+    h, y = _mamba_scan(p, xin, dt, Bc, Cc, h0)
+    y = (y.astype(x.dtype) + p["d_skip"].astype(x.dtype) * xin) \
+        * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, {"h": h, "conv": conv_tail}
+    return out
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> dict:
+    di, _, ds, dc = _mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, ds), jnp.float32),
+            "conv": jnp.zeros((batch, dc - 1, di), jnp.dtype(cfg.dtype))}
+
+
+def mamba_step(p, x, state, cfg: ArchConfig):
+    """One-token decode. x: (B,1,D)."""
+    xin, z, dt, Bc, Cc, conv_tail = _mamba_pre(p, x, cfg,
+                                               conv_state=state["conv"])
+    h, y = _mamba_scan(p, xin, dt, Bc, Cc, state["h"])
+    y = (y.astype(x.dtype) + p["d_skip"].astype(x.dtype) * xin) \
+        * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_tail}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (finch): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+def _rwkv_dims(cfg: ArchConfig):
+    hs = cfg.rwkv.head_size
+    return cfg.d_model // hs, hs
+
+
+def rwkv_tmix_decls(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    H, hs = _rwkv_dims(cfg)
+    r = cfg.rwkv
+    return {
+        "mu": P((5, D), ("five", "embed")),               # r,k,v,w,g shifts
+        "mix_down": P((D, 5 * r.mix_lora), ("embed", "lora")),
+        "mix_up": P((5, r.mix_lora, D), ("five", "lora", "embed")),
+        "wr": P((D, H * hs), ("embed", "inner")),
+        "wk": P((D, H * hs), ("embed", "inner")),
+        "wv": P((D, H * hs), ("embed", "inner")),
+        "wg": P((D, H * hs), ("embed", "inner")),
+        "w0": P((H * hs,), ("inner",), "zeros"),
+        "decay_down": P((D, r.decay_lora), ("embed", "lora")),
+        "decay_up": P((r.decay_lora, H * hs), ("lora", "inner")),
+        "u": P((H, hs), ("heads", "head_dim")),
+        "ln_scale": P((H * hs,), ("inner",), "ones"),
+        "ln_bias": P((H * hs,), ("inner",), "zeros"),
+        "wo": P((H * hs, D), ("inner", "embed"), "scaled"),
+    }
+
+
+def _tmix_proj(p, x, x_prev, cfg: ArchConfig):
+    """Token-shift mixing + projections. x: (B,S,D); x_prev: shifted x."""
+    dt_ = x.dtype
+    dx = x_prev - x
+    # data-dependent mixing (LoRA over the 5 streams)
+    lo = jnp.tanh((x + dx * p["mu"][4].astype(dt_))        # g-stream mix seed
+                  @ p["mix_down"].astype(dt_))
+    B, S = x.shape[:2]
+    lo = lo.reshape(B, S, 5, cfg.rwkv.mix_lora)
+    dyn = jnp.einsum("bsfl,fld->bsfd", lo, p["mix_up"].astype(dt_))
+    mixed = x[:, :, None, :] + dx[:, :, None, :] \
+        * (p["mu"].astype(dt_) + dyn)                      # (B,S,5,D)
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(5))
+    H, hs = _rwkv_dims(cfg)
+    shp = (B, S, H, hs)
+    r = shard_act((xr @ p["wr"].astype(dt_)).reshape(shp),
+                  ("batch", "seq", "heads", "head_dim"))
+    k = shard_act((xk @ p["wk"].astype(dt_)).reshape(shp),
+                  ("batch", "seq", "heads", "head_dim"))
+    v = shard_act((xv @ p["wv"].astype(dt_)).reshape(shp),
+                  ("batch", "seq", "heads", "head_dim"))
+    g = jax.nn.silu(xg @ p["wg"].astype(dt_))
+    # data-dependent decay in (0,1): w = exp(-exp(w0 + lora(xw)))
+    wlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_down"].astype(dt_)).astype(jnp.float32)
+        @ p["decay_up"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(shp)
+    return r, k, v, g, w
+
+
+def _wkv_scan(p, r, k, v, w, s0, *, chunk: int = 256):
+    """S_t = diag(w_t) S + kᵀv ; y_t = r·(S + diag(u) kᵀv). s0: (B,H,hs,hs).
+
+    Time-chunked + per-chunk remat for the same backward-memory reason as
+    ``_mamba_scan``.  The Pallas kernel (repro.kernels.rwkv6) is the
+    VMEM-resident production path; this is the semantic reference.
+    """
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = (i.astype(jnp.float32) for i in inp)
+        kv = k_t[..., None] * v_t[..., None, :]            # (B,H,hs,hs)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    T = xs[0].shape[0]
+    if T > chunk and T % chunk == 0:
+        xs = jax.tree.map(
+            lambda a: a.reshape(T // chunk, chunk, *a.shape[1:]), xs)
+
+        def chunk_body(S, xc):
+            S = shard_act(S, ("batch", "heads", "head_dim", None))
+            return jax.lax.scan(step, S, xc)
+
+        S, ys = jax.lax.scan(jax.checkpoint(chunk_body), s0, xs)
+        ys = ys.reshape(T, *ys.shape[2:])
+    else:
+        S, ys = jax.lax.scan(step, s0, xs)
+    return S, jnp.moveaxis(ys, 0, 1)                       # (B,S,H,hs)
+
+
+def _tmix_out(p, y, g, cfg: ArchConfig):
+    """Per-head group-norm, gate, output projection."""
+    B, S, H, hs = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, H * hs)
+    y = y * p["ln_scale"].astype(jnp.float32) \
+        + p["ln_bias"].astype(jnp.float32)
+    y = y.astype(g.dtype) * g
+    return y @ p["wo"].astype(g.dtype)
+
+
+def apply_rwkv_tmix(p, x, cfg: ArchConfig, *, return_state: bool = False):
+    B, S, D = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _tmix_proj(p, x, x_prev, cfg)
+    H, hs = _rwkv_dims(cfg)
+    s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    s, y = _wkv_scan(p, r, k, v, w, s0)
+    out = _tmix_out(p, y, g, cfg)
+    if return_state:
+        return out, {"s": s, "x_tmix": x[:, -1]}
+    return out
+
+
+def rwkv_cmix_decls(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "mu_k": P((D,), ("embed",)),
+        "mu_r": P((D,), ("embed",)),
+        "wk": P((D, cfg.d_ff), ("embed", "mlp")),
+        "wv": P((cfg.d_ff, D), ("mlp", "embed"), "scaled"),
+        "wr": P((D, D), ("embed", "embed2")),
+    }
+
+
+def apply_rwkv_cmix(p, x, cfg: ArchConfig, x_prev=None):
+    dt_ = x.dtype
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(dt_)
+    xr = x + dx * p["mu_r"].astype(dt_)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt_)) * (k @ p["wv"].astype(dt_))
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> dict:
+    H, hs = _rwkv_dims(cfg)
+    D = cfg.d_model
+    dt_ = jnp.dtype(cfg.dtype)
+    return {"s": jnp.zeros((batch, H, hs, hs), jnp.float32),
+            "x_tmix": jnp.zeros((batch, D), dt_),
+            "x_cmix": jnp.zeros((batch, D), dt_)}
+
+
+def rwkv_tmix_step(p, x, state, cfg: ArchConfig):
+    """One-token decode. x: (B,1,D)."""
+    x_prev = state["x_tmix"][:, None, :]
+    r, k, v, g, w = _tmix_proj(p, x, x_prev, cfg)
+    S, y = _wkv_scan(p, r, k, v, w, state["s"])
+    out = _tmix_out(p, y, g, cfg)
+    return out, {"s": S, "x_tmix": x[:, 0]}
+
+
+def rwkv_cmix_step(p, x, state_x, cfg: ArchConfig):
+    out = apply_rwkv_cmix(p, x, cfg, x_prev=state_x[:, None, :])
+    return out, x[:, 0]

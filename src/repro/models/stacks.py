@@ -1,0 +1,249 @@
+"""Layer stacks: period-aware scan-over-layers with rematerialization.
+
+Homogeneous archs scan one block; heterogeneous archs (jamba's
+mamba/attention 1:7 interleave with MoE every other layer) repeat a
+*period* of sub-blocks — the block pattern's smallest repeating unit —
+and scan over periods.  Parameters are stacked on a leading ``layers``
+axis (never sharded), so the HLO contains one period regardless of depth:
+compile times stay flat and the roofline extractor applies the documented
+depth correction.
+
+``unroll=True`` disables the scan (used by depth-variant lowerings in the
+roofline methodology and by tiny smoke configs where scan overhead
+dominates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_act
+
+from . import attention, moe, ssm
+from .config import ArchConfig
+from .layers import (P, apply_mlp, apply_norm, mlp_decls, norm_decls,
+                     stack_decls)
+
+
+def _pattern_period(cfg: ArchConfig) -> list[dict]:
+    pat = cfg.block_pattern()
+    for p in range(1, len(pat) + 1):
+        if len(pat) % p == 0 and pat == pat[:p] * (len(pat) // p):
+            return pat[:p]
+    return pat
+
+
+MIXER_DECLS = {"attn": attention.attn_decls, "mamba": ssm.mamba_decls,
+               "rwkv": ssm.rwkv_tmix_decls}
+MLP_DECLS = {"mlp": mlp_decls, "moe": moe.moe_decls,
+             "rwkv_cmix": ssm.rwkv_cmix_decls}
+
+
+def sub_block_decls(cfg: ArchConfig, entry: dict) -> dict:
+    return {
+        "norm1": norm_decls(cfg),
+        "mixer": MIXER_DECLS[entry["mixer"]](cfg),
+        "norm2": norm_decls(cfg),
+        "mlp": MLP_DECLS[entry["mlp"]](cfg),
+    }
+
+
+def stack_param_decls(cfg: ArchConfig) -> dict:
+    """{"sub{i}": decls} stacked over n_layers/period periods."""
+    period = _pattern_period(cfg)
+    if not period:                       # 0-layer roofline variant
+        return {}
+    n_periods = cfg.n_layers // len(period)
+    return {
+        f"sub{i}": stack_decls(sub_block_decls(cfg, e), n_periods)
+        for i, e in enumerate(period)
+    }
+
+
+def _apply_sub_block(p, x, cfg: ArchConfig, entry: dict, positions,
+                     attn_impl: str):
+    # constraint on the *bf16* norm output anchors GSPMD's SP->TP gather
+    # on the cast tensor (it otherwise gathers the f32 norm internals at
+    # 2x wire cost — §Perf B4)
+    h = shard_act(apply_norm(p["norm1"], x, cfg),
+                  ("batch", "seq", "embed"))
+    if entry["mixer"] == "attn":
+        out = attention.apply_attention(p["mixer"], h, cfg, positions,
+                                        impl=attn_impl)
+    elif entry["mixer"] == "mamba":
+        out = ssm.apply_mamba(p["mixer"], h, cfg)
+    else:
+        out = ssm.apply_rwkv_tmix(p["mixer"], h, cfg)
+    x = x + out
+    h = apply_norm(p["norm2"], x, cfg)
+    if entry["mlp"] == "mlp":
+        out = apply_mlp(p["mlp"], h, cfg)
+    elif entry["mlp"] == "moe":
+        out = moe.apply_moe(p["mlp"], h, cfg)
+    else:
+        out = ssm.apply_rwkv_cmix(p["mlp"], h, cfg)
+    x = x + out
+    return x
+
+
+def apply_stack(params: dict, x, cfg: ArchConfig, positions=None, *,
+                attn_impl: str = "auto", unroll: bool = False,
+                remat: bool = True):
+    """Full-sequence forward through all layers.  x: (B,S,D)."""
+    period = _pattern_period(cfg)
+    if not period:                       # 0-layer roofline variant
+        return shard_act(x, ("batch", "seq", "embed"))
+    n_periods = cfg.n_layers // len(period)
+
+    # heterogeneous periods (jamba: 8 sub-blocks) additionally checkpoint
+    # each sub-block: the rematted backward then keeps ONE sub-block's
+    # internals live instead of the whole period's (4 MoE + 7 mamba
+    # buffers at once is hundreds of GiB at the assigned sizes)
+    nested = remat and len(period) > 1
+
+    def one_period(x, pparams):
+        x = shard_act(x, ("batch", "seq", "embed"))   # SP residual stream
+        for i, entry in enumerate(period):
+            fn = functools.partial(_apply_sub_block, cfg=cfg, entry=entry,
+                                   positions=positions, attn_impl=attn_impl)
+            if nested:
+                fn = jax.checkpoint(fn)
+            x = fn(pparams[f"sub{i}"], x)
+        return x
+
+    if remat:
+        one_period = jax.checkpoint(one_period)
+
+    if unroll:
+        for li in range(n_periods):
+            x = one_period(x, jax.tree.map(lambda a: a[li], params))
+        return x
+
+    def body(x, pparams):
+        return one_period(x, pparams), None
+
+    x, _ = jax.lax.scan(body, x, params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decode: per-layer recurrent state threading
+# ---------------------------------------------------------------------------
+
+def init_stack_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    """Stacked per-period decode states (KV caches / SSM states)."""
+    period = _pattern_period(cfg)
+    if not period:
+        return {}
+    n_periods = cfg.n_layers // len(period)
+
+    def stacked(make):
+        leaves = make()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(),
+            leaves)
+
+    state = {}
+    for i, entry in enumerate(period):
+        sub = {}
+        if entry["mixer"] == "attn":
+            sub["mixer"] = stacked(functools.partial(
+                attention.init_kv_cache, cfg, batch, cache_len))
+        elif entry["mixer"] == "mamba":
+            sub["mixer"] = stacked(functools.partial(
+                ssm.init_mamba_state, cfg, batch))
+        else:
+            sub["mixer"] = stacked(functools.partial(
+                ssm.init_rwkv_state, cfg, batch))
+        if entry["mlp"] == "rwkv_cmix":
+            sub["mlp"] = stacked(
+                lambda: jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)))
+        state[f"sub{i}"] = sub
+    return state
+
+
+def _prefill_sub_block(p, x, cfg: ArchConfig, entry: dict, cache_len: int,
+                       attn_impl: str):
+    h = apply_norm(p["norm1"], x, cfg)
+    new = {}
+    if entry["mixer"] == "attn":
+        out, new["mixer"] = attention.prefill_attention(
+            p["mixer"], h, cfg, cache_len, impl=attn_impl)
+    elif entry["mixer"] == "mamba":
+        out, new["mixer"] = ssm.apply_mamba(p["mixer"], h, cfg,
+                                            return_state=True)
+    else:
+        out, new["mixer"] = ssm.apply_rwkv_tmix(p["mixer"], h, cfg,
+                                                return_state=True)
+    x = x + out
+    h = apply_norm(p["norm2"], x, cfg)
+    if entry["mlp"] == "mlp":
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    elif entry["mlp"] == "moe":
+        x = x + moe.apply_moe(p["mlp"], h, cfg)
+    else:
+        # cmix token-shift decode state = last token of the cmix input h
+        new["mlp"] = h[:, -1]
+        x = x + ssm.apply_rwkv_cmix(p["mlp"], h, cfg)
+    return x, new
+
+
+def prefill_stack(params: dict, x, cfg: ArchConfig, cache_len: int, *,
+                  attn_impl: str = "auto"):
+    """Full-sequence forward that also returns stacked decode states."""
+    period = _pattern_period(cfg)
+    if not period:
+        return x, {}
+
+    def body(x, pparams):
+        new_st = {}
+        for i, entry in enumerate(period):
+            x, new_st[f"sub{i}"] = _prefill_sub_block(
+                pparams[f"sub{i}"], x, cfg, entry, cache_len, attn_impl)
+        return x, new_st
+
+    x, states = jax.lax.scan(body, x, params)
+    return x, states
+
+
+def _step_sub_block(p, x, st, cfg: ArchConfig, entry: dict, t):
+    h = apply_norm(p["norm1"], x, cfg)
+    new = {}
+    if entry["mixer"] == "attn":
+        out, new["mixer"] = attention.decode_attention(p["mixer"], h,
+                                                       st["mixer"], cfg, t)
+    elif entry["mixer"] == "mamba":
+        out, new["mixer"] = ssm.mamba_step(p["mixer"], h, st["mixer"], cfg)
+    else:
+        out, new["mixer"] = ssm.rwkv_tmix_step(p["mixer"], h, st["mixer"],
+                                               cfg)
+    x = x + out
+    h = apply_norm(p["norm2"], x, cfg)
+    if entry["mlp"] == "mlp":
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    elif entry["mlp"] == "moe":
+        x = x + moe.apply_moe(p["mlp"], h, cfg)
+    else:
+        out, new["mlp"] = ssm.rwkv_cmix_step(p["mlp"], h, st["mlp"], cfg)
+        x = x + out
+    return x, new
+
+
+def step_stack(params: dict, x, state: dict, cfg: ArchConfig, t):
+    """One-token decode through all layers.  x: (B,1,D); t: position."""
+    period = _pattern_period(cfg)
+    if not period:
+        return x, {}
+
+    def body(x, scanned):
+        pparams, st = scanned
+        new_st = {}
+        for i, entry in enumerate(period):
+            x, new_st[f"sub{i}"] = _step_sub_block(
+                pparams[f"sub{i}"], x, st[f"sub{i}"], cfg, entry, t)
+        return x, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params, state))
+    return x, new_state

@@ -1,0 +1,225 @@
+"""Divisibility-aware logical-axis sharding rules (FSDP × TP × SP).
+
+Every tensor (params, activations, decode states) carries *logical* axis
+names; this module resolves them to mesh axes:
+
+* weights: ``embed → data`` (FSDP: ZeRO-sharded storage, gathered at use),
+  ``mlp/inner/heads/vocab → model`` (tensor parallel), with ``head_dim`` as
+  the fallback when a head count doesn't divide the model axis (llama4's
+  40 heads on a 16-way axis);
+* activations: ``batch → (pod, data)``, ``seq → model`` between blocks
+  (sequence parallelism — the residual stream is the dominant live
+  activation under remat, see DESIGN.md §5);
+* decode states: KV caches shard batch × (kv_heads | head_dim | seq).
+
+Resolution is *greedy by priority with divisibility checks*: each
+candidate (dim, mesh_axis) pair gets a priority; we sort and assign,
+skipping any pair whose dim size isn't divisible by the mesh axis or
+whose mesh axis / tensor dim is already taken.  Tensors that fit no rule
+stay replicated.  This is what guarantees ``.lower().compile()`` succeeds
+for every (arch × shape × mesh) cell — sharding never fails, it degrades.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# (mesh_axis, priority) candidates per logical axis; lower = stronger.
+# "batch" expands to the (pod, data) super-axis at resolution time.
+WEIGHT_RULES: dict[str, list[tuple[str, int]]] = {
+    "vocab": [("model", 0)],
+    "mlp": [("model", 1)],
+    "inner": [("model", 1)],
+    "heads": [("model", 2)],
+    "kv_heads": [("model", 3)],
+    "head_dim": [("model", 4)],
+    "experts": [("model", 5)],          # engaged only if mlp/heads missed
+    "embed": [("data", 6)],             # FSDP storage shard
+    "embed2": [("data", 7)],
+}
+
+# decode/prefill state rules: cache *sequence* sharding beats head_dim —
+# a head_dim-sharded cache forces an all-gather of the whole cache per
+# step (the QK^T contraction is over head_dim); a seq-sharded cache only
+# crosses shards in the tiny softmax reductions (flash-decoding layout).
+STATE_RULES: dict[str, list[tuple[str, int]]] = {
+    "batch": [("__batch__", 0)],
+    "seq": [("model", 1)],
+    "kv_heads": [("model", 2)],
+    "head_dim": [("model", 3)],
+    "heads": [("model", 2)],
+    "inner": [("model", 2)],
+    "embed": [("model", 9)],
+}
+
+# pure-FSDP training variant (§Perf): weights sharded over BOTH axes and
+# gathered whole at use; activations batch-sharded only. Trades weight
+# gathers (O(params)) for the TP activation gathers + dx all-reduces
+# (O(tokens·d_model) per layer) — wins when tokens/device >> d_ff.
+WEIGHT_RULES_FSDP2: dict[str, list[tuple[str, int]]] = {
+    "embed": [(("data", "model"), 0)],
+    "mlp": [(("data", "model"), 1)],
+    "inner": [(("data", "model"), 1)],
+    "vocab": [(("data", "model"), 2)],
+    "experts": [(("data", "model"), 3)],
+}
+
+ACT_RULES_FSDP2: dict[str, list[tuple[str, int]]] = {
+    "batch": [("__all__", 0)],     # DP over every mesh axis: the model
+    "vocab": [("model", 1)],       # axis must not sit idle for compute
+}
+
+ACT_RULES: dict[str, list[tuple[str, int]]] = {
+    "batch": [("__batch__", 0)],        # (pod, data) super-axis
+    "heads": [("model", 1)],
+    "kv_heads": [("model", 2)],
+    "head_dim": [("model", 3)],
+    "vocab": [("model", 1)],
+    "mlp": [("model", 4)],
+    "inner": [("model", 4)],
+    "seq": [("model", 8)],              # SP: last resort for states,
+    "embed": [("model", 9)],            # boundary constraint for resid
+}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for(mesh: Mesh, shape: tuple, axes: tuple,
+             rules: dict[str, list[tuple[str, int]]]) -> PartitionSpec:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    assert len(shape) == len(axes), (shape, axes)
+    cands = []
+    for dim, name in enumerate(axes):
+        if name is None:
+            continue
+        for mesh_axis, prio in rules.get(name, []):
+            if mesh_axis == "__batch__":
+                real = batch_axes(mesh)
+            elif mesh_axis == "__all__":
+                real = tuple(mesh.axis_names)
+            else:
+                real = mesh_axis
+            if isinstance(real, str) and real not in mesh.axis_names:
+                continue
+            if not real:
+                continue
+            cands.append((prio, dim, real))
+    cands.sort(key=lambda c: c[0])
+    assignment: dict[int, object] = {}
+    used: set[str] = set()
+    for prio, dim, real in cands:
+        flat = set(real) if isinstance(real, tuple) else {real}
+        if dim in assignment or (flat & used):
+            continue
+        if shape[dim] % _axis_size(mesh, real) != 0:
+            continue
+        assignment[dim] = real
+        used |= flat
+    return PartitionSpec(*(assignment.get(d) for d in range(len(shape))))
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, *,
+                   rules=None):
+    """NamedSharding pytree for (axes_tree, shape_tree) pairs."""
+    rules = rules or WEIGHT_RULES
+    flat_axes, treedef = jax.tree.flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_shapes = treedef.flatten_up_to(shape_tree)
+    out = []
+    for ax, sd in zip(flat_axes, flat_shapes):
+        out.append(NamedSharding(
+            mesh, spec_for(mesh, tuple(sd.shape), ax, rules)))
+    return treedef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (used inside model code; no-op off-mesh)
+# ---------------------------------------------------------------------------
+
+_CTX: dict | None = None
+
+
+def set_mesh_ctx(mesh: Mesh | None, rules=None):
+    global _CTX
+    _CTX = None if mesh is None else {"mesh": mesh,
+                                      "rules": rules or ACT_RULES}
+
+
+class mesh_ctx:
+    """``with mesh_ctx(mesh): ...`` enables activation constraints."""
+
+    def __init__(self, mesh, rules=None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self._prev = _CTX
+        set_mesh_ctx(self.mesh, self.rules)
+
+    def __exit__(self, *exc):
+        global _CTX
+        _CTX = self._prev
+
+
+def shard_act(x, axes: tuple):
+    """Constrain an activation to its logical-axis sharding (no-op when no
+    mesh context is active — single-device tests never see collectives)."""
+    if _CTX is None:
+        return x
+    spec = spec_for(_CTX["mesh"], tuple(x.shape), axes, _CTX["rules"])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX["mesh"], spec))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state logical axes (path-pattern based)
+# ---------------------------------------------------------------------------
+
+_STATE_PATTERNS = [
+    # (suffix key name, rank) -> logical axes
+    ("k", 4, ("batch", "seq", "kv_heads", "head_dim")),
+    ("v", 4, ("batch", "seq", "kv_heads", "head_dim")),
+    ("slot_pos", 1, ("seq",)),
+    ("h", 3, ("batch", "inner", "state")),
+    ("conv", 3, ("batch", None, "inner")),
+    ("s", 4, ("batch", "heads", "head_dim", None)),
+    ("x_tmix", 2, ("batch", "embed")),
+    ("x_cmix", 2, ("batch", "embed")),
+    ("mlp", 2, ("batch", "embed")),      # cmix token-shift state
+]
+
+
+def state_axes(state_tree):
+    """Logical axes for a decode-state pytree (leading 'layers' dim added
+    for the stacked-period dimension)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    out = []
+    for path, leaf in flat:
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        rank = leaf.ndim
+        match = None
+        for name, r, ax in _STATE_PATTERNS:
+            if key == name and rank == r + 1:      # +1: stacked periods
+                match = ("layers",) + ax
+                break
+            if key == name and rank == r:
+                match = ax
+                break
+        if match is None:
+            match = (None,) * rank
+        out.append(match)
+    return treedef.unflatten(out)

@@ -1,0 +1,9 @@
+"""Training substrate: from-scratch AdamW, deterministic data pipeline,
+atomic sharded checkpoints, fault-tolerant training loop."""
+from . import checkpoint, data, optimizer, trainer
+from .optimizer import OptConfig, OptState
+from .trainer import NodeFailure, TrainConfig, make_train_step, train
+
+__all__ = ["checkpoint", "data", "optimizer", "trainer", "OptConfig",
+           "OptState", "NodeFailure", "TrainConfig", "make_train_step",
+           "train"]

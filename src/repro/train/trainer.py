@@ -1,0 +1,119 @@
+"""Training loop: jitted step, checkpoint/restart, straggler watchdog,
+failure recovery.
+
+Fault-tolerance contract (exercised by ``tests/test_trainer.py``):
+
+* every ``ckpt_every`` steps the full (params, opt, data-step) state is
+  committed atomically (``checkpoint.py``);
+* a step that raises (injected failure / real node loss) triggers restore
+  of the last committed state and replay — because the data pipeline is a
+  pure function of the step counter, replay is bit-exact;
+* a step-walltime watchdog tracks a robust median and flags stragglers
+  (at pod scale the flag feeds the re-slotting policy; here it is
+  surfaced in metrics and tested with an injected slow step).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.models import ArchConfig, init_model, loss_fn
+
+from . import checkpoint, data, optimizer
+
+
+class NodeFailure(RuntimeError):
+    """Raised (by the runtime or an injected fault hook) when a step loses
+    a node; the loop restores the last committed checkpoint and replays."""
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    seed: int = 0
+    seq_len: int = 128
+    global_batch: int = 8
+    opt: optimizer.OptConfig = field(default_factory=optimizer.OptConfig)
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    straggler_factor: float = 3.0     # step > factor x median -> flagged
+    max_restarts: int = 3
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: optimizer.OptConfig, *,
+                    attn_impl: str = "auto", unroll: bool = False,
+                    donate: bool = True):
+    """The jitted (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, attn_impl=attn_impl,
+                              unroll=unroll))(params)
+        params, opt_state, m = optimizer.update(opt_cfg, grads, opt_state,
+                                                params)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    kw = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(step, **kw)
+
+
+def train(cfg: ArchConfig, tc: TrainConfig, *,
+          fault_hook: Callable[[int], None] | None = None,
+          resume: bool = True) -> dict:
+    """Run the loop.  ``fault_hook(step)`` may raise to simulate node loss
+    (the loop restores the last checkpoint and replays)."""
+    dcfg = data.DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len,
+                           global_batch=tc.global_batch, seed=tc.seed)
+    opt_cfg = tc.opt.replace(total_steps=tc.steps)
+    step_fn = make_train_step(cfg, opt_cfg)
+    batch_fn = jax.jit(lambda s: (
+        data.embedding_batch_at(dcfg, cfg.d_model, s, dtype=jax.numpy.dtype(
+            cfg.dtype)) if cfg.embedding_inputs else data.batch_at(dcfg, s)))
+
+    params = init_model(jax.random.PRNGKey(tc.seed), cfg)
+    opt_state = optimizer.init(params)
+    start = 0
+    if resume and tc.ckpt_dir and checkpoint.latest_step(tc.ckpt_dir) is not None:
+        start, (params, opt_state), _ = checkpoint.restore(
+            tc.ckpt_dir, (params, opt_state))
+
+    history = {"loss": [], "grad_norm": [], "straggler_steps": [],
+               "restarts": 0, "resumed_at": start}
+    times: list[float] = []
+    s = start
+    restarts = 0
+    while s < tc.steps:
+        t0 = time.perf_counter()
+        try:
+            if fault_hook is not None:
+                fault_hook(s)
+            batch = batch_fn(s)
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            loss = float(m["loss"])
+        except NodeFailure:
+            restarts += 1
+            if restarts > tc.max_restarts or not tc.ckpt_dir:
+                raise
+            s, (params, opt_state), _ = checkpoint.restore(
+                tc.ckpt_dir, (params, opt_state))
+            history["restarts"] = restarts
+            continue
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        med = float(np.median(times[-50:]))
+        if len(times) > 5 and dt > tc.straggler_factor * med:
+            history["straggler_steps"].append(s)
+        history["loss"].append(loss)
+        history["grad_norm"].append(float(m["grad_norm"]))
+        s += 1
+        if tc.ckpt_dir and (s % tc.ckpt_every == 0 or s == tc.steps):
+            checkpoint.save(tc.ckpt_dir, s, (params, opt_state),
+                            meta={"loss": loss})
+    history["final_loss"] = history["loss"][-1] if history["loss"] else None
+    return history

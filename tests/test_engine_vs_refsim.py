@@ -1,0 +1,146 @@
+"""Oracle equality: the vectorized JAX engine must reproduce the sequential
+paper-faithful DES exactly, plus hypothesis property tests on simulator
+invariants.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (JOB_MEDIUM, JOB_SMALL, VM_MEDIUM, VM_SMALL, Scenario,
+                        engine, paper_scenario, refsim, sweep)
+
+FIELDS = ("avg_exec", "max_exec", "min_exec", "makespan", "delay_time",
+          "vm_cost", "network_cost", "map_avg_exec", "reduce_avg_exec")
+
+
+def assert_parity(sc: Scenario, rtol=2e-4, atol=1e-2):
+    ref = refsim.simulate(sc)
+    got = engine.simulate(sc)
+    for ji in range(len(sc.jobs)):
+        for f in FIELDS:
+            np.testing.assert_allclose(
+                float(getattr(got, f)[ji]), getattr(ref.jobs[ji], f),
+                rtol=rtol, atol=atol, err_msg=f"job {ji} field {f}")
+
+
+@pytest.mark.parametrize("m", [1, 3, 4, 7, 20])
+@pytest.mark.parametrize("v", [3, 9])
+def test_paper_cells(m, v):
+    assert_parity(paper_scenario(n_maps=m, n_vms=v))
+
+
+def test_no_network_delay():
+    assert_parity(paper_scenario(n_maps=7, network_delay=False))
+
+
+def test_multi_reduce():
+    assert_parity(paper_scenario(n_maps=8, n_reduces=3))
+
+
+def test_multi_job_heterogeneous():
+    jobs = (dataclasses.replace(JOB_SMALL, n_maps=5),
+            dataclasses.replace(JOB_MEDIUM, n_maps=3, n_reduces=2,
+                                submit_time=500.0))
+    sc = Scenario(vms=(VM_SMALL, VM_SMALL, VM_MEDIUM), jobs=jobs)
+    assert_parity(sc)
+
+
+def test_padding_invariance():
+    """Extra task/job/VM padding must not change results."""
+    sc = paper_scenario(n_maps=5)
+    base = engine._simulate_jit(engine.from_scenario(sc))
+    padded = engine._simulate_jit(engine.from_scenario(
+        sc, pad_tasks=32, pad_jobs=4, pad_vms=8))
+    for f in FIELDS:
+        np.testing.assert_allclose(float(getattr(base, f)[0]),
+                                   float(getattr(padded, f)[0]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): simulator invariants
+# ---------------------------------------------------------------------------
+
+scenario_params = st.tuples(
+    st.integers(1, 12),                      # n_maps
+    st.integers(1, 3),                       # n_reduces
+    st.integers(1, 8),                       # n_vms
+    st.sampled_from(["small", "medium", "large"]),
+    st.sampled_from(["small", "medium", "big"]),
+    st.booleans(),                           # network delay
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenario_params)
+def test_property_engine_matches_oracle(p):
+    m, r, v, vm, job, nd = p
+    assert_parity(paper_scenario(job=job, vm=vm, n_vms=v, n_maps=m,
+                                 n_reduces=r, network_delay=nd))
+
+
+@settings(max_examples=30, deadline=None)
+@given(scenario_params)
+def test_property_invariants(p):
+    """Reduce starts after every map finishes; makespan bounds; positivity."""
+    m, r, v, vm, job, nd = p
+    sc = paper_scenario(job=job, vm=vm, n_vms=v, n_maps=m, n_reduces=r,
+                        network_delay=nd)
+    res = refsim.simulate(sc)
+    maps = [t for t in res.tasks if not t.is_reduce]
+    reds = [t for t in res.tasks if t.is_reduce]
+    last_map_finish = max(t.finish for t in maps)
+    for t in reds:
+        assert t.start >= last_map_finish - 1e-6      # MR dependency
+    jr = res.job()
+    assert jr.min_exec <= jr.avg_exec + 1e-6
+    assert jr.avg_exec <= jr.max_exec + 1e-6
+    assert jr.makespan >= jr.max_exec - 1e-6          # contains critical path
+    assert jr.delay_time >= -1e-9
+    assert jr.vm_cost > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 6), st.integers(1, 6))
+def test_property_more_vms_never_hurt(m, v1, dv):
+    """Monotonicity: adding VMs never increases the makespan."""
+    a = refsim.simulate(paper_scenario(n_maps=m, n_vms=v1)).job().makespan
+    b = refsim.simulate(paper_scenario(n_maps=m, n_vms=v1 + dv)).job().makespan
+    assert b <= a + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(2, 8))
+def test_property_network_cost_vm_invariant(m, v):
+    a = refsim.simulate(paper_scenario(n_maps=m, n_vms=3)).job().network_cost
+    b = refsim.simulate(paper_scenario(n_maps=m, n_vms=v)).job().network_cost
+    assert a == pytest.approx(b, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Sweep layer
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_matches_oracle():
+    batch = sweep.paper_grid(m_range=range(1, 11), vm_numbers=(3, 6))
+    out = sweep.simulate_batch(batch)
+    i = 0
+    for m in range(1, 11):
+        for v in (3, 6):
+            ref = refsim.simulate(paper_scenario(n_maps=m, n_vms=v)).job()
+            np.testing.assert_allclose(float(out.makespan[i, 0]),
+                                       ref.makespan, rtol=2e-4)
+            np.testing.assert_allclose(float(out.network_cost[i, 0]),
+                                       ref.network_cost, rtol=2e-4)
+            i += 1
+
+
+def test_stack_scenarios_matches_single():
+    scs = [paper_scenario(n_maps=m) for m in (1, 4, 9)]
+    out = sweep.simulate_batch(sweep.stack_scenarios(scs))
+    for i, s in enumerate(scs):
+        single = engine.simulate(s)
+        np.testing.assert_allclose(float(out.makespan[i, 0]),
+                                   float(single.makespan[0]), rtol=1e-5)

@@ -1,0 +1,161 @@
+"""Beyond-paper extensions: speculative execution, streaming layer,
+gradient compression, workload bridge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChipSpec, StepCost, paper_scenario, refsim,
+                        speculative, streaming, workload)
+from repro.models import ArchConfig
+from repro.train import OptConfig, TrainConfig, compress, train
+
+
+# ---------------------------------------------------------------------------
+# speculative execution
+# ---------------------------------------------------------------------------
+
+def test_speculative_noop_without_stragglers():
+    sc = paper_scenario(n_maps=12, n_vms=4)
+    r = speculative.simulate_speculative(sc, [1.0] * sc.total_tasks())
+    ref = refsim.simulate(sc).job()
+    assert r["n_backups"] == 0
+    assert r["makespan_plain"] == pytest.approx(r["makespan_spec"])
+    assert r["makespan_plain"] == pytest.approx(ref.makespan, rel=1e-6)
+
+
+def test_speculative_beats_stragglers():
+    sc = paper_scenario(n_maps=12, n_vms=12)
+    mult = [1.0] * sc.total_tasks()
+    mult[3] = 5.0                                 # one 5x straggler
+    r = speculative.simulate_speculative(sc, mult, threshold=1.5)
+    assert r["n_backups"] == 1
+    assert r["speedup"] > 1.15    # rescues the straggled map phase
+    assert r["extra_work_frac"] < 0.2             # at bounded extra cost
+
+
+def test_speculative_lognormal_study():
+    sc = paper_scenario(n_maps=16, n_vms=16)
+    mult = speculative.straggler_multipliers(sc, sigma=0.6, seed=1)
+    r = speculative.simulate_speculative(sc, mult)
+    assert r["speedup"] >= 1.0
+    assert r["cost_spec"] >= r["cost_plain"]
+
+
+# ---------------------------------------------------------------------------
+# streaming layer
+# ---------------------------------------------------------------------------
+
+def test_streaming_stable_topology():
+    topo = streaming.smart_city_topology(parallelism=(1, 2, 4, 1, 1))
+    out = streaming.analyze(topo)
+    assert bool(out["stable"])
+    assert np.isfinite(float(out["latency_s"]))
+    # detect op sees cam_rate tuples; throughput matches inflow
+    np.testing.assert_allclose(float(out["throughput"][2]), 2000.0,
+                               rtol=1e-5)
+
+
+def test_streaming_bottleneck_detection():
+    topo = streaming.smart_city_topology(parallelism=(1, 2, 1, 1, 1))
+    out = streaming.analyze(topo)
+    assert int(out["bottleneck"]) == 2            # detect under-provisioned
+    assert not bool(out["stable"])
+    # provisioning the bottleneck restores stability
+    topo2 = streaming.smart_city_topology(parallelism=(1, 2, 4, 1, 1))
+    assert bool(streaming.analyze(topo2)["stable"])
+
+
+def test_streaming_batch_sweep():
+    topos = [streaming.smart_city_topology(parallelism=(1, 2, p, 1, 1))
+             for p in (1, 2, 4, 8)]
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *topos)
+    out = streaming.analyze_batch(batch)
+    assert out["stable"].tolist() == [False, True, True, True]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_small_error():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 1e-3}
+    ef = compress.init_state(g)
+    deq, ef2 = compress.compress_grads(g, ef)
+    err = float(jnp.abs(deq["w"] - g["w"]).max())
+    assert err < 2e-5              # <= scale/2, scale ~ max/127
+    # error feedback: residual carries the rounding error
+    total = deq["w"] + ef2.residual["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g["w"]),
+                               atol=1e-8)
+
+
+def test_compression_wire_savings():
+    g = {"w": jnp.zeros((10000,))}
+    wb = compress.wire_bytes(g)
+    assert wb["fp32"] / wb["int8"] > 3.5
+
+
+def test_compression_convergence_parity():
+    cfg = ArchConfig(name="tiny-c", family="dense", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                     vocab_pad_to=8, dtype="float32")
+    tc = TrainConfig(steps=25, seq_len=32, global_batch=4,
+                     opt=OptConfig(lr=3e-3, warmup_steps=5))
+    base = train(cfg, tc)
+
+    # rerun the loop with compression spliced into the gradient path
+    from repro.models import init_model, loss_fn
+    from repro.train import data, optimizer
+    dcfg = data.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt_state = optimizer.init(params)
+    ef = compress.init_state(params)
+    ocfg = tc.opt.replace(total_steps=25)
+
+    @jax.jit
+    def step(params, opt_state, ef, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(params)
+        grads, ef = compress.compress_grads(grads, ef)
+        params, opt_state, _ = optimizer.update(ocfg, grads, opt_state,
+                                                params)
+        return params, opt_state, ef, loss
+
+    losses = []
+    for s in range(25):
+        params, opt_state, ef, loss = step(params, opt_state, ef,
+                                           data.batch_at(dcfg, s))
+        losses.append(float(loss))
+    # compressed run converges like the uncompressed one
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert abs(np.mean(losses[-5:]) - np.mean(base["loss"][-5:])) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# workload bridge
+# ---------------------------------------------------------------------------
+
+def test_workload_roofline_terms():
+    cost = StepCost(flops=1e14, hbm_bytes=1e12, collective_bytes=1e10)
+    chip = ChipSpec()
+    t = cost.roofline_terms(chip)
+    assert t["compute_s"] == pytest.approx(1e14 / 197e12)
+    assert t["memory_s"] == pytest.approx(1e12 / 819e9)
+    assert t["collective_s"] == pytest.approx(1e10 / 50e9)
+
+
+def test_workload_straggler_and_failures():
+    cost = StepCost(flops=1e14, hbm_bytes=1e11, collective_bytes=1e9)
+    chip = ChipSpec()
+    clean = workload.simulate_training(cost, chip, n_devices=64,
+                                       n_steps=100, straggler_sigma=0.0)
+    assert clean["straggler_slowdown"] == pytest.approx(1.0, rel=1e-3)
+    slow = workload.simulate_training(cost, chip, n_devices=64,
+                                      n_steps=100, straggler_sigma=0.2,
+                                      seed=3)
+    assert slow["step_seconds"] > clean["step_seconds"]
+    failing = workload.simulate_training(cost, chip, n_devices=64,
+                                         n_steps=100, mtbf_hours=1.0)
+    assert failing["expected_failures"] > 0
+    assert failing["goodput"] < clean["goodput"]

@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests: the full pipeline the framework exists for —
+paper-faithful simulation -> vectorized sweeps -> LM workload bridge ->
+fault-tolerant training — exercised together.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (JOB_BIG, VM_TYPES, ChipSpec, Scenario, StepCost,
+                        engine, paper_scenario, refsim, sweep, workload)
+from repro.models import ArchConfig
+from repro.train import OptConfig, TrainConfig, train
+
+
+def test_end_to_end_provisioning_decision():
+    """The paper's §5 use case end to end: sweep candidate deployments,
+    pick the cheapest meeting an SLA, cross-check with the oracle."""
+    cells = [(vm_name, vm, n, 16) for vm_name, vm in VM_TYPES.items()
+             for n in (2, 4, 8)]
+    params = dict(
+        n_maps=np.array([c[3] for c in cells], np.int32),
+        n_reduces=np.ones(len(cells), np.int32),
+        n_vms=np.array([c[2] for c in cells], np.int32),
+        vm_mips=np.array([c[1].mips for c in cells], np.float32),
+        vm_pes=np.array([float(c[1].pes) for c in cells], np.float32),
+        vm_cost=np.array([c[1].cost_per_sec for c in cells], np.float32),
+        job_length=np.full(len(cells), JOB_BIG.length_mi, np.float32),
+        job_data=np.full(len(cells), JOB_BIG.data_mb, np.float32),
+    )
+    batch = sweep.grid_arrays(params, pad_tasks=17, pad_vms=8)
+    out = sweep.simulate_batch(batch)
+    makespan = np.asarray(out.makespan[:, 0])
+    cost = np.asarray(out.vm_cost[:, 0])
+    feasible = makespan <= 6000.0
+    assert feasible.any()
+    best = int(np.argmin(np.where(feasible, cost, np.inf)))
+
+    # oracle agrees on the winning cell
+    vm_name, vm, n, m = cells[best]
+    ref = refsim.simulate(Scenario(
+        vms=(vm,) * n,
+        jobs=(dataclasses.replace(JOB_BIG, n_maps=m),))).job()
+    assert ref.makespan == pytest.approx(makespan[best], rel=1e-4)
+    assert ref.vm_cost == pytest.approx(cost[best], rel=1e-4)
+
+
+def test_simulator_to_training_bridge():
+    """Dry-run cost model -> simulator -> goodput prediction is coherent."""
+    cost = StepCost(flops=5e13, hbm_bytes=5e11, collective_bytes=5e9)
+    chip = ChipSpec()
+    pred = workload.simulate_training(cost, chip, n_devices=128,
+                                      n_steps=500, straggler_sigma=0.05,
+                                      mtbf_hours=500.0)
+    assert 0.0 < pred["goodput"] <= 1.0
+    assert pred["step_seconds"] >= pred["ideal_step_seconds"] - 1e-9
+    # more failures -> less goodput, monotone in MTBF
+    worse = workload.simulate_training(cost, chip, n_devices=128,
+                                       n_steps=500, straggler_sigma=0.05,
+                                       mtbf_hours=50.0)
+    assert worse["goodput"] < pred["goodput"]
+
+
+def test_training_with_failure_and_resume(tmp_path):
+    """Tiny LM survives an injected failure and reaches the clean-run loss."""
+    cfg = ArchConfig(name="sys-tiny", family="dense", n_layers=2,
+                     d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                     vocab=64, vocab_pad_to=8, dtype="float32")
+    tc = TrainConfig(steps=30, seq_len=32, global_batch=4,
+                     opt=OptConfig(lr=3e-3, warmup_steps=5),
+                     ckpt_dir=os.path.join(str(tmp_path), "ck"),
+                     ckpt_every=10)
+    hit = {"armed": True}
+
+    def hook(s):
+        if s == 15 and hit["armed"]:
+            hit["armed"] = False
+            from repro.train import NodeFailure
+            raise NodeFailure("chaos")
+
+    h = train(cfg, tc, fault_hook=hook)
+    clean = train(cfg, TrainConfig(steps=30, seq_len=32, global_batch=4,
+                                   opt=OptConfig(lr=3e-3, warmup_steps=5)))
+    assert h["restarts"] == 1
+    np.testing.assert_allclose(h["loss"][-3:], clean["loss"][-3:],
+                               rtol=1e-5)
+
+
+def test_engine_epoch_bound_property():
+    """Every simulation terminates within the 2T+2 epoch bound."""
+    for m in (1, 7, 20):
+        sc = paper_scenario(n_maps=m, n_reduces=2, n_vms=5)
+        out = engine._simulate_jit(engine.from_scenario(sc))
+        assert np.isfinite(float(out.makespan[0]))

@@ -1,0 +1,177 @@
+"""Training substrate tests: convergence, checkpoint atomicity + resume
+bit-exactness, kill-and-restore fault tolerance, straggler watchdog,
+elastic resharding, optimizer semantics.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, init_model
+from repro.train import (NodeFailure, OptConfig, TrainConfig, checkpoint,
+                         data, optimizer, train)
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, vocab_pad_to=8,
+                  dtype="float32")
+
+
+def _tc(tmp_path=None, **kw):
+    base = dict(steps=30, seq_len=32, global_batch=4,
+                opt=OptConfig(lr=3e-3, warmup_steps=5, clip_norm=1.0),
+                ckpt_every=10, log_every=100)
+    if tmp_path is not None:
+        base["ckpt_dir"] = os.path.join(str(tmp_path), "ckpt")
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_loss_decreases(tmp_path):
+    h = train(TINY, _tc())
+    first = np.mean(h["loss"][:5])
+    last = np.mean(h["loss"][-5:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_resume_bit_exact(tmp_path):
+    """Interrupt at 30, resume to 60 == one uninterrupted 60-step run."""
+    h_full = train(TINY, _tc(steps=60))            # no ckpt dir: fresh run
+
+    class Abort(Exception):
+        pass
+
+    def hook(s):
+        if s == 30:
+            raise Abort                            # hard process kill
+
+    with pytest.raises(Abort):
+        train(TINY, _tc(tmp_path, steps=60), fault_hook=hook)
+    h_res = train(TINY, _tc(tmp_path, steps=60))   # restart: resumes at 30
+    assert h_res["resumed_at"] == 30
+    np.testing.assert_allclose(h_res["loss"], h_full["loss"][30:], rtol=1e-5)
+
+
+def test_kill_and_restore(tmp_path):
+    """Injected node failure at step 25 -> restore from 20 and replay."""
+    fails = {"armed": True}
+
+    def hook(s):
+        if s == 25 and fails["armed"]:
+            fails["armed"] = False
+            raise NodeFailure("injected")
+
+    h = train(TINY, _tc(tmp_path, steps=40), fault_hook=hook)
+    assert h["restarts"] == 1
+    assert len(h["loss"]) >= 40 - 20               # replayed from 20
+    h_clean = train(TINY, _tc(steps=40))
+    np.testing.assert_allclose(h["loss"][-5:], h_clean["loss"][-5:],
+                               rtol=1e-6)          # replay is bit-exact
+
+
+def test_straggler_watchdog():
+    import time as _t
+
+    def hook(s):
+        if s == 20:
+            _t.sleep(1.0)                          # induced straggler
+
+    h = train(TINY, _tc(steps=25), fault_hook=hook)
+    assert 20 in h["straggler_steps"]
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    root = str(tmp_path / "c")
+    tree = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 2))}}
+    checkpoint.save(root, 7, tree)
+    # a stale .tmp dir (simulated crash) must be invisible to restore
+    os.makedirs(os.path.join(root, "step_00000009.tmp"))
+    assert checkpoint.latest_step(root) == 7
+    step, got, _ = checkpoint.restore(root, tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(4.0))
+
+
+def test_checkpoint_retention(tmp_path):
+    root = str(tmp_path / "c")
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(root, s, tree, keep=2)
+    assert checkpoint.all_steps(root) == [4, 5]
+
+
+def test_elastic_resharding(tmp_path):
+    """Save unsharded, restore onto a 4-device mesh with a new sharding."""
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint
+root = os.environ["CKPT_ROOT"]
+tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+checkpoint.save(root, 1, tree)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+sh = {"w": NamedSharding(mesh, P("data", "model"))}
+step, got, _ = checkpoint.restore(root, tree, shardings=sh)
+assert step == 1
+assert got["w"].sharding == sh["w"], got["w"].sharding
+np.testing.assert_array_equal(np.asarray(got["w"]),
+                              np.arange(64.0).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+    env = dict(os.environ, CKPT_ROOT=str(tmp_path / "e"),
+               PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, cwd=os.getcwd())
+    assert "ELASTIC_OK" in out.stdout, out.stderr
+
+
+def test_data_determinism_and_sharding():
+    dcfg = data.DataConfig(vocab=97, seq_len=16, global_batch=8)
+    b1 = data.batch_at(dcfg, 5)
+    b2 = data.batch_at(dcfg, 5)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    b3 = data.batch_at(dcfg, 6)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+    # shards partition the batch deterministically and differ pairwise
+    s0 = data.batch_at(dcfg, 5, shard=0, n_shards=4)
+    s1 = data.batch_at(dcfg, 5, shard=1, n_shards=4)
+    assert s0["inputs"].shape == (2, 16)
+    assert not np.array_equal(s0["inputs"], s1["inputs"])
+    assert (b1["inputs"] < 97).all() and (b1["inputs"] >= 0).all()
+
+
+def test_optimizer_semantics():
+    params = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
+    grads = {"w": jnp.full((4,), 2.0), "b": jnp.ones((2,))}
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=100_000,
+                    clip_norm=1e9, weight_decay=0.0)
+    st = optimizer.init(params)
+    p1, st1, m = optimizer.update(cfg, grads, st, params)
+    # first AdamW step moves each coord by ~lr * sign(grad)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               1.0 - 0.1 * np.ones(4), rtol=1e-3)
+    assert float(m["grad_norm"]) == pytest.approx(np.sqrt(4 * 4 + 2), rel=1e-5)
+    # clipping engages
+    cfg2 = OptConfig(lr=0.1, warmup_steps=0, total_steps=100_000,
+                     clip_norm=0.1, weight_decay=0.0)
+    p2, _, m2 = optimizer.update(cfg2, grads, st, params)
+    assert np.all(np.abs(np.asarray(p2["w"]) - 1.0)
+                  <= np.abs(np.asarray(p1["w"]) - 1.0) + 1e-7)
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    lrs = [float(optimizer.schedule(cfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
