@@ -15,9 +15,11 @@ import numpy as np
 from repro.core import sweep
 
 
-def throughput_rows(batch_sizes=(64, 512, 2048), reps=3):
+def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
+                    mixed_policies=False):
     rows = []
     rng = np.random.default_rng(0)
+    tag = "_mixedpol" if mixed_policies else ""
     for n in batch_sizes:
         params = dict(
             n_maps=rng.integers(1, 21, n).astype(np.int32),
@@ -30,6 +32,9 @@ def throughput_rows(batch_sizes=(64, 512, 2048), reps=3):
                                   ).astype(np.float32),
             job_data=rng.choice([2e5, 4e5, 8e5], n).astype(np.float32),
         )
+        if mixed_policies:
+            params["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+            params["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
         batch = sweep.grid_arrays(params, pad_tasks=21, pad_vms=9)
         out = sweep.simulate_batch(batch)
         out.makespan.block_until_ready()
@@ -39,10 +44,15 @@ def throughput_rows(batch_sizes=(64, 512, 2048), reps=3):
         dt = (time.perf_counter() - t0) / reps
         us_per_call = dt * 1e6
         scen_per_s = n / dt
-        rows.append((f"sweep_throughput_b{n}", us_per_call,
+        rows.append((f"sweep_throughput{tag}_b{n}", us_per_call,
                      f"{scen_per_s:.0f}_scen/s"))
     return rows
 
 
 def all_rows():
-    return throughput_rows()
+    # mixed-policy row: same grid with random (sched, binding) per scenario —
+    # policy diversity is data, so one lowering serves all scenarios *within*
+    # the batch (this row still traces separately from the default row, whose
+    # params dict bakes the policies in as constants)
+    return (throughput_rows()
+            + throughput_rows(batch_sizes=(2048,), mixed_policies=True))

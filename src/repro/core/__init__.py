@@ -12,14 +12,16 @@ Public API:
 """
 from . import engine, network, refsim, sweep, workload
 from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
-                     VM_MEDIUM, VM_SMALL, VM_TYPES, DatacenterSpec, JobSpec,
-                     NetworkSpec, Scenario, VMSpec, paper_scenario)
+                     VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
+                     DatacenterSpec, JobSpec, NetworkSpec, Scenario,
+                     SchedPolicy, VMSpec, paper_scenario)
 from .engine import JobMetrics, ScenarioArrays, SimOutput
 from .workload import ChipSpec, StepCost
 
 __all__ = [
     "engine", "network", "refsim", "sweep", "workload",
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
+    "SchedPolicy", "BindingPolicy",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "SimOutput",

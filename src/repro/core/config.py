@@ -9,8 +9,75 @@ into arrays for the vectorized engine.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from dataclasses import dataclass, field
 from typing import Sequence
+
+
+# ---------------------------------------------------------------------------
+# Scheduling & binding policies (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+class SchedPolicy(enum.IntEnum):
+    """Per-VM cloudlet scheduling discipline (CloudSim's scheduler family).
+
+    TIME_SHARED  — CloudletSchedulerTimeShared: all assigned cloudlets run
+        concurrently; ``n`` 1-PE cloudlets on a VM with ``pes`` PEs at
+        ``mips`` each progress at ``mips * min(1, pes / n)`` (fluid
+        processor sharing).
+    SPACE_SHARED — CloudletSchedulerSpaceShared: at most ``pes`` cloudlets
+        run concurrently, each pinned to a dedicated PE at full ``mips``;
+        the rest wait in a per-VM FIFO queue ordered by (ready time,
+        task id).
+
+    Values are stable wire constants: they are stored as i32 scalars in
+    :class:`~repro.core.engine.ScenarioArrays`, so batches may mix policies
+    under ``vmap`` without retracing.
+    """
+    TIME_SHARED = 0
+    SPACE_SHARED = 1
+
+
+class BindingPolicy(enum.IntEnum):
+    """Broker task→VM binding strategy (DatacenterBroker extension point).
+
+    ROUND_ROBIN  — CloudSim's default: one rolling VM pointer across all
+        submissions (task ``k`` → VM ``k mod V``).
+    LEAST_LOADED — greedy: each task (in submission order) goes to the VM
+        with the smallest accumulated ``assigned_MI / (mips * pes)`` load
+        estimate (full-VM capacity, so multi-PE VMs are not undervalued);
+        ties break to the lowest VM index.  The load accumulator is float32
+        in every layer so the oracle and the engine pick identical VMs.
+    PACKED       — locality-style packing (cf. Locality Sim, PAPERS.md):
+        tasks fill PE *slots* in VM order — task ``k`` lands on the VM
+        owning slot ``k mod total_pes`` where slots are laid out
+        ``[vm0]*pes0 ++ [vm1]*pes1 ++ …`` — so consecutive tasks of a job
+        (which share input splits) co-locate until a VM's PEs are full.
+
+    Binding is resolved at *encoding* time into the per-task ``task_vm``
+    field (the broker binds before execution, as CloudSim does); the policy
+    id rides along in ``ScenarioArrays`` for provenance.
+    """
+    ROUND_ROBIN = 0
+    LEAST_LOADED = 1
+    PACKED = 2
+
+
+def base_task_lengths_f32(length_mi, n_maps, n_reduces, reduce_factor):
+    """The f32 op sequence every layer's binding-load estimate shares:
+
+        map_len    = L / M
+        reduce_len = rf * L / R
+
+    with all operands float32 and each op rounding to float32.  Pure
+    arithmetic, so it serves ``np.float32`` scalars (the oracle, host
+    encoding) and traced f32 jnp arrays (``encode_cell``) identically.
+    Keep it in ONE place: LEAST_LOADED resolves argmin ties bit-for-bit
+    identically across refsim / ``from_scenario`` / ``encode_cell`` only
+    while every layer uses this exact sequence (DESIGN.md §3.3).
+    Returns ``(map_len, reduce_len)``.
+    """
+    return length_mi / n_maps, reduce_factor * length_mi / n_reduces
 
 
 # ---------------------------------------------------------------------------
@@ -88,6 +155,8 @@ class Scenario:
     jobs: Sequence[JobSpec] = field(default_factory=lambda: (JOB_SMALL,))
     datacenter: DatacenterSpec = field(default_factory=DatacenterSpec)
     network: NetworkSpec = field(default_factory=NetworkSpec)
+    sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED
+    binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN
 
     def total_tasks(self) -> int:
         return sum(j.n_maps + j.n_reduces for j in self.jobs)
@@ -116,8 +185,12 @@ JOB_TYPES = {"small": JOB_SMALL, "medium": JOB_MEDIUM, "big": JOB_BIG}
 
 def paper_scenario(*, job: str = "small", vm: str = "small", n_vms: int = 3,
                    n_maps: int = 1, n_reduces: int = 1,
-                   network_delay: bool = True) -> Scenario:
+                   network_delay: bool = True,
+                   sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED,
+                   binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN,
+                   ) -> Scenario:
     """The paper's §5 experimental cell: one job, homogeneous VMs."""
     j = dataclasses.replace(JOB_TYPES[job], n_maps=n_maps, n_reduces=n_reduces)
     return Scenario(vms=(VM_TYPES[vm],) * n_vms, jobs=(j,),
-                    network=NetworkSpec(enabled=network_delay))
+                    network=NetworkSpec(enabled=network_delay),
+                    sched_policy=sched_policy, binding_policy=binding_policy)

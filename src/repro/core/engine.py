@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import Scenario
+from . import network
+from .config import (BindingPolicy, Scenario, SchedPolicy,
+                     base_task_lengths_f32)
 
 _BIG = 1e30          # stand-in for +inf that survives arithmetic
 _TIME_EPS = 1e-6     # relative tie window for simultaneous events
@@ -46,7 +48,7 @@ class ScenarioArrays(NamedTuple):
     # tasks
     task_job: jax.Array        # i32[T] job index
     task_is_reduce: jax.Array  # bool[T]
-    task_vm: jax.Array         # i32[T] round-robin VM binding
+    task_vm: jax.Array         # i32[T] policy-resolved VM binding
     task_valid: jax.Array      # bool[T]
     task_mult: jax.Array       # f32[T] straggler length multiplier
     # jobs
@@ -68,6 +70,12 @@ class ScenarioArrays(NamedTuple):
     kappa_in: jax.Array        # f32
     kappa_shuffle: jax.Array   # f32
     net_cost_per_unit: jax.Array  # f32
+    # policies (i32 scalars — data, not trace constants: one lowering serves
+    # batches mixing policies under vmap; see config.SchedPolicy)
+    sched_policy: jax.Array    # i32 (0 time-shared | 1 space-shared)
+    binding_policy: jax.Array  # i32 (0 RR | 1 least-loaded | 2 packed);
+    #                            already resolved into task_vm, kept as
+    #                            provenance alongside the per-task binding
 
 
 class SimOutput(NamedTuple):
@@ -93,6 +101,59 @@ class JobMetrics(NamedTuple):
     reduce_avg_exec: jax.Array
 
 
+def bind_tasks(binding_policy, task_valid, task_len, vm_mips, vm_pes,
+               vm_valid) -> jax.Array:
+    """Resolve the broker's task→VM binding as data (DESIGN.md §3.2).
+
+    ``binding_policy`` may be a traced i32 scalar, so a vmapped batch can
+    mix :class:`~repro.core.config.BindingPolicy` values without retracing;
+    all three strategies are computed and selected branch-free.  ``task_len``
+    is the *base* (pre-straggler-multiplier) length — the broker binds
+    before execution, so multipliers must not influence placement.  The
+    LEAST_LOADED estimate is ``assigned_MI / (mips * pes)`` (full-VM
+    capacity, so multi-PE VMs are not undervalued) accumulated in float32,
+    matching the oracle's bookkeeping bit for bit so both layers pick
+    identical VMs.
+    """
+    task_valid = jnp.asarray(task_valid, bool)
+    task_len = jnp.asarray(task_len, jnp.float32)
+    vm_mips = jnp.asarray(vm_mips, jnp.float32)
+    vm_valid = jnp.asarray(vm_valid, bool)
+    T = task_valid.shape[0]
+    bp = jnp.asarray(binding_policy, jnp.int32)
+    validi = task_valid.astype(jnp.int32)
+    counter = jnp.cumsum(validi) - validi          # submission-order index
+    n_vms = jnp.maximum(jnp.sum(vm_valid.astype(jnp.int32)), 1)
+    rr = counter % n_vms
+
+    # PACKED: fill PE slots [vm0]*pes0 ++ [vm1]*pes1 ++ … cyclically.
+    pes_i = jnp.where(vm_valid, jnp.asarray(vm_pes, jnp.int32), 0)
+    total_pes = jnp.maximum(jnp.sum(pes_i), 1)
+    slot = counter % total_pes
+    cum_pes = jnp.cumsum(pes_i)
+    packed = jnp.sum((slot[:, None] >= cum_pes[None, :]).astype(jnp.int32),
+                     axis=1)
+
+    # LEAST_LOADED: greedy argmin over f32 load estimate (MI / mips).
+    load0 = jnp.where(vm_valid, 0.0, jnp.float32(_BIG))
+
+    vm_pes_f = jnp.asarray(vm_pes, jnp.float32)
+
+    def ll_step(i, carry):
+        load, out = carry
+        v = jnp.argmin(load).astype(jnp.int32)
+        add = jnp.where(task_valid[i],
+                        task_len[i] / (vm_mips[v] * vm_pes_f[v]), 0.0)
+        return load.at[v].add(add), out.at[i].set(v)
+
+    _, ll = jax.lax.fori_loop(0, T, ll_step,
+                              (load0, jnp.zeros(T, jnp.int32)))
+
+    vm = jnp.select([bp == BindingPolicy.ROUND_ROBIN,
+                     bp == BindingPolicy.LEAST_LOADED], [rr, ll], packed)
+    return jnp.where(task_valid, vm, 0).astype(jnp.int32)
+
+
 def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
                   pad_jobs: int | None = None,
                   pad_vms: int | None = None) -> ScenarioArrays:
@@ -102,21 +163,44 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     V = pad_vms or len(sc.vms)
     assert T >= sc.total_tasks() and J >= len(sc.jobs) and V >= len(sc.vms)
 
+    f32 = np.float32
     t_job = np.zeros(T, np.int32)
     t_red = np.zeros(T, bool)
-    t_vm = np.zeros(T, np.int32)
     t_val = np.zeros(T, bool)
+    # Binding-load base lengths via the one shared f32 op sequence
+    # (config.base_task_lengths_f32) so every layer resolves LEAST_LOADED
+    # argmin ties identically.
+    t_len = np.zeros(T, f32)
     k = 0
-    rr = 0
     for ji, job in enumerate(sc.jobs):
+        map_l, red_l = base_task_lengths_f32(
+            f32(job.length_mi), f32(job.n_maps), f32(job.n_reduces),
+            f32(job.reduce_factor))
         for phase, n in ((False, job.n_maps), (True, job.n_reduces)):
             for _ in range(n):
                 t_job[k], t_red[k], t_val[k] = ji, phase, True
-                t_vm[k] = rr % len(sc.vms)
-                rr += 1
+                t_len[k] = red_l if phase else map_l
                 k += 1
 
-    f32 = np.float32
+    vm_mips = _padf([v.mips for v in sc.vms], V, fill=1.0)
+    vm_pes = _padf([v.pes for v in sc.vms], V, fill=1.0)
+    vm_valid = np.arange(V) < len(sc.vms)
+    if sc.binding_policy == BindingPolicy.LEAST_LOADED:
+        # f32-sensitive: go through the one shared jnp implementation
+        t_vm = np.asarray(bind_tasks(int(sc.binding_policy), t_val, t_len,
+                                     vm_mips, vm_pes, vm_valid), np.int32)
+    else:
+        # integer-exact fast paths — skip a JAX dispatch (+ per-padding
+        # compile) per encoded scenario on the host path; equality with
+        # bind_tasks is pinned by the encode_cell round-trip test
+        counter = np.cumsum(t_val) - t_val      # submission-order index
+        if sc.binding_policy == BindingPolicy.PACKED:
+            slots = np.repeat(np.arange(len(sc.vms)),
+                              [int(v.pes) for v in sc.vms])
+            t_vm = slots[counter % len(slots)]
+        else:                                   # ROUND_ROBIN
+            t_vm = counter % len(sc.vms)
+        t_vm = np.where(t_val, t_vm, 0).astype(np.int32)
     return ScenarioArrays(
         task_job=t_job, task_is_reduce=t_red, task_vm=t_vm, task_valid=t_val,
         task_mult=np.ones(T, f32),
@@ -127,15 +211,17 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
         job_submit=_padf([j.submit_time for j in sc.jobs], J),
         job_reduce_factor=_padf([j.reduce_factor for j in sc.jobs], J),
         job_valid=np.arange(J) < len(sc.jobs),
-        vm_mips=_padf([v.mips for v in sc.vms], V, fill=1.0),
-        vm_pes=_padf([v.pes for v in sc.vms], V, fill=1.0),
+        vm_mips=vm_mips,
+        vm_pes=vm_pes,
         vm_cost=_padf([v.cost_per_sec for v in sc.vms], V),
-        vm_valid=np.arange(V) < len(sc.vms),
+        vm_valid=vm_valid,
         net_enabled=f32(1.0 if sc.network.enabled else 0.0),
         net_bw=f32(sc.network.bw_mbps),
         kappa_in=f32(sc.network.kappa_in),
         kappa_shuffle=f32(sc.network.kappa_shuffle),
         net_cost_per_unit=f32(sc.network.cost_per_unit),
+        sched_policy=np.int32(sc.sched_policy),
+        binding_policy=np.int32(sc.binding_policy),
     )
 
 
@@ -156,7 +242,21 @@ def _padi(xs, n):
 # ---------------------------------------------------------------------------
 
 def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
-    """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly."""
+    """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly.
+
+    Both scheduling policies run branch-free inside the one while_loop body:
+
+    * TIME_SHARED — every ready task runs; the fluid share
+      ``mips * min(1, pes / n)`` throttles crowded VMs.
+    * SPACE_SHARED — the admission gate keeps at most ``pes`` tasks running
+      per VM (so the same share formula degenerates to full ``mips``), and
+      pending tasks are admitted in (ready time, task index) priority order
+      as slots free up.
+
+    Every live epoch fires at least one start or completion (arrival events
+    are only scheduled when a PE slot is free), so ``2T + 2`` epochs bound
+    the loop; rates are evaluated exactly once per epoch.
+    """
     T = sc.task_job.shape[0]
     J = sc.job_length.shape[0]
     V = sc.vm_mips.shape[0]
@@ -164,10 +264,10 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
     # --- derived per-task/per-job quantities (traced: sweepable) ----------
     n_maps_f = sc.job_n_maps.astype(jnp.float32)
     n_red_f = sc.job_n_reduces.astype(jnp.float32)
-    stage_in = (sc.net_enabled * sc.kappa_in * sc.job_data
-                / ((n_maps_f + 1.0) * sc.net_bw))
-    shuffle = (sc.net_enabled * sc.kappa_shuffle * sc.job_data
-               / ((n_maps_f + 1.0) * sc.net_bw))
+    stage_in = network.transfer_delay(sc.kappa_in, sc.job_data, n_maps_f,
+                                      sc.net_bw, sc.net_enabled)
+    shuffle = network.transfer_delay(sc.kappa_shuffle, sc.job_data, n_maps_f,
+                                     sc.net_bw, sc.net_enabled)
     map_len = sc.job_length / n_maps_f
     red_len = sc.job_reduce_factor * sc.job_length / n_red_f
     task_len = jnp.where(sc.task_is_reduce, red_len[sc.task_job],
@@ -182,6 +282,22 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
     is_map = sc.task_valid & ~sc.task_is_reduce
     maps_left0 = jax.ops.segment_sum(is_map.astype(jnp.int32), sc.task_job,
                                      num_segments=J)
+
+    is_space = sc.sched_policy == SchedPolicy.SPACE_SHARED
+    task_pes = sc.vm_pes[sc.task_vm]
+    # One-hot encodings of the task->VM / task->job maps, hoisted out of the
+    # loop: per-epoch reductions become small dense matmuls instead of
+    # scatters (segment_sum), which XLA:CPU serializes — this halves the
+    # sweep benchmark's time per call.  The sums are exact (0/1 operands),
+    # so results are bit-identical to the scatter formulation.
+    vm_onehot = (sc.task_vm[:, None] == jnp.arange(V)[None, :]
+                 ).astype(jnp.float32)
+    job_onehot = (sc.task_job[:, None] == jnp.arange(J)[None, :]
+                  ).astype(jnp.float32)
+    # Loop-invariant pieces of the space-shared admission priority.
+    idx = jnp.arange(T)
+    same_vm = sc.task_vm[:, None] == sc.task_vm[None, :]
+    idx_earlier = idx[None, :] < idx[:, None]
 
     class Carry(NamedTuple):
         time: jax.Array
@@ -200,24 +316,30 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
                ready=ready0, maps_left=maps_left0,
                epoch=jnp.int32(0))
 
-    def rates(running):
-        n_on_vm = jax.ops.segment_sum(running.astype(jnp.float32),
-                                      sc.task_vm, num_segments=V)
-        share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
-                                         / jnp.maximum(n_on_vm, 1.0))
-        return jnp.where(running, share[sc.task_vm], 0.0)
+    def vm_counts(running):
+        return running.astype(jnp.float32) @ vm_onehot
 
     def cond(c: Carry):
         unfinished = sc.task_valid & (c.finish >= _BIG / 2)
-        return jnp.any(unfinished) & (c.epoch < 4 * T + 8)
+        return jnp.any(unfinished) & (c.epoch < 2 * T + 2)
 
     def body(c: Carry):
-        r = rates(c.running)
+        # single rates evaluation per epoch (space-shared keeps n <= pes, so
+        # the min() clamp makes this formula serve both policies)
+        n_on_vm = vm_counts(c.running)
+        share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
+                                         / jnp.maximum(n_on_vm, 1.0))
+        r = jnp.where(c.running, vm_onehot @ share, 0.0)
+
         eta = jnp.where(c.running, c.time + c.rem / jnp.maximum(r, 1e-30),
                         _BIG)
         not_started = sc.task_valid & ~c.running & (c.finish >= _BIG / 2) \
             & (c.start >= _BIG / 2)
-        arr = jnp.where(not_started, c.ready, _BIG)
+        # Space-shared: a pending task only defines an arrival event while
+        # its VM has a free PE slot; otherwise a completion epoch admits it.
+        has_slot = (task_pes - vm_onehot @ n_on_vm) > 0.5
+        arr = jnp.where(not_started & (~is_space | has_slot),
+                        jnp.maximum(c.ready, c.time), _BIG)
         t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
         live = t_next < _BIG / 2
         tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
@@ -225,16 +347,15 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
         # advance fluid state
         rem = jnp.where(c.running, c.rem - (t_next - c.time) * r, c.rem)
 
-        # completions
+        # completions (all tied events fire in this one epoch)
         done_now = live & c.running & (eta <= t_next + tie)
         finish = jnp.where(done_now, t_next, c.finish)
         running = c.running & ~done_now
         rem = jnp.where(done_now, 0.0, rem)
 
         # job map-phase completion -> release reduces after shuffle delay
-        maps_done_now = jax.ops.segment_sum(
-            (done_now & ~sc.task_is_reduce).astype(jnp.int32),
-            sc.task_job, num_segments=J)
+        maps_done_now = ((done_now & ~sc.task_is_reduce)
+                         .astype(jnp.float32) @ job_onehot).astype(jnp.int32)
         maps_left = c.maps_left - maps_done_now
         phase_done = (maps_left == 0) & (c.maps_left > 0)
         red_ready = jnp.where(phase_done, t_next + shuffle, _BIG)
@@ -242,8 +363,18 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
             sc.task_is_reduce & phase_done[sc.task_job],
             red_ready[sc.task_job], c.ready)
 
-        # arrivals (time-shared: start immediately when ready)
-        start_now = live & not_started & (c.ready <= t_next + tie)
+        # arrivals: time-shared starts every ready task immediately;
+        # space-shared admits the (ready, index)-first eligible tasks into
+        # the PE slots left free after this epoch's completions.
+        eligible = live & not_started & (c.ready <= t_next + tie)
+        free_after = task_pes - vm_onehot @ (n_on_vm - vm_counts(done_now))
+        key = c.ready
+        higher_prio = same_vm & ((key[None, :] < key[:, None])
+                                 | ((key[None, :] == key[:, None])
+                                    & idx_earlier))
+        rank = jnp.sum((higher_prio & eligible[None, :])
+                       .astype(jnp.float32), axis=1)
+        start_now = eligible & (~is_space | (rank < free_after))
         start = jnp.where(start_now, t_next, c.start)
         running = running | start_now
 

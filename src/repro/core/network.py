@@ -20,18 +20,33 @@ from __future__ import annotations
 from .config import JobSpec, NetworkSpec
 
 
+def transfer_delay(kappa, data_mb, n_maps, bw_mbps, enabled=1.0):
+    """The single kappa formula both simulators share (DESIGN.md §2.1):
+
+        delay = enabled * kappa * S / ((M + 1) * BW)
+
+    Pure arithmetic on its operands, so it works identically for Python
+    floats (the sequential oracle) and traced ``jnp`` arrays (the
+    vectorized engine and the Pallas kernel wrapper) — the two layers
+    cannot drift.  ``enabled`` is 0/1; when 0 the result must be exactly
+    0.0 even if ``bw_mbps`` is 0 (disabled networks often leave bw unset),
+    so the denominator is padded by ``1 - enabled`` — a no-op when enabled,
+    branch-free when traced.
+    """
+    return (enabled * kappa * data_mb
+            / ((n_maps + 1.0) * (bw_mbps + (1.0 - enabled))))
+
+
 def stage_in_delay(job: JobSpec, net: NetworkSpec) -> float:
     """Delay between job submission and its map tasks becoming ready."""
-    if not net.enabled:
-        return 0.0
-    return net.kappa_in * job.data_mb / ((job.n_maps + 1) * net.bw_mbps)
+    return transfer_delay(net.kappa_in, job.data_mb, job.n_maps,
+                          net.bw_mbps, 1.0 if net.enabled else 0.0)
 
 
 def shuffle_delay(job: JobSpec, net: NetworkSpec) -> float:
     """Delay between the last map finishing and reduces becoming ready."""
-    if not net.enabled:
-        return 0.0
-    return net.kappa_shuffle * job.data_mb / ((job.n_maps + 1) * net.bw_mbps)
+    return transfer_delay(net.kappa_shuffle, job.data_mb, job.n_maps,
+                          net.bw_mbps, 1.0 if net.enabled else 0.0)
 
 
 def delay_time(job: JobSpec, net: NetworkSpec) -> float:

@@ -7,11 +7,16 @@ This module mirrors IOTSim's entity structure (paper Figures 5–7) directly:
   §4.5 extension to CloudSim's single-list broker;
 * :class:`JobTracker`    — splits a job into ``MapCloudlet``/``ReduceCloudlet``
   tasks, tracks map completion, triggers the shuffle and the reduce launch;
-* :class:`TaskTracker`   — binds tasks to VMs (round-robin, as CloudSim's
-  DatacenterBroker does) and reports status;
-* the datacentre executes cloudlets under **time-shared** scheduling
-  (CloudletSchedulerTimeShared): ``n`` concurrent 1-PE cloudlets on a VM with
-  ``pes`` PEs at ``mips`` each run at ``mips * min(1, pes / n)``.
+* :class:`TaskTracker`   — binds tasks to VMs per the scenario's
+  :class:`~repro.core.config.BindingPolicy` (round-robin as CloudSim's
+  DatacenterBroker does, least-loaded, or locality-style packing) and
+  manages per-VM execution slots;
+* the datacentre executes cloudlets under the scenario's
+  :class:`~repro.core.config.SchedPolicy`: **time-shared**
+  (CloudletSchedulerTimeShared — ``n`` concurrent 1-PE cloudlets on a VM
+  with ``pes`` PEs at ``mips`` each run at ``mips * min(1, pes / n)``) or
+  **space-shared** (CloudletSchedulerSpaceShared — at most ``pes`` run at
+  full ``mips``; the rest wait in a per-VM (ready, id)-ordered queue).
 
 The event loop is a classic heapq calendar; processor-sharing completions are
 computed lazily between calendar events (rates only change at arrivals and
@@ -28,8 +33,11 @@ import itertools
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from . import network
-from .config import Scenario
+from .config import (BindingPolicy, Scenario, SchedPolicy,
+                     base_task_lengths_f32)
 
 _EPS = 1e-9
 
@@ -92,15 +100,40 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 class TaskTracker:
-    """Binds tasks to VMs round-robin and tracks per-VM active sets."""
+    """Binds tasks to VMs per the broker's binding policy and manages the
+    per-VM execution state: active sets (both policies) and, under
+    SPACE_SHARED, the (ready, id)-ordered wait queues for the PE slots.
+    """
 
-    def __init__(self, n_vms: int):
-        self.n_vms = n_vms
+    def __init__(self, vms, sched_policy=SchedPolicy.TIME_SHARED,
+                 binding_policy=BindingPolicy.ROUND_ROBIN):
+        self.vms = tuple(vms)
+        self.n_vms = len(self.vms)
+        self.sched = SchedPolicy(sched_policy)
+        self.binding = BindingPolicy(binding_policy)
         self._rr = 0
-        self.active: list[set[int]] = [set() for _ in range(n_vms)]
+        # least-loaded bookkeeping: float32 on purpose — the vectorized
+        # engine accumulates in f32, and both layers must pick the same VM
+        self._load = np.zeros(self.n_vms, np.float32)
+        # packed slots: [vm0]*pes0 ++ [vm1]*pes1 ++ ...
+        self._slots = [vi for vi, vm in enumerate(self.vms)
+                       for _ in range(int(vm.pes))]
+        self.active: list[set[int]] = [set() for _ in range(self.n_vms)]
+        self.queue: list[list[tuple[float, int]]] = \
+            [[] for _ in range(self.n_vms)]
 
-    def bind(self, task: Task) -> None:
-        task.vm = self._rr % self.n_vms
+    def bind(self, task: Task, base_len: np.float32) -> None:
+        """``base_len`` is the pre-multiplier task length computed with the
+        f32 op sequence shared by every layer (see engine.bind_tasks)."""
+        if self.binding == BindingPolicy.LEAST_LOADED:
+            vm = int(np.argmin(self._load))
+            self._load[vm] += base_len / (np.float32(self.vms[vm].mips)
+                                          * np.float32(self.vms[vm].pes))
+        elif self.binding == BindingPolicy.PACKED:
+            vm = self._slots[self._rr % len(self._slots)]
+        else:
+            vm = self._rr % self.n_vms
+        task.vm = vm
         self._rr += 1
 
     def launch(self, tid: int, task: Task) -> None:
@@ -108,6 +141,20 @@ class TaskTracker:
 
     def complete(self, tid: int, task: Task) -> None:
         self.active[task.vm].discard(tid)
+
+    # ---- SPACE_SHARED slot management ------------------------------------
+
+    def has_free_slot(self, vm: int) -> bool:
+        return len(self.active[vm]) < int(self.vms[vm].pes)
+
+    def enqueue(self, tid: int, task: Task) -> None:
+        heapq.heappush(self.queue[task.vm], (task.ready, tid))
+
+    def admit(self, vm: int) -> int | None:
+        """Pop the highest-priority queued task if a PE slot is free."""
+        if self.queue[vm] and self.has_free_slot(vm):
+            return heapq.heappop(self.queue[vm])[1]
+        return None
 
 
 class JobTracker:
@@ -149,12 +196,20 @@ class IoTSimBroker:
                  length_multipliers: list[float] | None = None):
         self.scenario = scenario
         self.jt = JobTracker(scenario)
-        self.tt = TaskTracker(len(scenario.vms))
-        # Bind every task round-robin in submission order: per job, the map
-        # list is submitted first, then (later, after maps) the reduce list;
+        self.tt = TaskTracker(scenario.vms, scenario.sched_policy,
+                              scenario.binding_policy)
+        # Bind every task in submission order: per job, the map list is
+        # submitted first, then (later, after maps) the reduce list;
         # CloudSim's broker keeps one rolling VM pointer across submissions.
+        # Base lengths for the load estimate use the shared f32 op sequence
+        # (not the f64 task lengths) so binding matches the engine exactly.
+        f32 = np.float32
         for t in self.jt.tasks:
-            self.tt.bind(t)
+            job = scenario.jobs[t.job]
+            map_l, red_l = base_task_lengths_f32(
+                f32(job.length_mi), f32(job.n_maps), f32(job.n_reduces),
+                f32(job.reduce_factor))
+            self.tt.bind(t, red_l if t.is_reduce else map_l)
         if length_multipliers is not None:
             assert len(length_multipliers) == len(self.jt.tasks)
             for t, m in zip(self.jt.tasks, length_multipliers):
@@ -182,19 +237,36 @@ class IoTSimBroker:
         running: set[int] = set()
         now = 0.0
         n_events = 0
+        space = self.tt.sched == SchedPolicy.SPACE_SHARED
 
-        def rate(tid: int) -> float:
-            t = tasks[tid]
-            n = len(self.tt.active[t.vm])
-            vm = vms[t.vm]
-            return vm.mips * min(1.0, vm.pes / n)
+        def rates() -> dict[int, float]:
+            """Per-running-task rates — computed once per event epoch.
+
+            Under SPACE_SHARED the slot gate keeps ``n <= pes``, so every
+            running task owns a full PE at ``mips``; the time-shared fluid
+            share degenerates to the same value, hence one formula.
+            """
+            out = {}
+            for tid in running:
+                t = tasks[tid]
+                n = len(self.tt.active[t.vm])
+                vm = vms[t.vm]
+                out[tid] = vm.mips * min(1.0, vm.pes / n)
+            return out
+
+        def start_task(tid: int) -> None:
+            task = tasks[tid]
+            task.start = now
+            self.tt.launch(tid, task)
+            running.add(tid)
 
         while calendar or running:
             n_events += 1
+            r = rates()
             # Next completion under current processor-sharing rates.
             t_comp, comp_ids = math.inf, []
             for tid in running:
-                eta = now + tasks[tid].remaining / rate(tid)
+                eta = now + tasks[tid].remaining / r[tid]
                 if eta < t_comp - _EPS:
                     t_comp, comp_ids = eta, [tid]
                 elif eta <= t_comp + _EPS:
@@ -204,7 +276,7 @@ class IoTSimBroker:
 
             # Advance fluid state.
             for tid in running:
-                tasks[tid].remaining -= (t_next - now) * rate(tid)
+                tasks[tid].remaining -= (t_next - now) * r[tid]
             now = t_next
 
             if t_comp <= t_evt:            # completions fire first
@@ -221,13 +293,19 @@ class IoTSimBroker:
                                 tasks[rid].ready = r_ready
                                 heapq.heappush(calendar,
                                                (r_ready, next(seq), rid))
+                    # freed PE slot -> admit the next queued task
+                    if space:
+                        qid = self.tt.admit(task.vm)
+                        if qid is not None:
+                            start_task(qid)
             else:                          # arrivals: task(s) become ready
                 while calendar and calendar[0][0] <= now + _EPS:
                     _, _, tid = heapq.heappop(calendar)
                     task = tasks[tid]
-                    task.start = now      # time-shared: starts immediately
-                    self.tt.launch(tid, task)
-                    running.add(tid)
+                    if space and not self.tt.has_free_slot(task.vm):
+                        self.tt.enqueue(tid, task)   # wait for a PE slot
+                    else:
+                        start_task(tid)
 
         return SimResult(tasks=tasks, jobs=self._job_metrics(tasks),
                          finish_time=now, n_events=n_events)

@@ -21,7 +21,7 @@ import math
 
 import numpy as np
 
-from .config import Scenario
+from .config import BindingPolicy, Scenario, SchedPolicy
 from .network import shuffle_delay, stage_in_delay
 
 
@@ -41,6 +41,11 @@ def simulate_speculative(scenario: Scenario, multipliers: list[float], *,
     Returns per-phase times + totals with and without speculation.
     """
     assert len(scenario.jobs) == 1, "study uses single-job cells"
+    # this analytic model hardcodes time-shared sharing + round-robin
+    # binding; reject other policies rather than silently mis-simulating
+    assert scenario.sched_policy == SchedPolicy.TIME_SHARED \
+        and scenario.binding_policy == BindingPolicy.ROUND_ROBIN, \
+        "simulate_speculative models TIME_SHARED + ROUND_ROBIN only"
     job = scenario.jobs[0]
     vms = scenario.vms
     V = len(vms)

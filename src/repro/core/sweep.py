@@ -24,9 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import Scenario
-from .engine import (JobMetrics, ScenarioArrays, from_scenario, job_metrics,
-                     simulate_arrays)
+from .config import (BindingPolicy, Scenario, SchedPolicy,
+                     base_task_lengths_f32)
+from .engine import (JobMetrics, ScenarioArrays, bind_tasks, from_scenario,
+                     job_metrics, simulate_arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -53,11 +54,14 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 job_length, job_data, *, pad_tasks: int, pad_vms: int,
                 reduce_factor=0.5, net_enabled=1.0, net_bw=1000.0,
                 kappa_in=17.0, kappa_shuffle=4.25, net_cost_per_unit=1.0,
-                task_mult=None) -> ScenarioArrays:
+                task_mult=None, sched_policy=0,
+                binding_policy=0) -> ScenarioArrays:
     """One homogeneous paper cell as traced arrays.
 
-    All scalar args may be traced — ``vmap`` this over parameter grids.
-    ``pad_tasks``/``pad_vms`` are static paddings (>= max M+R / max V).
+    All scalar args may be traced — ``vmap`` this over parameter grids;
+    ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
+    may mix policies (Group 5).  ``pad_tasks``/``pad_vms`` are static
+    paddings (>= max M+R / max V).
     """
     f32 = partial(jnp.asarray, dtype=jnp.float32)
     i32 = partial(jnp.asarray, dtype=jnp.int32)
@@ -68,26 +72,36 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     valid = t < n_tasks
     if task_mult is None:
         task_mult = jnp.ones(pad_tasks, jnp.float32)
+    vm_valid = jnp.arange(pad_vms) < n_vms
+    vm_mips_a = jnp.where(vm_valid, f32(vm_mips), 1.0)
+    vm_pes_a = jnp.where(vm_valid, f32(vm_pes), 1.0)
+    map_len, red_len = base_task_lengths_f32(
+        f32(job_length), n_maps.astype(jnp.float32),
+        n_reduces.astype(jnp.float32), f32(reduce_factor))
+    base_len = jnp.where(is_red, red_len, map_len)
     return ScenarioArrays(
         task_job=jnp.zeros(pad_tasks, jnp.int32),
-        task_is_reduce=is_red,
-        task_vm=(t % jnp.maximum(n_vms, 1)).astype(jnp.int32),
+        task_is_reduce=is_red & valid,
+        task_vm=bind_tasks(binding_policy, valid, base_len, vm_mips_a,
+                           vm_pes_a, vm_valid),
         task_valid=valid,
         task_mult=task_mult,
-        job_length=f32([job_length])[0:1] * jnp.ones(1, jnp.float32),
+        job_length=f32(job_length)[None],
         job_data=f32(job_data)[None],
         job_n_maps=n_maps[None],
         job_n_reduces=n_reduces[None],
         job_submit=jnp.zeros(1, jnp.float32),
         job_reduce_factor=f32(reduce_factor)[None],
         job_valid=jnp.ones(1, bool),
-        vm_mips=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_mips), 1.0),
-        vm_pes=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_pes), 1.0),
-        vm_cost=jnp.where(jnp.arange(pad_vms) < n_vms, f32(vm_cost), 0.0),
-        vm_valid=jnp.arange(pad_vms) < n_vms,
+        vm_mips=vm_mips_a,
+        vm_pes=vm_pes_a,
+        vm_cost=jnp.where(vm_valid, f32(vm_cost), 0.0),
+        vm_valid=vm_valid,
         net_enabled=f32(net_enabled), net_bw=f32(net_bw),
         kappa_in=f32(kappa_in), kappa_shuffle=f32(kappa_shuffle),
         net_cost_per_unit=f32(net_cost_per_unit),
+        sched_policy=i32(sched_policy),
+        binding_policy=i32(binding_policy),
     )
 
 
@@ -135,7 +149,9 @@ def simulate_batch_sharded(batch: ScenarioArrays,
 
 
 def paper_grid(m_range=range(1, 21), vm_numbers=(3,), vm_types=("small",),
-               job_types=("small",), network_delay=True) -> ScenarioArrays:
+               job_types=("small",), network_delay=True,
+               sched_policy=SchedPolicy.TIME_SHARED,
+               binding_policy=BindingPolicy.ROUND_ROBIN) -> ScenarioArrays:
     """Cartesian paper grid (Groups 1–4) as a device-side batch."""
     from .config import JOB_TYPES, VM_TYPES
     cells = [(m, v, VM_TYPES[vt], JOB_TYPES[jt])
@@ -152,7 +168,39 @@ def paper_grid(m_range=range(1, 21), vm_numbers=(3,), vm_types=("small",),
         job_data=np.array([c[3].data_mb for c in cells], np.float32),
         net_enabled=np.full(len(cells), 1.0 if network_delay else 0.0,
                             np.float32),
+        sched_policy=np.full(len(cells), int(sched_policy), np.int32),
+        binding_policy=np.full(len(cells), int(binding_policy), np.int32),
     )
     pad_tasks = max(m_range) + 1
     pad_vms = max(vm_numbers)
     return grid_arrays(params, pad_tasks=pad_tasks, pad_vms=pad_vms)
+
+
+def policy_grid(m_range=range(1, 21), n_vms=3, vm_type="small",
+                job_type="small", network_delay=True) -> tuple[
+                    ScenarioArrays, list[tuple[SchedPolicy, BindingPolicy]]]:
+    """Group 5 (beyond-paper): the paper's Group-1 sweep crossed with every
+    (sched_policy × binding_policy) combination — one mixed-policy batch,
+    one lowering.  Returns the batch plus the per-block policy labels
+    (block i covers rows [i*len(m_range), (i+1)*len(m_range))).
+    """
+    from .config import JOB_TYPES, VM_TYPES
+    combos = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+    cells = [(m, sp, bp) for sp, bp in combos for m in m_range]
+    vm, job = VM_TYPES[vm_type], JOB_TYPES[job_type]
+    n = len(cells)
+    params = dict(
+        n_maps=np.array([c[0] for c in cells], np.int32),
+        n_reduces=np.ones(n, np.int32),
+        n_vms=np.full(n, n_vms, np.int32),
+        vm_mips=np.full(n, vm.mips, np.float32),
+        vm_pes=np.full(n, float(vm.pes), np.float32),
+        vm_cost=np.full(n, vm.cost_per_sec, np.float32),
+        job_length=np.full(n, job.length_mi, np.float32),
+        job_data=np.full(n, job.data_mb, np.float32),
+        net_enabled=np.full(n, 1.0 if network_delay else 0.0, np.float32),
+        sched_policy=np.array([int(c[1]) for c in cells], np.int32),
+        binding_policy=np.array([int(c[2]) for c in cells], np.int32),
+    )
+    batch = grid_arrays(params, pad_tasks=max(m_range) + 1, pad_vms=n_vms)
+    return batch, combos

@@ -22,7 +22,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .config import JobSpec, NetworkSpec, Scenario, VMSpec
+from .config import (BindingPolicy, JobSpec, NetworkSpec, Scenario,
+                     SchedPolicy, VMSpec)
 
 
 # TPU v5e (the assignment's hardware constants).
@@ -54,14 +55,19 @@ class StepCost:
 
 
 def step_scenario(cost: StepCost, chip: ChipSpec, n_devices: int, *,
-                  straggler_sigma: float = 0.0,
-                  seed: int = 0) -> tuple[Scenario, np.ndarray | None]:
+                  straggler_sigma: float = 0.0, seed: int = 0,
+                  sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED,
+                  binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN,
+                  ) -> tuple[Scenario, np.ndarray | None]:
     """One training step as an IOTSim scenario.
 
     Device compute becomes M = n_devices map tasks of length = per-device
     FLOPs on VMs of MIPS = effective FLOP/s (bounded by the memory-roofline
     term); the collective phase becomes the shuffle delay.  Straggler
     multipliers (lognormal, σ = ``straggler_sigma``) model slow chips.
+    ``sched_policy=SPACE_SHARED`` models gang-scheduled exclusive chips
+    (the realistic TPU regime — one step-shard per core, no oversubscribe);
+    ``binding_policy`` picks the shard→chip placement strategy.
     """
     terms = cost.roofline_terms(chip)
     eff_rate = cost.flops / max(terms["compute_s"], terms["memory_s"])
@@ -80,7 +86,9 @@ def step_scenario(cost: StepCost, chip: ChipSpec, n_devices: int, *,
         rng = np.random.default_rng(seed)
         mult = np.ones(n_devices + 1)
         mult[:n_devices] = rng.lognormal(0.0, straggler_sigma, n_devices)
-    return Scenario(vms=(vm,) * n_devices, jobs=(job,), network=net), mult
+    return Scenario(vms=(vm,) * n_devices, jobs=(job,), network=net,
+                    sched_policy=sched_policy,
+                    binding_policy=binding_policy), mult
 
 
 def simulate_training(cost: StepCost, chip: ChipSpec, *, n_devices: int,

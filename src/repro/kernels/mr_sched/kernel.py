@@ -10,8 +10,11 @@ here a whole sweep tile stays resident, which is the same
 locality transformation flash attention applies to softmax state.
 
 Scope: one job per scenario (the paper's §5 experiment cells — exactly
-what ``repro.core.sweep.encode_cell`` produces), arbitrary M/R/VM mix.
-Semantics oracle: ``repro.core.engine.simulate_arrays`` (ref.py).
+what ``repro.core.sweep.encode_cell`` produces), arbitrary M/R/VM mix,
+both scheduling policies (time-shared fluid PS and space-shared PE slots;
+the per-scenario i32 ``sched_policy`` gate mirrors the engine's, so one
+tile may mix policies).  Semantics oracle:
+``repro.core.engine.simulate_arrays`` (ref.py).
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ _BIG = 1e30
 
 
 def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
-            shuffle_ref, vm_mips_ref, vm_pes_ref,
+            shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
             start_ref, finish_ref, *, T: int, V: int, n_epochs: int):
     task_len = task_len_ref[...]                 # (tile, T) f32
     task_vm = task_vm_ref[...]                   # (tile, T) i32
@@ -34,10 +37,17 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
     shuffle = shuffle_ref[...]                   # (tile, 1) f32
     vm_mips = vm_mips_ref[...]                   # (tile, V)
     vm_pes = vm_pes_ref[...]                     # (tile, V)
+    is_space = sched_ref[...] != 0               # (tile, 1) policy gate
     vm_onehot = (task_vm[..., None]
                  == jax.lax.broadcasted_iota(jnp.int32,
                                              (1, 1, V), 2))  # (tile,T,V)
     vm_onehot = vm_onehot.astype(jnp.float32)
+    task_pes = jnp.einsum("stv,sv->st", vm_onehot, vm_pes)
+    # Loop-invariant pieces of the space-shared admission priority.
+    same_vm = jnp.einsum("siv,sjv->sij", vm_onehot, vm_onehot)  # (tile,T,T)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (1, T, T), 1)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (1, T, T), 2)
+    idx_earlier = iota_j < iota_i
 
     tile = task_len.shape[0]
     state = (
@@ -53,6 +63,8 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         time, rem, running, start, finish, ready = st
         runf = running.astype(jnp.float32)
         n_on_vm = jnp.einsum("stv,st->sv", vm_onehot, runf)
+        # space-shared admission keeps n <= pes, so the time-shared fluid
+        # share degenerates to full mips there: one rate formula for both.
         share = vm_mips * jnp.minimum(1.0, vm_pes
                                       / jnp.maximum(n_on_vm, 1.0))
         rate = jnp.einsum("stv,sv->st", vm_onehot, share) * runf
@@ -60,7 +72,12 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
                         + rem / jnp.maximum(rate, 1e-30), _BIG)
         not_started = valid & ~running & (finish >= _BIG / 2) \
             & (start >= _BIG / 2)
-        arr = jnp.where(not_started, ready, _BIG)
+        # space-shared: pending tasks only define arrival events while a PE
+        # slot is free; otherwise a completion epoch admits them.
+        has_slot = (task_pes - jnp.einsum("stv,sv->st", vm_onehot,
+                                          n_on_vm)) > 0.5
+        arr = jnp.where(not_started & (~is_space | has_slot),
+                        jnp.maximum(ready, time[:, None]), _BIG)
         t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
         live = t_next < _BIG / 2
         tie = 1e-6 * jnp.maximum(t_next, 1.0)
@@ -79,15 +96,29 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         maps_done_prev = jnp.sum((valid & ~is_red & done_now)
                                  .astype(jnp.int32), axis=1)
         phase_done = (maps_left == 0) & (maps_done_prev > 0)
-        ready = jnp.where(phase_done[:, None] & is_red,
-                          (t_next + shuffle[:, 0])[:, None], ready)
+        ready_next = jnp.where(phase_done[:, None] & is_red,
+                               (t_next + shuffle[:, 0])[:, None], ready)
 
-        start_now = live[:, None] & not_started \
+        # arrivals: time-shared starts every ready task; space-shared
+        # admits the (ready, index)-first eligible tasks into the PE slots
+        # left free after this epoch's completions (matching the engine,
+        # reduces released this epoch compete from the next epoch on).
+        eligible = live[:, None] & not_started \
             & (ready <= (t_next + tie)[:, None])
+        free_after = task_pes - jnp.einsum(
+            "stv,sv->st", vm_onehot,
+            n_on_vm - jnp.einsum("stv,st->sv", vm_onehot,
+                                 done_now.astype(jnp.float32)))
+        higher_prio = (same_vm > 0.5) \
+            & ((ready[:, None, :] < ready[:, :, None])
+               | ((ready[:, None, :] == ready[:, :, None]) & idx_earlier))
+        rank = jnp.sum((higher_prio & eligible[:, None, :])
+                       .astype(jnp.float32), axis=2)
+        start_now = eligible & (~is_space | (rank < free_after))
         start = jnp.where(start_now, t_next[:, None], start)
         running = running | start_now
         time = jnp.where(live, t_next, time)
-        return (time, rem, running, start, finish, ready)
+        return (time, rem, running, start, finish, ready_next)
 
     _, _, _, start, finish, _ = jax.lax.fori_loop(0, n_epochs, epoch, state)
     start_ref[...] = start
@@ -96,16 +127,19 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def mr_schedule(task_len, task_vm, ready0, is_red, valid, shuffle,
-                vm_mips, vm_pes, *, tile: int = 64,
+                vm_mips, vm_pes, sched_policy=None, *, tile: int = 64,
                 interpret: bool = True):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
-    shuffle: (N,1) f32; vm_mips/vm_pes: (N,V) f32.
+    shuffle: (N,1) f32; vm_mips/vm_pes: (N,V) f32; sched_policy: (N,1) i32
+    (0 time-shared | 1 space-shared; defaults to all time-shared).
     Returns (start, finish): (N,T) f32.
     """
     N, T = task_len.shape
     V = vm_mips.shape[1]
+    if sched_policy is None:
+        sched_policy = jnp.zeros((N, 1), jnp.int32)
     tile = min(tile, N)
     while N % tile:
         tile //= 2
@@ -121,10 +155,11 @@ def mr_schedule(task_len, task_vm, ready0, is_red, valid, shuffle,
         functools.partial(_kernel, T=T, V=V, n_epochs=2 * T + 2),
         grid=grid,
         in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
-                  spec_v, spec_v],
+                  spec_v, spec_v, spec_1],
         out_specs=(spec_t, spec_t),
         out_shape=(jax.ShapeDtypeStruct((N, T), jnp.float32),
                    jax.ShapeDtypeStruct((N, T), jnp.float32)),
         interpret=interpret,
-    )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes)
+    )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes,
+      sched_policy)
     return out

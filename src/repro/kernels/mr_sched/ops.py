@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import network
 from repro.core.engine import ScenarioArrays
 
 from .kernel import mr_schedule
@@ -21,10 +22,11 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
         interpret = jax.default_backend() != "tpu"
     nm = batch.job_n_maps.astype(jnp.float32)[:, 0]        # (N,)
     nr = batch.job_n_reduces.astype(jnp.float32)[:, 0]
-    stage_in = (batch.net_enabled * batch.kappa_in * batch.job_data[:, 0]
-                / ((nm + 1.0) * batch.net_bw))
-    shuffle = (batch.net_enabled * batch.kappa_shuffle
-               * batch.job_data[:, 0] / ((nm + 1.0) * batch.net_bw))
+    stage_in = network.transfer_delay(batch.kappa_in, batch.job_data[:, 0],
+                                      nm, batch.net_bw, batch.net_enabled)
+    shuffle = network.transfer_delay(batch.kappa_shuffle,
+                                     batch.job_data[:, 0], nm,
+                                     batch.net_bw, batch.net_enabled)
     map_len = batch.job_length[:, 0] / nm
     red_len = batch.job_reduce_factor[:, 0] * batch.job_length[:, 0] / nr
     task_len = jnp.where(batch.task_is_reduce, red_len[:, None],
@@ -40,4 +42,5 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
         shuffle.astype(jnp.float32)[:, None],
         batch.vm_mips.astype(jnp.float32),
         batch.vm_pes.astype(jnp.float32),
+        batch.sched_policy.astype(jnp.int32)[:, None],
         tile=tile, interpret=interpret)

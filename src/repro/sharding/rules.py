@@ -114,6 +114,8 @@ def spec_for(mesh: Mesh, shape: tuple, axes: tuple,
                 continue
             if not real:
                 continue
+            if isinstance(real, tuple) and len(real) == 1:
+                real = real[0]      # 1-tuple != bare axis in PartitionSpec
             cands.append((prio, dim, real))
     cands.sort(key=lambda c: c[0])
     assignment: dict[int, object] = {}

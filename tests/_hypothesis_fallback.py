@@ -1,0 +1,66 @@
+"""Seeded stand-in for ``hypothesis`` when it is not installed.
+
+The real library is declared in ``requirements.txt`` and used when present
+(CI installs it); this shim keeps the property-test modules collectable and
+meaningful on bare machines.  It implements just the strategy surface these
+tests use — ``integers``, ``sampled_from``, ``booleans``, ``tuples`` — and a
+``@given`` that replays ``max_examples`` deterministic draws from a
+per-test seed (crc32 of the test name), so failures reproduce.
+"""
+from __future__ import annotations
+
+
+import zlib
+from types import SimpleNamespace
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def _sampled_from(xs):
+    xs = list(xs)
+    return _Strategy(lambda rng: xs[int(rng.integers(len(xs)))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def _tuples(*ss):
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in ss))
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                             booleans=_booleans, tuples=_tuples)
+
+
+def given(*ss):
+    def deco(fn):
+        def run():
+            n = getattr(run, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                fn(*(s.sample(rng) for s in ss))
+        # no functools.wraps: pytest must see run's zero-arg signature,
+        # not the wrapped function's strategy parameters
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

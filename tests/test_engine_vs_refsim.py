@@ -6,11 +6,17 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import (JOB_MEDIUM, JOB_SMALL, VM_MEDIUM, VM_SMALL, Scenario,
-                        engine, paper_scenario, refsim, sweep)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # seeded fallback, same test surface
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import (JOB_MEDIUM, JOB_SMALL, VM_MEDIUM, VM_SMALL,
+                        BindingPolicy, Scenario, SchedPolicy, engine,
+                        paper_scenario, refsim, sweep)
 
 FIELDS = ("avg_exec", "max_exec", "min_exec", "makespan", "delay_time",
           "vm_cost", "network_cost", "map_avg_exec", "reduce_avg_exec")
@@ -36,6 +42,20 @@ def test_no_network_delay():
     assert_parity(paper_scenario(n_maps=7, network_delay=False))
 
 
+def test_disabled_network_with_zero_bw():
+    """enabled=False must yield exactly zero delay even when bw_mbps=0
+    (regression: the shared transfer_delay helper divided by bw)."""
+    from repro.core import NetworkSpec
+    sc = paper_scenario(n_maps=4, network_delay=False).replace(
+        network=NetworkSpec(enabled=False, bw_mbps=0.0))
+    ref = refsim.simulate(sc)
+    assert ref.job().delay_time == pytest.approx(0.0, abs=1e-9)
+    got = engine.simulate(sc)
+    assert np.isfinite(float(got.makespan[0]))
+    assert float(got.makespan[0]) == pytest.approx(ref.job().makespan,
+                                                  rel=2e-4)
+
+
 def test_multi_reduce():
     assert_parity(paper_scenario(n_maps=8, n_reduces=3))
 
@@ -57,6 +77,100 @@ def test_padding_invariance():
     for f in FIELDS:
         np.testing.assert_allclose(float(getattr(base, f)[0]),
                                    float(getattr(padded, f)[0]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Policy layer: engine must match the oracle for every policy combination
+# ---------------------------------------------------------------------------
+
+ALL_POLICIES = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+
+
+def _random_scenario(rng) -> Scenario:
+    vms = tuple(rng.choice([VM_SMALL, VM_MEDIUM])
+                for _ in range(int(rng.integers(1, 7))))
+    jobs = tuple(
+        dataclasses.replace(
+            rng.choice([JOB_SMALL, JOB_MEDIUM]),
+            n_maps=int(rng.integers(1, 9)),
+            n_reduces=int(rng.integers(1, 3)),
+            submit_time=float(rng.choice([0.0, 0.0, 500.0])))
+        for _ in range(int(rng.integers(1, 3))))
+    return Scenario(vms=vms, jobs=jobs)
+
+
+def _padded_parity(sc: Scenario, rtol=1e-3, atol=1e-2, msg=""):
+    """Parity on a fixed padding so the whole sweep shares one lowering."""
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc, pad_tasks=24, pad_jobs=2, pad_vms=9)
+    got = engine._simulate_jit(arrs)
+    for ji in range(len(sc.jobs)):
+        for f in FIELDS:
+            np.testing.assert_allclose(
+                float(getattr(got, f)[ji]), getattr(ref.jobs[ji], f),
+                rtol=rtol, atol=atol, err_msg=f"{msg} job {ji} field {f}")
+
+
+@pytest.mark.parametrize("sp,bp", ALL_POLICIES,
+                         ids=[f"{sp.name}-{bp.name}" for sp, bp in ALL_POLICIES])
+def test_policy_parity_seeded_sweep(sp, bp):
+    """>= 50 seeded random scenarios per (sched x binding) combination."""
+    rng = np.random.default_rng(1000 * int(sp) + int(bp))
+    for _ in range(50):
+        sc = dataclasses.replace(_random_scenario(rng),
+                                 sched_policy=sp, binding_policy=bp)
+        _padded_parity(sc, msg=f"{sp.name}/{bp.name}")
+
+
+def test_policy_parity_paper_cells():
+    """Deterministic paper cells under every policy combination."""
+    for sp, bp in ALL_POLICIES:
+        for m, v in ((1, 3), (7, 3), (20, 9)):
+            _padded_parity(paper_scenario(n_maps=m, n_vms=v, vm="medium",
+                                          sched_policy=sp,
+                                          binding_policy=bp),
+                           msg=f"{sp.name}/{bp.name} M{m}V{v}")
+
+
+def test_space_shared_slot_gate():
+    """Space-shared never runs more than pes tasks at once on a VM."""
+    sc = paper_scenario(n_maps=12, n_vms=2, vm="medium",
+                        sched_policy=SchedPolicy.SPACE_SHARED)
+    res = refsim.simulate(sc)
+    events = sorted({t.start for t in res.tasks} |
+                    {t.finish for t in res.tasks})
+    for ts in events:
+        mid = ts + 1e-6
+        for vi, vm in enumerate(sc.vms):
+            n = sum(1 for t in res.tasks
+                    if t.vm == vi and t.start <= mid < t.finish)
+            assert n <= vm.pes
+
+
+def test_binding_policies_bind_as_specified():
+    """task_vm data matches each policy's documented placement rule."""
+    sc = paper_scenario(n_maps=6, n_reduces=2, n_vms=3, vm="medium")
+    # ROUND_ROBIN: rolling pointer
+    rr = engine.from_scenario(dataclasses.replace(
+        sc, binding_policy=BindingPolicy.ROUND_ROBIN))
+    np.testing.assert_array_equal(np.asarray(rr.task_vm),
+                                  np.arange(8) % 3)
+    # PACKED: fill pes=2 slots per VM before moving on
+    pk = engine.from_scenario(dataclasses.replace(
+        sc, binding_policy=BindingPolicy.PACKED))
+    np.testing.assert_array_equal(np.asarray(pk.task_vm),
+                                  np.array([0, 0, 1, 1, 2, 2, 0, 0]))
+    # LEAST_LOADED on heterogeneous VMs prefers the high-capacity VM
+    het = Scenario(vms=(VM_SMALL, VM_MEDIUM),
+                   jobs=(dataclasses.replace(JOB_SMALL, n_maps=3),),
+                   binding_policy=BindingPolicy.LEAST_LOADED)
+    ll = engine.from_scenario(het)
+    # task0 -> VM0 (tie at 0 load); the rest -> VM1: medium's capacity
+    # (mips*pes = 1000) is 4x small's, so its load estimate stays lowest
+    np.testing.assert_array_equal(np.asarray(ll.task_vm)[:4], [0, 1, 1, 1])
+    # refsim agrees with the encoded binding
+    br = refsim.IoTSimBroker(het)
+    assert [t.vm for t in br.jt.tasks] == list(np.asarray(ll.task_vm)[:4])
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +249,51 @@ def test_sweep_grid_matches_oracle():
             np.testing.assert_allclose(float(out.network_cost[i, 0]),
                                        ref.network_cost, rtol=2e-4)
             i += 1
+
+
+def test_encode_cell_roundtrips_from_scenario():
+    """Device-side cell encoding == host-side encoding of the same cell."""
+    for sp, bp in ALL_POLICIES:
+        sc = paper_scenario(n_maps=5, n_reduces=2, n_vms=3, vm="medium",
+                            sched_policy=sp, binding_policy=bp)
+        host = engine.from_scenario(sc, pad_tasks=9, pad_vms=4)
+        vm = sc.vms[0]
+        dev = sweep.encode_cell(
+            n_maps=5, n_reduces=2, n_vms=3, vm_mips=vm.mips,
+            vm_pes=float(vm.pes), vm_cost=vm.cost_per_sec,
+            job_length=sc.jobs[0].length_mi, job_data=sc.jobs[0].data_mb,
+            pad_tasks=9, pad_vms=4, sched_policy=int(sp),
+            binding_policy=int(bp))
+        for f in engine.ScenarioArrays._fields:
+            np.testing.assert_allclose(
+                np.asarray(getattr(host, f), np.float32),
+                np.asarray(getattr(dev, f), np.float32),
+                err_msg=f"field {f} ({sp.name}/{bp.name})")
+
+
+def test_least_loaded_binding_precision_roundtrip():
+    """Huge workload-scale lengths: host- and device-side encoders must
+    still bind identically (regression: f64-vs-f32 base-length drift could
+    flip LEAST_LOADED argmin ties)."""
+    job = dataclasses.replace(JOB_SMALL, length_mi=5.1e16, n_maps=17,
+                              n_reduces=2)
+    sc = Scenario(vms=(VM_SMALL, VM_MEDIUM, VM_SMALL), jobs=(job,),
+                  binding_policy=BindingPolicy.LEAST_LOADED)
+    host = engine.from_scenario(sc, pad_tasks=19, pad_vms=3)
+    dev = sweep.encode_cell(
+        n_maps=17, n_reduces=2, n_vms=3, vm_mips=250.0, vm_pes=1.0,
+        vm_cost=1.0, job_length=5.1e16, job_data=job.data_mb,
+        pad_tasks=19, pad_vms=3,
+        binding_policy=int(BindingPolicy.LEAST_LOADED))
+    # homogeneous cell for the device side; check the host self-consistency
+    # against refsim and the f32 op sequence on the device side
+    br = refsim.IoTSimBroker(sc)
+    assert [t.vm for t in br.jt.tasks] == list(np.asarray(host.task_vm)[:19])
+    hom = Scenario(vms=(VM_SMALL,) * 3, jobs=(job,),
+                   binding_policy=BindingPolicy.LEAST_LOADED)
+    np.testing.assert_array_equal(
+        np.asarray(engine.from_scenario(hom, pad_tasks=19).task_vm),
+        np.asarray(dev.task_vm))
 
 
 def test_stack_scenarios_matches_single():

@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # seeded fallback, same test surface
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -131,7 +136,7 @@ def test_wkv6_block_size_invariance():
 # mr_sched
 # ---------------------------------------------------------------------------
 
-def _random_batch(n, seed=0):
+def _random_batch(n, seed=0, mixed_policies=False):
     from repro.core import sweep
     rng = np.random.default_rng(seed)
     params = dict(
@@ -144,14 +149,15 @@ def _random_batch(n, seed=0):
         job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
         job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
     )
+    if mixed_policies:
+        params["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+        params["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
     return sweep.grid_arrays(params, pad_tasks=23, pad_vms=9)
 
 
-@pytest.mark.parametrize("tile", [8, 32])
-def test_mr_sched_matches_engine(tile):
+def _assert_schedule_matches(batch, tile):
     from repro.kernels.mr_sched import schedule
     from repro.kernels.mr_sched.ref import schedule_ref
-    batch = _random_batch(32, seed=tile)
     s_ref, f_ref = schedule_ref(batch)
     s_got, f_got = schedule(batch, tile=tile)
     valid = np.asarray(batch.task_valid)
@@ -161,6 +167,18 @@ def test_mr_sched_matches_engine(tile):
     np.testing.assert_allclose(np.where(valid, f_got, 0),
                                np.where(valid, np.asarray(f_ref), 0),
                                rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("tile", [8, 32])
+def test_mr_sched_matches_engine(tile):
+    _assert_schedule_matches(_random_batch(32, seed=tile), tile)
+
+
+@pytest.mark.parametrize("tile", [8, 32])
+def test_mr_sched_matches_engine_mixed_policies(tile):
+    """One tile mixing sched/binding policies matches the engine oracle."""
+    _assert_schedule_matches(
+        _random_batch(32, seed=100 + tile, mixed_policies=True), tile)
 
 
 def test_mr_sched_reproduces_paper_metrics():

@@ -5,7 +5,7 @@ Table IV).  These tests pin the *faithful reproduction*; EXPERIMENTS.md
 import numpy as np
 import pytest
 
-from repro.core import paper_scenario, refsim
+from repro.core import SchedPolicy, paper_scenario, refsim
 from repro.core import engine
 
 M_SWEEP = range(1, 21)
@@ -127,6 +127,43 @@ def test_group3_vm_config_reductions():
     small, med, large = (sweep_avg(v) for v in ("small", "medium", "large"))
     assert 1 - med / small == pytest.approx(0.60, abs=0.05)   # ours: 0.58
     assert 1 - large / small == pytest.approx(0.80, abs=0.05)  # ours: 0.805
+
+
+# ---------------------------------------------------------------------------
+# Space-shared analytic sanity: n tasks, 1 VM, 1 PE => serial execution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [2, 5, 8])
+def test_space_shared_serial_on_single_pe(m):
+    """With one 1-PE VM, SPACE_SHARED runs the M maps + 1 reduce strictly
+    back to back: each task at full mips, the next starting the instant the
+    previous finishes.  Closed form (network delay off):
+
+        map_i  exec = L / (M * mips)         finish_i = i * L / (M * mips)
+        reduce exec = 0.5 * L / mips         makespan = 1.5 * L / mips
+    """
+    sc = paper_scenario(n_maps=m, n_reduces=1, n_vms=1,
+                        network_delay=False,
+                        sched_policy=SchedPolicy.SPACE_SHARED)
+    L, mips = sc.jobs[0].length_mi, sc.vms[0].mips
+    res = refsim.simulate(sc)
+    tasks = sorted(res.tasks, key=lambda t: t.start)
+    for prev, nxt in zip(tasks, tasks[1:]):
+        assert nxt.start == pytest.approx(prev.finish, abs=1e-6)
+    for t in tasks[:-1]:                              # maps: full-rate slices
+        assert t.exec_time == pytest.approx(L / (m * mips), rel=1e-9)
+    assert tasks[-1].exec_time == pytest.approx(0.5 * L / mips, rel=1e-9)
+    assert res.finish_time == pytest.approx(1.5 * L / mips, rel=1e-9)
+    # the vectorized engine agrees
+    got = engine.simulate(sc)
+    assert float(got.makespan[0]) == pytest.approx(1.5 * L / mips, rel=1e-4)
+    # time-shared on the same cell finishes the maps together, later
+    ts = refsim.simulate(paper_scenario(n_maps=m, n_reduces=1, n_vms=1,
+                                        network_delay=False))
+    ts_maps = [t for t in ts.tasks if not t.is_reduce]
+    assert min(t.finish for t in ts_maps) == \
+        pytest.approx(max(t.finish for t in ts_maps), rel=1e-9)
+    assert min(t.finish for t in ts_maps) >= tasks[0].finish - 1e-6
 
 
 # ---------------------------------------------------------------------------
