@@ -3,6 +3,10 @@ Table IV), one function per table/figure.  Each returns ``(name,
 us_per_call, derived)`` rows: the timing is for the vectorized engine
 sweep that computes the figure, ``derived`` is the figure's headline
 quantity (so regressions in *either* speed or semantics are visible).
+
+Each group is one declarative :class:`~repro.core.sweep.SweepPlan`
+(DESIGN.md §4); derived quantities read out of the labeled
+:class:`~repro.core.sweep.SweepResult` instead of positional rows.
 """
 from __future__ import annotations
 
@@ -11,27 +15,26 @@ import time
 import numpy as np
 
 from repro.core import paper_scenario, refsim, sweep
+from repro.core.config import BindingPolicy, SchedPolicy
+from repro.core.sweep import axis, product
 
 M_SWEEP = range(1, 21)
 
 
-def _timed(batch, reps=5):
-    fn = sweep.simulate_batch
-    out = fn(batch)
-    out.makespan.block_until_ready()
+def _timed(plan, reps=5):
+    """Time repeated ``plan.run()`` calls (steady-state, post-compile)."""
+    res = plan.run()
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(batch)
-        out.makespan.block_until_ready()
+        res = plan.run()
     us = (time.perf_counter() - t0) / reps * 1e6
-    return out, us
+    return res, us
 
 
 def group1_fig8a():
     """Fig 8a: execution time (avg/max/min) vs MR combination."""
-    batch = sweep.paper_grid(m_range=M_SWEEP)
-    out, us = _timed(batch)
-    avg = out.avg_exec[:, 0]
+    res, us = _timed(product(axis("n_maps", M_SWEEP)))
+    avg = res["avg_exec"]
     drop = float(1 - avg[2] / avg[0])          # rapid early drop
     flatness = float((max(avg[5:]) - min(avg[5:])) / avg[0])
     return [("group1_fig8a_earlydrop", us, f"{drop:.3f}"),
@@ -40,112 +43,103 @@ def group1_fig8a():
 
 def group1_fig8b():
     """Fig 8b: makespan with vs without network delay."""
+    plan = product(axis("n_maps", M_SWEEP),
+                   axis("network_delay", (True, False)))
+    res, us = _timed(plan)
     rows = []
     for nd in (True, False):
-        batch = sweep.paper_grid(m_range=M_SWEEP, network_delay=nd)
-        out, us = _timed(batch)
+        mk = res.select(n_maps=1, network_delay=nd)["makespan"]
         rows.append((f"group1_fig8b_makespan_M1_delay={int(nd)}", us,
-                     f"{float(out.makespan[0, 0]):.1f}"))
+                     f"{float(mk):.1f}"))
     return rows
 
 
 def group2_fig9_table4():
     """Fig 9 (avg exec vs VM number) + Table IV (network cost invariance)."""
-    outs = {}
-    us_total = 0.0
-    for v in (3, 6, 9):
-        batch = sweep.paper_grid(m_range=M_SWEEP, vm_numbers=(v,))
-        outs[v], us = _timed(batch)
-        us_total += us
-    red6 = float(np.mean(1 - outs[6].map_avg_exec[:, 0]
-                         / outs[3].map_avg_exec[:, 0]))
-    red9 = float(np.mean(1 - outs[9].map_avg_exec[:, 0]
-                         / outs[3].map_avg_exec[:, 0]))
+    plan = product(axis("n_maps", M_SWEEP), axis("n_vms", (3, 6, 9)))
+    res, us = _timed(plan)
+    base = res.select(n_vms=3)["map_avg_exec"]
+    red6 = float(np.mean(1 - res.select(n_vms=6)["map_avg_exec"] / base))
+    red9 = float(np.mean(1 - res.select(n_vms=9)["map_avg_exec"] / base))
     # Table IV: exact values + invariance across VM number
-    tbl = np.stack([outs[v].network_cost[:, 0] for v in (3, 6, 9)])
+    tbl = np.stack([res.select(n_vms=v)["network_cost"] for v in (3, 6, 9)])
     invariant = bool(np.allclose(tbl[0], tbl[1]) and np.allclose(tbl[0], tbl[2]))
     expected = 4250.0 / (np.arange(1, 21) + 1)
-    exact = bool(np.allclose(np.asarray(tbl[0]), expected, rtol=1e-4))
+    exact = bool(np.allclose(tbl[0], expected, rtol=1e-4))
     return [
-        ("group2_fig9_reduction_3to6_vms", us_total, f"{red6:.3f}"),
-        ("group2_fig9_reduction_3to9_vms", us_total, f"{red9:.3f}"),
-        ("group2_table4_vm_invariant", us_total, str(invariant)),
-        ("group2_table4_exact_4250_over_Mplus1", us_total, str(exact)),
+        ("group2_fig9_reduction_3to6_vms", us, f"{red6:.3f}"),
+        ("group2_fig9_reduction_3to9_vms", us, f"{red9:.3f}"),
+        ("group2_table4_vm_invariant", us, str(invariant)),
+        ("group2_table4_exact_4250_over_Mplus1", us, str(exact)),
     ]
 
 
 def group3_fig10():
     """Fig 10: avg exec time vs VM configuration (paper ~60%/~80% less)."""
-    outs = {}
-    us_total = 0.0
-    for vt in ("small", "medium", "large"):
-        batch = sweep.paper_grid(m_range=M_SWEEP, vm_types=(vt,))
-        outs[vt], us = _timed(batch)
-        us_total += us
-    s = float(np.mean(outs["small"].avg_exec[:, 0]))
+    plan = product(axis("n_maps", M_SWEEP),
+                   axis("vm_type", ("small", "medium", "large")))
+    res, us = _timed(plan)
+    s = float(np.mean(res.select(vm_type="small")["avg_exec"]))
     rows = []
     for vt, claim in (("medium", 0.60), ("large", 0.80)):
-        r = 1 - float(np.mean(outs[vt].avg_exec[:, 0])) / s
+        r = 1 - float(np.mean(res.select(vm_type=vt)["avg_exec"])) / s
         rows.append((f"group3_fig10_{vt}_reduction(paper~{claim})",
-                     us_total, f"{r:.3f}"))
+                     us, f"{r:.3f}"))
     return rows
 
 
 def group4_fig11():
     """Fig 11: VM computation cost vs job configuration (linear)."""
-    outs = {}
-    us_total = 0.0
-    for jt in ("small", "medium", "big"):
-        batch = sweep.paper_grid(m_range=M_SWEEP, job_types=(jt,))
-        outs[jt], us = _timed(batch)
-        us_total += us
-    s = float(np.mean(outs["small"].vm_cost[:, 0]))
-    m = float(np.mean(outs["medium"].vm_cost[:, 0]))
-    b = float(np.mean(outs["big"].vm_cost[:, 0]))
-    return [("group4_fig11_medium_over_small(expect2)", us_total, f"{m/s:.3f}"),
-            ("group4_fig11_big_over_small(expect4)", us_total, f"{b/s:.3f}")]
+    plan = product(axis("n_maps", M_SWEEP),
+                   axis("job_type", ("small", "medium", "big")))
+    res, us = _timed(plan)
+    s = float(np.mean(res.select(job_type="small")["vm_cost"]))
+    m = float(np.mean(res.select(job_type="medium")["vm_cost"]))
+    b = float(np.mean(res.select(job_type="big")["vm_cost"]))
+    return [("group4_fig11_medium_over_small(expect2)", us, f"{m/s:.3f}"),
+            ("group4_fig11_big_over_small(expect4)", us, f"{b/s:.3f}")]
 
 
 def group5_policies():
     """Group 5 (beyond-paper): scheduling x binding policy comparison.
 
-    One mixed-policy batch (every SchedPolicy x BindingPolicy block over the
+    One mixed-policy plan (every SchedPolicy x BindingPolicy over the
     Group-1 M sweep on medium VMs), one vmapped call — the scenario family
     CloudSim expresses only by swapping scheduler classes and re-running.
     Derived: space-shared/time-shared makespan ratio at M=20 (queueing cost
-    of PE exclusivity) and packed/round-robin ratio under space sharing.
+    of PE exclusivity), packed/round-robin ratio under time sharing, and a
+    *device-side* heterogeneous-VM cell where LEAST_LOADED's capacity
+    estimate beats the rolling pointer (the closed ROADMAP item).
     """
-    import dataclasses
+    plan = product(axis("sched_policy", list(SchedPolicy)),
+                   axis("binding_policy", list(BindingPolicy)),
+                   axis("n_maps", M_SWEEP),
+                   vm_type="medium")
+    res, us = _timed(plan)
 
-    from repro.core import JOB_MEDIUM, VM_MEDIUM, VM_SMALL, Scenario
-    from repro.core.config import BindingPolicy, SchedPolicy
-    batch, combos = sweep.policy_grid(m_range=M_SWEEP, n_vms=3,
-                                      vm_type="medium")
-    out, us = _timed(batch)
-    n_m = len(M_SWEEP)
-    mk = {c: np.asarray(out.makespan[i * n_m:(i + 1) * n_m, 0])
-          for i, c in enumerate(combos)}
-    ts_rr = mk[(SchedPolicy.TIME_SHARED, BindingPolicy.ROUND_ROBIN)]
-    ss_rr = mk[(SchedPolicy.SPACE_SHARED, BindingPolicy.ROUND_ROBIN)]
+    def mk20(sp, bp):
+        return float(res.select(sched_policy=sp, binding_policy=bp,
+                                n_maps=20)["makespan"])
+
+    ts_rr = mk20(SchedPolicy.TIME_SHARED, BindingPolicy.ROUND_ROBIN)
+    ss_rr = mk20(SchedPolicy.SPACE_SHARED, BindingPolicy.ROUND_ROBIN)
     # packed vs RR under TIME sharing: on the homogeneous pes=2 cell the
     # space-shared placements are symmetric (ratio identically 1), but
     # time-shared fluid sharing *does* see the packing imbalance
-    ts_pk = mk[(SchedPolicy.TIME_SHARED, BindingPolicy.PACKED)]
-    # binding on a *heterogeneous* cluster (host-side stacked batch):
-    # least-loaded's capacity estimate vs the rolling pointer
-    job = dataclasses.replace(JOB_MEDIUM, n_maps=12, n_reduces=2)
-    hetero = [Scenario(vms=(VM_MEDIUM,) * 2 + (VM_SMALL,) * 4, jobs=(job,),
-                       sched_policy=SchedPolicy.SPACE_SHARED,
-                       binding_policy=bp) for bp in BindingPolicy]
-    h_out, h_us = _timed(sweep.stack_scenarios(hetero))
-    h_mk = np.asarray(h_out.makespan[:, 0])
+    ts_pk = mk20(SchedPolicy.TIME_SHARED, BindingPolicy.PACKED)
+    # binding on a *heterogeneous* cluster — now a device-side cell: per-VM
+    # mips/pes/cost vectors through the same encode_cell path as the grid
+    hetero = product(axis("binding_policy", list(BindingPolicy)),
+                     vms=("medium",) * 2 + ("small",) * 4,
+                     sched_policy=SchedPolicy.SPACE_SHARED,
+                     n_maps=12, n_reduces=2, job_type="medium")
+    h_res, h_us = _timed(hetero)
+    ll = float(h_res.select(binding_policy=BindingPolicy.LEAST_LOADED)["makespan"])
+    rr = float(h_res.select(binding_policy=BindingPolicy.ROUND_ROBIN)["makespan"])
     return [
-        ("group5_makespan_space/time_M20", us,
-         f"{float(ss_rr[-1] / ts_rr[-1]):.3f}"),
-        ("group5_makespan_packed/rr_time_M20", us,
-         f"{float(ts_pk[-1] / ts_rr[-1]):.3f}"),
-        ("group5_hetero_makespan_leastloaded/rr", h_us,
-         f"{float(h_mk[1] / h_mk[0]):.3f}"),
+        ("group5_makespan_space/time_M20", us, f"{ss_rr / ts_rr:.3f}"),
+        ("group5_makespan_packed/rr_time_M20", us, f"{ts_pk / ts_rr:.3f}"),
+        ("group5_hetero_makespan_leastloaded/rr", h_us, f"{ll / rr:.3f}"),
     ]
 
 

@@ -5,14 +5,44 @@ parameter grid per ``pjit`` call.  We measure scenarios/second on the host
 CPU (single device) and — because the sweep is embarrassingly parallel with
 zero collectives (verified by the dry-run) — the pod-scale figure is
 devices × single-device throughput, reported as the derived column.
+
+The measured path is the declarative API end to end:
+:func:`~repro.core.sweep.zip_`-ed random axes compiled and executed by
+``SweepPlan.run()`` (encode + simulate + labeled readback per call).
+
+``python -m benchmarks.sweep_throughput`` records the rows to
+``BENCH_sweep.json`` at the repo root, the perf-trajectory baseline.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
 
-from repro.core import sweep
+from repro.core.sweep import axis, product, zip_
+
+
+def _random_plan(n, rng, mixed_policies=False):
+    cols = dict(
+        n_maps=rng.integers(1, 21, n).astype(np.int32),
+        n_reduces=np.ones(n, np.int32),
+        n_vms=rng.integers(1, 10, n).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
+        vm_pes=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+        vm_cost=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+        job_length=rng.choice([362880.0, 725760.0, 1451520.0], n
+                              ).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5, 8e5], n).astype(np.float32),
+    )
+    if mixed_policies:
+        cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+        cols["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
+    # one zipped dimension: all columns advance together (a labeled random
+    # scenario list, not a cartesian grid)
+    plan = product(zip_(*(axis(k, v) for k, v in cols.items())))
+    return plan.replace(pad_tasks=21, pad_vms=9)
 
 
 def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
@@ -21,26 +51,11 @@ def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
     rng = np.random.default_rng(0)
     tag = "_mixedpol" if mixed_policies else ""
     for n in batch_sizes:
-        params = dict(
-            n_maps=rng.integers(1, 21, n).astype(np.int32),
-            n_reduces=np.ones(n, np.int32),
-            n_vms=rng.integers(1, 10, n).astype(np.int32),
-            vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
-            vm_pes=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
-            vm_cost=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
-            job_length=rng.choice([362880.0, 725760.0, 1451520.0], n
-                                  ).astype(np.float32),
-            job_data=rng.choice([2e5, 4e5, 8e5], n).astype(np.float32),
-        )
-        if mixed_policies:
-            params["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
-            params["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
-        batch = sweep.grid_arrays(params, pad_tasks=21, pad_vms=9)
-        out = sweep.simulate_batch(batch)
-        out.makespan.block_until_ready()
+        plan = _random_plan(n, rng, mixed_policies)
+        plan.run()                                  # compile + warm caches
         t0 = time.perf_counter()
         for _ in range(reps):
-            sweep.simulate_batch(batch).makespan.block_until_ready()
+            plan.run()
         dt = (time.perf_counter() - t0) / reps
         us_per_call = dt * 1e6
         scen_per_s = n / dt
@@ -53,6 +68,24 @@ def all_rows():
     # mixed-policy row: same grid with random (sched, binding) per scenario —
     # policy diversity is data, so one lowering serves all scenarios *within*
     # the batch (this row still traces separately from the default row, whose
-    # params dict bakes the policies in as constants)
+    # plan leaves the policy columns to encode_cell's defaults)
     return (throughput_rows()
             + throughput_rows(batch_sizes=(2048,), mixed_policies=True))
+
+
+def main() -> None:
+    rows = all_rows()
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
+    payload = {
+        "benchmark": "sweep_throughput (SweepPlan.run end-to-end)",
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    for r in payload["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,54 +3,57 @@
 The paper inherits CloudSim's scheduler family but only ever runs
 CloudletSchedulerTimeShared with round-robin binding; comparing policies
 means swapping Java classes and re-running the JVM per cell.  Here policy
-is *data*: one vmapped call simulates every (SchedPolicy x BindingPolicy)
-combination of the paper's Group-1 sweep at once, and a second part shows
-least-loaded binding rescuing a heterogeneous cluster.
+is an *axis* of a declarative ``SweepPlan`` (DESIGN.md §4): one vmapped
+call simulates every (SchedPolicy x BindingPolicy) combination of the
+paper's Group-1 sweep at once, and a second plan shows least-loaded
+binding rescuing a heterogeneous cluster — now encoded *device-side*
+through per-VM mips/pes/cost vectors (no host-side scenario objects).
 
     PYTHONPATH=src python examples/policy_compare.py
 """
-import dataclasses
 import time
 
-import numpy as np
-
-from repro.core import (JOB_MEDIUM, VM_MEDIUM, VM_SMALL, BindingPolicy,
-                        Scenario, SchedPolicy, refsim, sweep)
+from repro.core import BindingPolicy, SchedPolicy
+from repro.core.sweep import axis, product
 
 M_SWEEP = range(1, 21)
 
 
 def part1_policy_grid():
     print("== Part 1: M-sweep x all 6 policy combos, one vmapped call ==")
-    batch, combos = sweep.policy_grid(m_range=M_SWEEP, n_vms=3,
-                                      vm_type="medium")
+    plan = product(axis("sched_policy", list(SchedPolicy)),
+                   axis("binding_policy", list(BindingPolicy)),
+                   axis("n_maps", M_SWEEP),
+                   vm_type="medium")
     t0 = time.perf_counter()
-    out = sweep.simulate_batch(batch)
-    out.makespan.block_until_ready()
+    res = plan.run()
     dt = time.perf_counter() - t0
-    n_m = len(M_SWEEP)
-    print(f"  {len(combos) * n_m} scenarios in {dt * 1e3:.1f} ms")
+    print(f"  {plan.size} scenarios in {dt * 1e3:.1f} ms")
     print(f"  {'policy':34s} makespan@M1  makespan@M20")
-    for i, (sp, bp) in enumerate(combos):
-        mk = np.asarray(out.makespan[i * n_m:(i + 1) * n_m, 0])
-        print(f"  {sp.name:13s} + {bp.name:12s}     {mk[0]:9.1f}     "
-              f"{mk[-1]:9.1f}")
+    for sp in SchedPolicy:
+        for bp in BindingPolicy:
+            mk = res.select(sched_policy=sp, binding_policy=bp)["makespan"]
+            print(f"  {sp.name:13s} + {bp.name:12s}     {mk[0]:9.1f}     "
+                  f"{mk[-1]:9.1f}")
     print()
 
 
 def part2_heterogeneous_binding():
-    print("== Part 2: binding policy on a heterogeneous cluster (oracle) ==")
+    print("== Part 2: binding policy on a heterogeneous cluster "
+          "(device-side cell) ==")
     # 2 fast + 4 slow VMs: round-robin overloads the slow ones; least-loaded
-    # weighs placement by each VM's capacity (mips x PEs).
-    vms = (VM_MEDIUM,) * 2 + (VM_SMALL,) * 4
-    job = dataclasses.replace(JOB_MEDIUM, n_maps=12, n_reduces=2)
+    # weighs placement by each VM's capacity (mips x PEs).  The mixed cluster
+    # is one per-VM-encoded cell — the sweep never leaves the device.
+    plan = product(axis("binding_policy", list(BindingPolicy)),
+                   vms=("medium",) * 2 + ("small",) * 4,
+                   sched_policy=SchedPolicy.SPACE_SHARED,
+                   n_maps=12, n_reduces=2, job_type="medium")
+    res = plan.run()
     for bp in BindingPolicy:
-        sc = Scenario(vms=vms, jobs=(job,),
-                      sched_policy=SchedPolicy.SPACE_SHARED,
-                      binding_policy=bp)
-        r = refsim.simulate(sc).job()
-        print(f"  {bp.name:12s} makespan={r.makespan:9.1f}s "
-              f"avg_exec={r.avg_exec:8.1f}s vm_cost=${r.vm_cost:9.1f}")
+        r = res.select(binding_policy=bp).to_dict()
+        print(f"  {bp.name:12s} makespan={r['makespan']:9.1f}s "
+              f"avg_exec={r['avg_exec']:8.1f}s vm_cost=${r['vm_cost']:9.1f} "
+              f"util={r['utilization']:.2f}")
     print()
 
 

@@ -1,14 +1,15 @@
 """Quickstart: reproduce the paper's Group 1 experiment (Fig 8a/8b).
 
 Runs the same sweep through the sequential paper-faithful oracle and the
-vectorized JAX engine, prints the dependent variables side by side, and
-checks Table IV's network-cost column.
+declarative ``SweepPlan`` API (DESIGN.md §4), prints the dependent
+variables side by side, and checks Table IV's network-cost column.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import engine, paper_scenario, refsim, sweep
+from repro.core import engine, paper_scenario, refsim
+from repro.core.sweep import axis, product
 
 
 def main():
@@ -23,22 +24,29 @@ def main():
               f"{r.min_exec:10.2f} {r.makespan:10.2f} {r.delay_time:9.2f} "
               f"{r.network_cost:9.2f} {r.vm_cost:9.2f}")
 
-    # the same sweep, one vmapped engine call
-    batch = sweep.paper_grid(m_range=range(1, 21))
-    out = sweep.simulate_batch(batch)
+    # the same sweep, one declarative plan + one vmapped engine call
+    plan = product(axis("n_maps", range(1, 21)),
+                   axis("network_delay", (True, False)))
+    res = plan.run()
+    delayed = res.select(network_delay=True)
     ref = [refsim.simulate(paper_scenario(n_maps=m)).job().makespan
            for m in range(1, 21)]
-    ok = np.allclose(np.asarray(out.makespan[:, 0]), ref, rtol=1e-4)
+    ok = np.allclose(delayed["makespan"], ref, rtol=1e-4)
     print(f"\nvectorized engine == sequential oracle: {ok}")
 
     expected = 4250.0 / (np.arange(1, 21) + 1)
-    got = np.asarray(out.network_cost[:, 0])
+    got = delayed["network_cost"]
     print(f"Table IV exact (4250/(M+1)): {np.allclose(got, expected, rtol=1e-4)}")
 
-    single = engine.simulate(paper_scenario(n_maps=20, network_delay=False))
+    # labeled point lookup replaces positional row bookkeeping
+    with_delay = res.select(n_maps=20, network_delay=True).to_dict()
+    without = res.select(n_maps=20, network_delay=False).to_dict()
     print(f"\nwithout network delay, M20R1 makespan: "
-          f"{float(single.makespan[0]):.2f}s "
-          f"(with: {float(out.makespan[19, 0]):.2f}s)")
+          f"{without['makespan']:.2f}s (with: {with_delay['makespan']:.2f}s)")
+
+    single = engine.simulate(paper_scenario(n_maps=20, network_delay=False))
+    assert np.isclose(float(single.makespan[0]), without["makespan"],
+                      rtol=1e-6)
 
 
 if __name__ == "__main__":

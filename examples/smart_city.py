@@ -39,41 +39,32 @@ def part1_mixed_workload():
 
 
 def part2_provisioning_sweep(sla_makespan=4000.0):
-    print("== Part 2: provisioning sweep (engine, one vmapped call) ==")
-    cells = []
-    for vm_name, vm in VM_TYPES.items():
-        for n_vms in range(2, 17, 2):
-            for m in (4, 8, 16, 20):
-                cells.append((vm_name, vm, n_vms, m))
-    params = dict(
-        n_maps=np.array([c[3] for c in cells], np.int32),
-        n_reduces=np.ones(len(cells), np.int32),
-        n_vms=np.array([c[2] for c in cells], np.int32),
-        vm_mips=np.array([c[1].mips for c in cells], np.float32),
-        vm_pes=np.array([float(c[1].pes) for c in cells], np.float32),
-        vm_cost=np.array([c[1].cost_per_sec for c in cells], np.float32),
-        job_length=np.full(len(cells), JOB_BIG.length_mi, np.float32),
-        job_data=np.full(len(cells), JOB_BIG.data_mb, np.float32),
+    print("== Part 2: provisioning sweep (one declarative SweepPlan) ==")
+    plan = sweep.product(
+        sweep.axis("vm_type", list(VM_TYPES)),
+        sweep.axis("n_vms", range(2, 17, 2)),
+        sweep.axis("n_maps", (4, 8, 16, 20)),
+        job_type="big",
     )
-    batch = sweep.grid_arrays(params, pad_tasks=21, pad_vms=16)
     t0 = time.perf_counter()
-    out = sweep.simulate_batch(batch)
-    out.makespan.block_until_ready()
+    res = plan.run()
     dt = time.perf_counter() - t0
-    makespan = np.asarray(out.makespan[:, 0])
-    cost = np.asarray(out.vm_cost[:, 0]) + np.asarray(out.network_cost[:, 0])
-    print(f"  simulated {len(cells)} provisioning candidates in "
-          f"{dt*1e3:.1f} ms ({len(cells)/dt:.0f} scenarios/s)")
+    makespan = res["makespan"]
+    cost = res["vm_cost"] + res["network_cost"]
+    print(f"  simulated {plan.size} provisioning candidates in "
+          f"{dt*1e3:.1f} ms ({plan.size/dt:.0f} scenarios/s)")
 
     feasible = makespan <= sla_makespan
     if feasible.any():
-        best = int(np.argmin(np.where(feasible, cost, np.inf)))
-        vm_name, _, n_vms, m = cells[best]
+        best = np.unravel_index(np.argmin(np.where(feasible, cost, np.inf)),
+                                cost.shape)
+        c = res.coord(best)
         print(f"  SLA: makespan <= {sla_makespan:.0f}s")
-        print(f"  cheapest feasible: {n_vms}x {vm_name} VM, M{m}R1 -> "
-              f"makespan={makespan[best]:.0f}s total_cost=${cost[best]:.0f}")
-    infeasible = (~feasible).sum()
-    print(f"  ({infeasible}/{len(cells)} candidates miss the SLA)\n")
+        print(f"  cheapest feasible: {c['n_vms']}x {c['vm_type']} VM, "
+              f"M{c['n_maps']}R1 -> makespan={makespan[best]:.0f}s "
+              f"total_cost=${cost[best]:.0f}")
+    infeasible = int((~feasible).sum())
+    print(f"  ({infeasible}/{plan.size} candidates miss the SLA)\n")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
                      SchedPolicy, VMSpec, paper_scenario)
-from .engine import JobMetrics, ScenarioArrays, SimOutput
+from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
+from .sweep import Axis, SweepPlan, SweepResult
 from .workload import ChipSpec, StepCost
 
 __all__ = [
@@ -24,7 +25,8 @@ __all__ = [
     "SchedPolicy", "BindingPolicy",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
-    "paper_scenario", "JobMetrics", "ScenarioArrays", "SimOutput",
+    "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",
+    "SimOutput", "Axis", "SweepPlan", "SweepResult",
     "ChipSpec", "StepCost",
 ]
 

@@ -183,6 +183,34 @@ JOB_BIG = JobSpec("big", length_mi=1_451_520.0, data_mb=800_000.0)
 JOB_TYPES = {"small": JOB_SMALL, "medium": JOB_MEDIUM, "big": JOB_BIG}
 
 
+def as_vm_spec(v) -> VMSpec:
+    """Coerce a Table-II type name or :class:`VMSpec` to a spec (the value
+    form sweep axes and plan base arguments accept)."""
+    if isinstance(v, str):
+        try:
+            return VM_TYPES[v]
+        except KeyError:
+            raise ValueError(f"unknown VM type {v!r}; "
+                             f"known: {list(VM_TYPES)}") from None
+    if isinstance(v, VMSpec):
+        return v
+    raise TypeError(f"expected VMSpec or VM type name, got {type(v).__name__}")
+
+
+def as_job_spec(v) -> JobSpec:
+    """Coerce a Table-III type name or :class:`JobSpec` to a spec."""
+    if isinstance(v, str):
+        try:
+            return JOB_TYPES[v]
+        except KeyError:
+            raise ValueError(f"unknown job type {v!r}; "
+                             f"known: {list(JOB_TYPES)}") from None
+    if isinstance(v, JobSpec):
+        return v
+    raise TypeError(
+        f"expected JobSpec or job type name, got {type(v).__name__}")
+
+
 def paper_scenario(*, job: str = "small", vm: str = "small", n_vms: int = 3,
                    n_maps: int = 1, n_reduces: int = 1,
                    network_delay: bool = True,

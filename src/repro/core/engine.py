@@ -99,6 +99,29 @@ class JobMetrics(NamedTuple):
     network_cost: jax.Array
     map_avg_exec: jax.Array
     reduce_avg_exec: jax.Array
+    completion: jax.Array      # wall-clock last-reduce finish (0 for padding)
+
+
+class ScenarioMetrics(NamedTuple):
+    """Per-scenario (not per-job) dependent variables for sweep results."""
+    finish_time: jax.Array   # f32 — wall-clock end of the scenario
+    utilization: jax.Array   # f32 — delivered MI / (cluster capacity × time)
+    n_epochs: jax.Array      # i32 — event epochs executed (bench metric)
+
+
+def task_lengths(sc: ScenarioArrays) -> jax.Array:
+    """Effective per-task lengths in MI (straggler multiplier applied).
+
+    The exact op sequence ``simulate_arrays`` integrates, factored out so
+    metrics layers (utilization) account the same work the engine runs.
+    """
+    n_maps_f = sc.job_n_maps.astype(jnp.float32)
+    n_red_f = sc.job_n_reduces.astype(jnp.float32)
+    map_len = sc.job_length / n_maps_f
+    red_len = sc.job_reduce_factor * sc.job_length / n_red_f
+    task_len = jnp.where(sc.task_is_reduce, red_len[sc.task_job],
+                         map_len[sc.task_job]) * sc.task_mult
+    return jnp.where(sc.task_valid, task_len, 0.0)
 
 
 def bind_tasks(binding_policy, task_valid, task_len, vm_mips, vm_pes,
@@ -161,7 +184,11 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     T = pad_tasks or sc.total_tasks()
     J = pad_jobs or len(sc.jobs)
     V = pad_vms or len(sc.vms)
-    assert T >= sc.total_tasks() and J >= len(sc.jobs) and V >= len(sc.vms)
+    if T < sc.total_tasks() or J < len(sc.jobs) or V < len(sc.vms):
+        raise ValueError(
+            f"from_scenario: padding too small — need pad_tasks>="
+            f"{sc.total_tasks()} (got {T}), pad_jobs>={len(sc.jobs)} "
+            f"(got {J}), pad_vms>={len(sc.vms)} (got {V})")
 
     f32 = np.float32
     t_job = np.zeros(T, np.int32)
@@ -263,16 +290,11 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
 
     # --- derived per-task/per-job quantities (traced: sweepable) ----------
     n_maps_f = sc.job_n_maps.astype(jnp.float32)
-    n_red_f = sc.job_n_reduces.astype(jnp.float32)
     stage_in = network.transfer_delay(sc.kappa_in, sc.job_data, n_maps_f,
                                       sc.net_bw, sc.net_enabled)
     shuffle = network.transfer_delay(sc.kappa_shuffle, sc.job_data, n_maps_f,
                                      sc.net_bw, sc.net_enabled)
-    map_len = sc.job_length / n_maps_f
-    red_len = sc.job_reduce_factor * sc.job_length / n_red_f
-    task_len = jnp.where(sc.task_is_reduce, red_len[sc.task_job],
-                         map_len[sc.task_job]) * sc.task_mult
-    task_len = jnp.where(sc.task_valid, task_len, 0.0)
+    task_len = task_lengths(sc)
 
     # Maps ready at submit + stage-in; reduces unknown until maps complete.
     ready0 = jnp.where(
@@ -436,7 +458,21 @@ def job_metrics(sc: ScenarioArrays, out: SimOutput) -> JobMetrics:
         network_cost=delay * sc.net_cost_per_unit * sc.net_enabled,
         map_avg_exec=m_avg,
         reduce_avg_exec=r_avg,
+        completion=jnp.where(sc.job_valid, last_red_fin, 0.0),
     )
+
+
+def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
+    """Whole-scenario dependent variables (sweep-result companions to the
+    per-job :class:`JobMetrics`).  Utilization is the fraction of the
+    cluster's MI capacity delivered over the scenario's wall-clock span —
+    every valid task completes, so delivered MI is just the summed task
+    lengths."""
+    total_mi = jnp.sum(task_lengths(sc))
+    capacity = jnp.sum(jnp.where(sc.vm_valid, sc.vm_mips * sc.vm_pes, 0.0))
+    util = total_mi / jnp.maximum(capacity * out.finish_time, 1e-30)
+    return ScenarioMetrics(finish_time=out.finish_time, utilization=util,
+                           n_epochs=out.n_epochs)
 
 
 @jax.jit

@@ -7,27 +7,48 @@ every mesh axis — a pod simulates millions of datacentre scenarios in one
 ``pjit`` call.  This is the headline TPU adaptation of the paper's technique
 (DESIGN.md §2) and the subject of ``benchmarks/sweep_throughput.py``.
 
-Two batch builders:
+The declarative experiment API (DESIGN.md §4):
+
+* :func:`axis` — one labeled sweep dimension over any ``Scenario``-level
+  parameter (MR combination, VM count, per-VM mips/pes/cost vectors,
+  policies, network knobs, VM/job presets);
+* :func:`zip_` / :func:`product` — compose axes into a :class:`SweepPlan`
+  (zipped axes advance together as one dimension; product axes span the
+  full cartesian grid);
+* :meth:`SweepPlan.run` — compile the plan into one device-side
+  :class:`ScenarioArrays` batch and execute it (plain vmap, pod-sharded
+  over a ``mesh``, or host-memory-``chunk``-ed), returning a labeled
+  :class:`SweepResult` with ``select(**coords)`` / ``to_dict()`` lookup.
+
+Lower-level builders (the compile targets — still public):
 
 * :func:`stack_scenarios` — host-side: encode arbitrary ``Scenario`` objects
   (heterogeneous jobs/VMs) and stack with common padding;
-* :func:`encode_cell` / :func:`grid_arrays` — device-side: build the paper's
-  homogeneous experiment cells directly from scalar parameters, entirely in
-  jnp, so huge grids never materialize on the host.
+* :func:`encode_cell` / :func:`grid_arrays` — device-side: build experiment
+  cells (homogeneous *or* per-VM-heterogeneous) directly from traced
+  parameters, entirely in jnp, so huge grids never materialize on the host.
+
+``paper_grid`` / ``policy_grid`` are kept one release longer as thin shims
+over :class:`SweepPlan` (see the DESIGN.md §4 migration note).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence
+import dataclasses
+import enum
+import inspect
+from functools import lru_cache, partial
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import (BindingPolicy, Scenario, SchedPolicy,
+from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
+                     SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
-from .engine import (JobMetrics, ScenarioArrays, bind_tasks, from_scenario,
-                     job_metrics, simulate_arrays)
+from .engine import (JobMetrics, ScenarioArrays, ScenarioMetrics, bind_tasks,
+                     from_scenario, job_metrics, scenario_metrics,
+                     simulate_arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +68,7 @@ def stack_scenarios(scenarios: Sequence[Scenario]) -> ScenarioArrays:
 
 
 # ---------------------------------------------------------------------------
-# Device-side cell encoder (paper §5 experiment cells)
+# Device-side cell encoder (paper §5 experiment cells + heterogeneous VMs)
 # ---------------------------------------------------------------------------
 
 def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
@@ -56,9 +77,15 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 kappa_in=17.0, kappa_shuffle=4.25, net_cost_per_unit=1.0,
                 task_mult=None, sched_policy=0,
                 binding_policy=0) -> ScenarioArrays:
-    """One homogeneous paper cell as traced arrays.
+    """One paper cell as traced arrays — homogeneous or per-VM heterogeneous.
 
-    All scalar args may be traced — ``vmap`` this over parameter grids;
+    ``vm_mips`` / ``vm_pes`` / ``vm_cost`` are **per-VM vectors** of length
+    ``pad_vms`` (entries past ``n_vms`` are ignored); plain scalars are
+    broadcast, reproducing the original homogeneous cells bit for bit.  With
+    distinct per-VM values, LEAST_LOADED/PACKED binding differentiates inside
+    device-side grids just as it does for host-encoded scenarios.
+
+    All parameters may be traced — ``vmap`` this over parameter grids;
     ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
     may mix policies (Group 5).  ``pad_tasks``/``pad_vms`` are static
     paddings (>= max M+R / max V).
@@ -73,8 +100,12 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     if task_mult is None:
         task_mult = jnp.ones(pad_tasks, jnp.float32)
     vm_valid = jnp.arange(pad_vms) < n_vms
-    vm_mips_a = jnp.where(vm_valid, f32(vm_mips), 1.0)
-    vm_pes_a = jnp.where(vm_valid, f32(vm_pes), 1.0)
+    vm_mips_a = jnp.where(vm_valid,
+                          jnp.broadcast_to(f32(vm_mips), (pad_vms,)), 1.0)
+    vm_pes_a = jnp.where(vm_valid,
+                         jnp.broadcast_to(f32(vm_pes), (pad_vms,)), 1.0)
+    vm_cost_a = jnp.where(vm_valid,
+                          jnp.broadcast_to(f32(vm_cost), (pad_vms,)), 0.0)
     map_len, red_len = base_task_lengths_f32(
         f32(job_length), n_maps.astype(jnp.float32),
         n_reduces.astype(jnp.float32), f32(reduce_factor))
@@ -95,7 +126,7 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         job_valid=jnp.ones(1, bool),
         vm_mips=vm_mips_a,
         vm_pes=vm_pes_a,
-        vm_cost=jnp.where(vm_valid, f32(vm_cost), 0.0),
+        vm_cost=vm_cost_a,
         vm_valid=vm_valid,
         net_enabled=f32(net_enabled), net_bw=f32(net_bw),
         kappa_in=f32(kappa_in), kappa_shuffle=f32(kappa_shuffle),
@@ -105,22 +136,522 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     )
 
 
+# encode_cell parameters an axis/grid may target (pads are static).
+_CELL_PARAMS = tuple(p for p in inspect.signature(encode_cell).parameters
+                     if p not in ("pad_tasks", "pad_vms"))
+_INT_PARAMS = frozenset(
+    {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy"})
+_PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost"})
+
+
 def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
                 pad_vms: int) -> ScenarioArrays:
-    """vmap :func:`encode_cell` over equal-length 1-D parameter arrays."""
-    names = list(params)
-    vals = [jnp.asarray(params[n]) for n in names]
+    """vmap :func:`encode_cell` over equal-length parameter arrays.
 
+    Each value is ``[N]`` (one scalar per cell) or ``[N, pad_vms]``
+    (per-VM vectors for ``vm_mips``/``vm_pes``/``vm_cost``) /
+    ``[N, pad_tasks]`` (``task_mult``).  Keys and leading lengths are
+    validated up front — a mismatched key used to surface as an opaque
+    vmap shape error deep inside the encoder.
+    """
+    names = list(params)
+    if not names:
+        raise ValueError("grid_arrays: empty parameter dict")
+    unknown = [n for n in names if n not in _CELL_PARAMS]
+    if unknown:
+        raise ValueError(
+            f"grid_arrays: unknown encode_cell parameter(s) {unknown}; "
+            f"valid: {list(_CELL_PARAMS)}")
+    sizes = {}
+    for n in names:
+        shape = np.shape(params[n])
+        if len(shape) == 0:
+            raise ValueError(
+                f"grid_arrays: parameter {n!r} must be an array with a "
+                "leading grid dimension (got a scalar)")
+        if len(shape) == 2:
+            if n in _PER_VM:
+                want, pad = "pad_vms", pad_vms
+            elif n == "task_mult":
+                want, pad = "pad_tasks", pad_tasks
+            else:
+                raise ValueError(
+                    f"grid_arrays: parameter {n!r} takes one scalar per "
+                    f"cell, got 2-D shape {shape}")
+            if shape[1] != pad:
+                raise ValueError(
+                    f"grid_arrays: {n!r} has trailing width {shape[1]}, "
+                    f"expected {want}={pad}")
+        elif len(shape) > 2:
+            raise ValueError(
+                f"grid_arrays: parameter {n!r} has {len(shape)} dims; "
+                "at most [N, width] is supported")
+        sizes[n] = shape[0]
+    n0 = sizes[names[0]]
+    bad = [f"{n} has length {sizes[n]}" for n in names if sizes[n] != n0]
+    if bad:
+        raise ValueError(
+            "grid_arrays: parameter arrays must share one leading grid "
+            f"length; {names[0]!r} has length {n0} but " + ", ".join(bad))
+    encoder = _grid_encoder(tuple(names), pad_tasks, pad_vms)
+    return encoder(*(jnp.asarray(params[n]) for n in names))
+
+
+@lru_cache(maxsize=None)
+def _grid_encoder(names: tuple[str, ...], pad_tasks: int, pad_vms: int):
+    """One jitted vmapped encode_cell per (param set, padding) signature —
+    repeated ``SweepPlan.run()`` calls re-encode at compiled speed instead
+    of dispatching the encoder op by op."""
     def one(*xs):
         return encode_cell(**dict(zip(names, xs)), pad_tasks=pad_tasks,
                            pad_vms=pad_vms)
+    return jax.jit(jax.vmap(one))
 
-    return jax.vmap(one)(*vals)
+
+# ---------------------------------------------------------------------------
+# Declarative sweep plans (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One labeled sweep dimension.
+
+    ``names`` are the coordinate names addressable in
+    :meth:`SweepResult.select` (more than one after :func:`zip_`);
+    ``labels`` holds one tuple of coordinate values per point (aligned with
+    ``names``); ``columns`` maps encode_cell parameters to ``[n, ...]``
+    encoded value columns.  Build through :func:`axis`, compose with
+    :func:`zip_` / :func:`product`.
+    """
+    names: tuple[str, ...]
+    labels: tuple[tuple[Any, ...], ...]
+    columns: Mapping[str, np.ndarray]
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+
+def axis(name: str, values: Sequence[Any]) -> Axis:
+    """One sweep dimension: ``name`` + the values it takes.
+
+    ``name`` is either a raw :func:`encode_cell` parameter (``n_maps``,
+    ``n_vms``, ``vm_mips`` …, values scalars — or per-VM vectors for the
+    ``vm_*`` parameters) or a convenience spec axis:
+
+    * ``"vm"``/``"vm_type"`` — values are ``VMSpec`` or Table-II type names;
+      expands to homogeneous ``vm_mips``/``vm_pes``/``vm_cost``;
+    * ``"vms"`` — values are *sequences* of VMSpec/type names (one cluster
+      per point, may differ in size): per-VM heterogeneous cells, expands
+      to ``n_vms`` + per-VM ``vm_mips``/``vm_pes``/``vm_cost`` vectors;
+    * ``"job"``/``"job_type"`` — ``JobSpec`` or Table-III names; expands to
+      ``job_length``/``job_data``/``reduce_factor`` (MR combination stays
+      a separate ``n_maps``/``n_reduces`` axis, as in the paper);
+    * ``"sched_policy"``/``"binding_policy"`` — enum members or ints;
+    * ``"network_delay"`` — bools, expands to ``net_enabled``.
+    """
+    values = list(values)
+    if not values:
+        raise ValueError(f"axis {name!r}: empty value list")
+    f32 = partial(np.asarray, dtype=np.float32)
+    if name in ("vm", "vm_type"):
+        specs = [as_vm_spec(v) for v in values]
+        return Axis((name,), tuple((s.name,) for s in specs), {
+            "vm_mips": f32([s.mips for s in specs]),
+            "vm_pes": f32([float(s.pes) for s in specs]),
+            "vm_cost": f32([s.cost_per_sec for s in specs]),
+        })
+    if name == "vms":
+        clusters = [tuple(as_vm_spec(v) for v in vs) for vs in values]
+        if any(not c for c in clusters):
+            raise ValueError("axis 'vms': every point needs >= 1 VM")
+        V = max(len(c) for c in clusters)
+
+        def col(get):
+            out = np.zeros((len(clusters), V), np.float32)
+            for i, c in enumerate(clusters):
+                out[i, :len(c)] = [get(s) for s in c]
+            return out
+
+        return Axis((name,),
+                    tuple((tuple(s.name for s in c),) for c in clusters), {
+            "n_vms": np.asarray([len(c) for c in clusters], np.int32),
+            "vm_mips": col(lambda s: s.mips),
+            "vm_pes": col(lambda s: float(s.pes)),
+            "vm_cost": col(lambda s: s.cost_per_sec),
+        })
+    if name in ("job", "job_type"):
+        specs = [as_job_spec(v) for v in values]
+        return Axis((name,), tuple((s.name,) for s in specs), {
+            "job_length": f32([s.length_mi for s in specs]),
+            "job_data": f32([s.data_mb for s in specs]),
+            "reduce_factor": f32([s.reduce_factor for s in specs]),
+        })
+    if name == "network_delay":
+        labels = tuple((bool(v),) for v in values)
+        return Axis((name,), labels,
+                    {"net_enabled": f32([1.0 if v else 0.0 for v in values])})
+    if name == "sched_policy":
+        members = [SchedPolicy(v) for v in values]
+        return Axis((name,), tuple((m,) for m in members),
+                    {name: np.asarray(members, np.int32)})
+    if name == "binding_policy":
+        members = [BindingPolicy(v) for v in values]
+        return Axis((name,), tuple((m,) for m in members),
+                    {name: np.asarray(members, np.int32)})
+    if name not in _CELL_PARAMS:
+        raise ValueError(
+            f"axis {name!r}: not an encode_cell parameter or spec axis; "
+            f"valid: {list(_CELL_PARAMS)} + ['vm', 'vm_type', 'vms', 'job', "
+            "'job_type', 'network_delay']")
+    if any(np.ndim(v) > 0 for v in values):        # per-VM / per-task vectors
+        if name not in _PER_VM and name != "task_mult":
+            raise ValueError(
+                f"axis {name!r}: vector values only make sense for the "
+                f"per-VM parameters {sorted(_PER_VM)} or 'task_mult'; "
+                f"{name!r} takes one scalar per cell")
+        if not all(np.ndim(v) == 1 for v in values):
+            raise ValueError(
+                f"axis {name!r}: vector values must all be 1-D with one "
+                "shared length (use the 'vms' axis for ragged clusters)")
+        widths = {int(np.shape(v)[0]) for v in values}
+        if len(widths) != 1:
+            raise ValueError(
+                f"axis {name!r}: vector values must share one length, got "
+                f"{sorted(widths)} (use the 'vms' axis for ragged clusters)")
+        return Axis((name,), tuple((tuple(np.asarray(v).tolist()),)
+                                   for v in values),
+                    {name: np.stack([f32(v) for v in values])})
+    dtype = np.int32 if name in _INT_PARAMS else np.float32
+    return Axis((name,), tuple((v,) for v in values),
+                {name: np.asarray(values, dtype)})
+
+
+def zip_(*axes: Axis) -> Axis:
+    """Fuse equal-length axes into one dimension that advances together
+    (e.g. co-varying ``n_maps`` with ``job_length``), like Python ``zip``."""
+    if not axes:
+        raise ValueError("zip_: need at least one axis")
+    lens = {"x".join(a.names): len(a) for a in axes}
+    if len(set(lens.values())) != 1:
+        raise ValueError(f"zip_: axes must share one length; got {lens}")
+    columns: dict[str, np.ndarray] = {}
+    for a in axes:
+        for cname, col in a.columns.items():
+            if cname in columns:
+                raise ValueError(
+                    f"zip_: parameter {cname!r} set by more than one axis")
+            columns[cname] = col
+    names = tuple(n for a in axes for n in a.names)
+    if len(set(names)) != len(names):
+        raise ValueError(f"zip_: duplicate coordinate names in {names}")
+    labels = tuple(tuple(part for a in axes for part in a.labels[i])
+                   for i in range(len(axes[0])))
+    return Axis(names, labels, columns)
+
+
+def product(*dims: Axis, **base: Any) -> "SweepPlan":
+    """Cartesian :class:`SweepPlan` over ``dims`` (row-major: the last axis
+    varies fastest).  ``base`` pins non-swept parameters for every cell —
+    any :func:`axis` name with a single value (``vm_type="medium"``,
+    ``network_delay=False``, ``vms=("medium", "small")``, ``n_maps=12`` …).
+    """
+    return SweepPlan(dims=tuple(dims), base=dict(base))
+
+
+# Paper defaults for parameters no axis/base sets: the §5 baseline cell
+# (3 small VMs, one small M1R1 job) — same defaults as config.paper_scenario.
+_DEFAULTS: dict[str, float] = dict(
+    n_maps=1, n_reduces=1, n_vms=3,
+    vm_mips=VM_SMALL.mips, vm_pes=float(VM_SMALL.pes),
+    vm_cost=VM_SMALL.cost_per_sec,
+    job_length=JOB_SMALL.length_mi, job_data=JOB_SMALL.data_mb,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """A declarative experiment plan: labeled axes × pinned base parameters.
+
+    Compiles to one device-side :class:`ScenarioArrays` batch
+    (:meth:`arrays`) and executes through :meth:`run`, which returns a
+    labeled :class:`SweepResult`.  ``pad_tasks``/``pad_vms`` override the
+    inferred paddings (e.g. to share one lowering across several plans).
+    """
+    dims: tuple[Axis, ...]
+    base: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    pad_tasks: int | None = None
+    pad_vms: int | None = None
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(d) for d in self.dims)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.dims else 1
+
+    def replace(self, **kw) -> "SweepPlan":
+        return dataclasses.replace(self, **kw)
+
+    def _compiled(self) -> tuple[dict[str, np.ndarray], int, int]:
+        """Flatten axes + base + defaults into N-cell parameter columns."""
+        shape, N = self.shape, self.size
+        cols: dict[str, np.ndarray] = {}
+        owner: dict[str, str] = {}
+        for k, dim in enumerate(self.dims):
+            outer = int(np.prod(shape[:k], dtype=np.int64))
+            inner = int(np.prod(shape[k + 1:], dtype=np.int64))
+            idx = np.tile(np.repeat(np.arange(shape[k]), inner), outer)
+            src = "axis " + "×".join(dim.names)
+            for cname, col in dim.columns.items():
+                if cname in cols:
+                    raise ValueError(
+                        f"SweepPlan: parameter {cname!r} set by both "
+                        f"{owner[cname]} and {src}")
+                cols[cname] = np.asarray(col)[idx]
+                owner[cname] = src
+        for bname, value in self.base.items():
+            for cname, col in axis(bname, [value]).columns.items():
+                if cname in cols:
+                    raise ValueError(
+                        f"SweepPlan: parameter {cname!r} set by both "
+                        f"{owner[cname]} and base argument {bname!r}")
+                c = np.asarray(col)
+                cols[cname] = np.broadcast_to(c[0], (N,) + c.shape[1:])
+                owner[cname] = f"base argument {bname!r}"
+        for cname, default in _DEFAULTS.items():
+            if cname not in cols:
+                dtype = np.int32 if cname in _INT_PARAMS else np.float32
+                cols[cname] = np.full(N, default, dtype)
+        n_tasks = int((cols["n_maps"].astype(np.int64)
+                       + cols["n_reduces"].astype(np.int64)).max())
+        pad_tasks = self.pad_tasks if self.pad_tasks is not None else n_tasks
+        v_needed = max(int(cols["n_vms"].max()),
+                       *(c.shape[1] for n, c in cols.items()
+                         if n in _PER_VM and c.ndim == 2), 1)
+        pad_vms = self.pad_vms if self.pad_vms is not None else v_needed
+        if pad_tasks < n_tasks or pad_vms < v_needed:
+            raise ValueError(
+                f"SweepPlan: padding too small — need pad_tasks>={n_tasks} "
+                f"(got {pad_tasks}), pad_vms>={v_needed} (got {pad_vms})")
+        n_vms_max = int(cols["n_vms"].max())
+        for cname in _PER_VM:
+            c = cols[cname]
+            if c.ndim != 2:
+                continue
+            if c.shape[1] < n_vms_max:
+                raise ValueError(
+                    f"SweepPlan: per-VM column {cname!r} has width "
+                    f"{c.shape[1]} but some cell has n_vms={n_vms_max}; "
+                    "give every VM vector >= n_vms entries (or use the "
+                    "'vms' axis, which sets n_vms itself)")
+            if c.shape[1] < pad_vms:
+                cols[cname] = np.pad(c, ((0, 0), (0, pad_vms - c.shape[1])))
+        if "task_mult" in cols and cols["task_mult"].shape[1] != pad_tasks:
+            tm = cols["task_mult"]
+            if tm.shape[1] > pad_tasks:
+                raise ValueError(
+                    f"SweepPlan: task_mult width {tm.shape[1]} exceeds "
+                    f"pad_tasks={pad_tasks}")
+            cols["task_mult"] = np.pad(
+                tm, ((0, 0), (0, pad_tasks - tm.shape[1])),
+                constant_values=1.0)
+        return cols, pad_tasks, pad_vms
+
+    def params(self) -> dict[str, np.ndarray]:
+        """The flattened ``grid_arrays`` parameter columns (host numpy)."""
+        return self._compiled()[0]
+
+    def arrays(self) -> ScenarioArrays:
+        """Compile to one device-side batch (leading dim = flattened grid)."""
+        cols, pad_tasks, pad_vms = self._compiled()
+        return grid_arrays(cols, pad_tasks=pad_tasks, pad_vms=pad_vms)
+
+    def run(self, mesh: jax.sharding.Mesh | None = None,
+            chunk: int | None = None) -> "SweepResult":
+        """Execute the plan and return a labeled :class:`SweepResult`.
+
+        * default — one jitted vmap over the whole batch;
+        * ``mesh`` — scenarios sharded over every mesh axis (the pod path;
+          the grid is padded up to a device-count multiple and trimmed);
+        * ``chunk`` — at most ``chunk`` cells encoded + simulated per call
+          (one shared lowering; results accumulate in host memory), for
+          grids larger than device memory.
+        """
+        if mesh is not None and chunk is not None:
+            raise ValueError("run: pass mesh or chunk, not both")
+        cols, pad_tasks, pad_vms = self._compiled()
+        N = self.size
+        if mesh is not None:
+            n_dev = int(mesh.devices.size)
+            full = -(-N // n_dev) * n_dev
+            batch = grid_arrays(_pad_cells(cols, full),
+                                pad_tasks=pad_tasks, pad_vms=pad_vms)
+            jm, sm = _simulate_full_sharded(batch, mesh)
+        elif chunk is not None:
+            if chunk < 1:
+                raise ValueError(f"run: chunk must be >= 1, got {chunk}")
+            parts = []
+            for lo in range(0, N, chunk):
+                part = {k: v[lo:lo + chunk] for k, v in cols.items()}
+                batch = grid_arrays(_pad_cells(part, chunk),
+                                    pad_tasks=pad_tasks, pad_vms=pad_vms)
+                parts.append(jax.tree.map(np.asarray, _simulate_full(batch)))
+            jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
+        else:
+            jm, sm = _simulate_full(
+                grid_arrays(cols, pad_tasks=pad_tasks, pad_vms=pad_vms))
+        jm = jax.tree.map(lambda x: np.asarray(x)[:N], jm)
+        sm = jax.tree.map(lambda x: np.asarray(x)[:N], sm)
+        n_jobs = jm.makespan.shape[-1]
+        metrics: dict[str, np.ndarray] = {}
+        for f in JobMetrics._fields:
+            a = getattr(jm, f)
+            metrics[f] = a.reshape(self.shape if n_jobs == 1
+                                   else self.shape + (n_jobs,))
+        for f in ScenarioMetrics._fields:
+            metrics[f] = getattr(sm, f).reshape(self.shape)
+        return SweepResult(axis_names=tuple(d.names for d in self.dims),
+                           axis_labels=tuple(d.labels for d in self.dims),
+                           metrics=metrics, n_jobs=n_jobs)
+
+
+def _pad_cells(cols: dict[str, np.ndarray], n: int) -> dict[str, np.ndarray]:
+    """Pad parameter columns to ``n`` cells by repeating the last cell."""
+    have = len(next(iter(cols.values())))
+    if have == n:
+        return cols
+    return {k: np.concatenate([v, np.repeat(v[-1:], n - have, axis=0)])
+            for k, v in cols.items()}
+
+
+def _match_label(label, want) -> bool:
+    if label is want:
+        return True
+    if isinstance(label, enum.Enum) and isinstance(want, str):
+        return label.name == want
+    try:
+        return bool(label == want)
+    except (TypeError, ValueError):
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Labeled sweep output: axis coordinates + named metric arrays.
+
+    ``metrics[name]`` has the plan's grid shape (per-job metrics gain a
+    trailing job dim when a cell holds more than one job).  Per-job metrics
+    are the paper's §5.3 dependent variables (:class:`JobMetrics` fields,
+    including ``completion``); per-scenario extras are ``finish_time``,
+    ``utilization`` and ``n_epochs`` (:class:`ScenarioMetrics`).
+    """
+    axis_names: tuple[tuple[str, ...], ...]
+    axis_labels: tuple[tuple[tuple[Any, ...], ...], ...]
+    metrics: Mapping[str, np.ndarray]
+    n_jobs: int = 1
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(labs) for labs in self.axis_labels)
+
+    @property
+    def metric_names(self) -> tuple[str, ...]:
+        return tuple(self.metrics)
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        try:
+            return self.metrics[name]
+        except KeyError:
+            raise KeyError(f"no metric {name!r}; "
+                           f"available: {list(self.metrics)}") from None
+
+    def coord(self, index: Sequence[int]) -> dict[str, Any]:
+        """Axis coordinates of one grid point (e.g. from unravel_index)."""
+        out: dict[str, Any] = {}
+        for d, (names, labs) in enumerate(zip(self.axis_names,
+                                              self.axis_labels)):
+            out.update(zip(names, labs[int(index[d])]))
+        return out
+
+    def select(self, **coords: Any) -> "SweepResult":
+        """Slice by axis-coordinate labels (``select(n_maps=4,
+        vm_type="medium")``).  Coordinates matching exactly one point drop
+        their dimension; several matches keep a filtered dimension.  Zipped
+        dimensions are addressed through any of their component names —
+        several components of one zipped dimension constrain it jointly."""
+        names = list(self.axis_names)
+        labels = list(self.axis_labels)
+        metrics = dict(self.metrics)
+        by_dim: dict[int, dict[str, Any]] = {}
+        for key, want in coords.items():
+            for d, ns in enumerate(names):
+                if key in ns:
+                    by_dim.setdefault(d, {})[key] = want
+                    break
+            else:
+                raise KeyError(
+                    f"select: no axis {key!r}; axes: "
+                    f"{[n for ns in names for n in ns]}")
+        for d in sorted(by_dim, reverse=True):   # right-to-left: stable axes
+            wants = by_dim[d]
+            comp = {k: names[d].index(k) for k in wants}
+            hits = [i for i, lab in enumerate(labels[d])
+                    if all(_match_label(lab[comp[k]], w)
+                           for k, w in wants.items())]
+            if not hits:
+                raise KeyError(
+                    f"select: {wants} not on the axis "
+                    f"{'×'.join(names[d])}; labels: {list(labels[d])}")
+            if len(hits) == 1:
+                metrics = {k: v.take(hits[0], axis=d)
+                           for k, v in metrics.items()}
+                del names[d], labels[d]
+            else:
+                metrics = {k: v.take(hits, axis=d) for k, v in metrics.items()}
+                labels[d] = tuple(labels[d][i] for i in hits)
+        return SweepResult(tuple(names), tuple(labels), metrics, self.n_jobs)
+
+    def to_dict(self) -> dict[str, Any]:
+        """Metrics as plain ``{name: ndarray}`` (0-d arrays as scalars)."""
+        return {k: (v.item() if np.ndim(v) == 0 else np.asarray(v))
+                for k, v in self.metrics.items()}
+
+    def __repr__(self) -> str:
+        ax = ", ".join(f"{'×'.join(ns)}[{len(labs)}]"
+                       for ns, labs in zip(self.axis_names, self.axis_labels))
+        return (f"SweepResult(axes=({ax}), n_jobs={self.n_jobs}, "
+                f"metrics={list(self.metrics)})")
 
 
 # ---------------------------------------------------------------------------
 # Batched simulation entry points
 # ---------------------------------------------------------------------------
+
+def _one_full(sc: ScenarioArrays) -> tuple[JobMetrics, ScenarioMetrics]:
+    out = simulate_arrays(sc)
+    return job_metrics(sc, out), scenario_metrics(sc, out)
+
+
+@jax.jit
+def _simulate_full(batch: ScenarioArrays):
+    """vmap engine + per-job and per-scenario metrics (the ``run()`` body)."""
+    return jax.vmap(_one_full)(batch)
+
+
+@lru_cache(maxsize=None)
+def _sharded_runner(mesh: jax.sharding.Mesh):
+    """One jitted sharded simulate per mesh — repeated ``run(mesh=…)`` calls
+    reuse the compilation instead of retracing through a fresh lambda."""
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(mesh.axis_names))
+    return jax.jit(jax.vmap(_one_full), in_shardings=sharding,
+                   out_shardings=sharding)
+
+
+def _simulate_full_sharded(batch: ScenarioArrays, mesh: jax.sharding.Mesh):
+    return _sharded_runner(mesh)(batch)
+
 
 @jax.jit
 def simulate_batch(batch: ScenarioArrays) -> JobMetrics:
@@ -148,32 +679,30 @@ def simulate_batch_sharded(batch: ScenarioArrays,
     return fn(batch)
 
 
+# ---------------------------------------------------------------------------
+# Legacy grid builders — thin SweepPlan shims, kept one release longer
+# ---------------------------------------------------------------------------
+
 def paper_grid(m_range=range(1, 21), vm_numbers=(3,), vm_types=("small",),
                job_types=("small",), network_delay=True,
                sched_policy=SchedPolicy.TIME_SHARED,
                binding_policy=BindingPolicy.ROUND_ROBIN) -> ScenarioArrays:
-    """Cartesian paper grid (Groups 1–4) as a device-side batch."""
-    from .config import JOB_TYPES, VM_TYPES
-    cells = [(m, v, VM_TYPES[vt], JOB_TYPES[jt])
-             for m in m_range for v in vm_numbers
-             for vt in vm_types for jt in job_types]
-    params = dict(
-        n_maps=np.array([c[0] for c in cells], np.int32),
-        n_reduces=np.ones(len(cells), np.int32),
-        n_vms=np.array([c[1] for c in cells], np.int32),
-        vm_mips=np.array([c[2].mips for c in cells], np.float32),
-        vm_pes=np.array([float(c[2].pes) for c in cells], np.float32),
-        vm_cost=np.array([c[2].cost_per_sec for c in cells], np.float32),
-        job_length=np.array([c[3].length_mi for c in cells], np.float32),
-        job_data=np.array([c[3].data_mb for c in cells], np.float32),
-        net_enabled=np.full(len(cells), 1.0 if network_delay else 0.0,
-                            np.float32),
-        sched_policy=np.full(len(cells), int(sched_policy), np.int32),
-        binding_policy=np.full(len(cells), int(binding_policy), np.int32),
+    """Cartesian paper grid (Groups 1–4) as a device-side batch.
+
+    Deprecated shim: build the equivalent :class:`SweepPlan` directly (see
+    DESIGN.md §4); this keeps the PR-1 call sites working one release
+    longer.  Cell order is unchanged (row-major, ``job_types`` fastest).
+    """
+    plan = product(
+        axis("n_maps", m_range),
+        axis("n_vms", vm_numbers),
+        axis("vm_type", vm_types),
+        axis("job_type", job_types),
+        network_delay=network_delay,
+        sched_policy=sched_policy,
+        binding_policy=binding_policy,
     )
-    pad_tasks = max(m_range) + 1
-    pad_vms = max(vm_numbers)
-    return grid_arrays(params, pad_tasks=pad_tasks, pad_vms=pad_vms)
+    return plan.arrays()
 
 
 def policy_grid(m_range=range(1, 21), n_vms=3, vm_type="small",
@@ -183,24 +712,17 @@ def policy_grid(m_range=range(1, 21), n_vms=3, vm_type="small",
     (sched_policy × binding_policy) combination — one mixed-policy batch,
     one lowering.  Returns the batch plus the per-block policy labels
     (block i covers rows [i*len(m_range), (i+1)*len(m_range))).
+
+    Deprecated shim over :class:`SweepPlan` (DESIGN.md §4) — the plan's
+    labeled ``select(sched_policy=…, binding_policy=…)`` replaces the
+    per-block row bookkeeping.
     """
-    from .config import JOB_TYPES, VM_TYPES
-    combos = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
-    cells = [(m, sp, bp) for sp, bp in combos for m in m_range]
-    vm, job = VM_TYPES[vm_type], JOB_TYPES[job_type]
-    n = len(cells)
-    params = dict(
-        n_maps=np.array([c[0] for c in cells], np.int32),
-        n_reduces=np.ones(n, np.int32),
-        n_vms=np.full(n, n_vms, np.int32),
-        vm_mips=np.full(n, vm.mips, np.float32),
-        vm_pes=np.full(n, float(vm.pes), np.float32),
-        vm_cost=np.full(n, vm.cost_per_sec, np.float32),
-        job_length=np.full(n, job.length_mi, np.float32),
-        job_data=np.full(n, job.data_mb, np.float32),
-        net_enabled=np.full(n, 1.0 if network_delay else 0.0, np.float32),
-        sched_policy=np.array([int(c[1]) for c in cells], np.int32),
-        binding_policy=np.array([int(c[2]) for c in cells], np.int32),
+    plan = product(
+        axis("sched_policy", list(SchedPolicy)),
+        axis("binding_policy", list(BindingPolicy)),
+        axis("n_maps", m_range),
+        n_vms=n_vms, vm_type=vm_type, job_type=job_type,
+        network_delay=network_delay,
     )
-    batch = grid_arrays(params, pad_tasks=max(m_range) + 1, pad_vms=n_vms)
-    return batch, combos
+    combos = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+    return plan.arrays(), combos

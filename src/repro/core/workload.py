@@ -12,7 +12,7 @@ multi-pod dry-run) into simulator scenarios:
 * node failures + checkpoint restarts enter as job interruptions.
 
 This is the paper's MapReduce↔cloud methodology applied to its modern
-workload (DESIGN.md §4): map = sharded compute, shuffle = collectives,
+workload (DESIGN.md §5): map = sharded compute, shuffle = collectives,
 reduce = the optimizer update.
 """
 from __future__ import annotations

@@ -1,0 +1,317 @@
+"""Declarative sweep API (DESIGN.md §4): SweepPlan/SweepResult semantics,
+bit-identity with the legacy ``paper_grid``/``policy_grid`` encodings,
+heterogeneous-VM device-side cells, and grid validation errors.
+
+The ``table4``-marked tests double as the CI sweep smoke job: a tiny
+``SweepPlan`` end to end on CPU, asserting bit-identity with the frozen
+PR-1 grid encoding.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (JOB_MEDIUM, VM_LARGE, VM_MEDIUM, VM_SMALL,
+                        BindingPolicy, Scenario, SchedPolicy, engine,
+                        paper_scenario, refsim, sweep)
+from repro.core.config import JOB_TYPES, VM_TYPES
+from repro.core.sweep import axis, product, zip_
+
+ALL_POLICIES = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+M_RANGE = range(1, 11)
+
+
+def _legacy_paper_grid_params(m_range):
+    """The PR-1 ``paper_grid`` parameter encoding, frozen for comparison."""
+    cells = [(m, 3, VM_TYPES["small"], JOB_TYPES["small"]) for m in m_range]
+    n = len(cells)
+    return dict(
+        n_maps=np.array([c[0] for c in cells], np.int32),
+        n_reduces=np.ones(n, np.int32),
+        n_vms=np.array([c[1] for c in cells], np.int32),
+        vm_mips=np.array([c[2].mips for c in cells], np.float32),
+        vm_pes=np.array([float(c[2].pes) for c in cells], np.float32),
+        vm_cost=np.array([c[2].cost_per_sec for c in cells], np.float32),
+        job_length=np.array([c[3].length_mi for c in cells], np.float32),
+        job_data=np.array([c[3].data_mb for c in cells], np.float32),
+        net_enabled=np.full(n, 1.0, np.float32),
+        sched_policy=np.full(n, int(SchedPolicy.TIME_SHARED), np.int32),
+        binding_policy=np.full(n, int(BindingPolicy.ROUND_ROBIN), np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table IV bit-identity: SweepPlan vs the legacy paper_grid path (CI smoke)
+# ---------------------------------------------------------------------------
+
+def test_table4_bit_identity_with_legacy_paper_grid():
+    """Paper Table IV cells through SweepPlan == legacy encoding, bitwise."""
+    legacy = sweep.grid_arrays(_legacy_paper_grid_params(M_RANGE),
+                               pad_tasks=max(M_RANGE) + 1, pad_vms=3)
+    legacy_out = sweep.simulate_batch(legacy)
+    res = product(axis("n_maps", M_RANGE)).run()
+    np.testing.assert_array_equal(np.asarray(legacy_out.makespan[:, 0]),
+                                  res["makespan"])
+    np.testing.assert_array_equal(np.asarray(legacy_out.network_cost[:, 0]),
+                                  res["network_cost"])
+    # and the shim itself still emits the same batch
+    shim = sweep.paper_grid(m_range=M_RANGE)
+    for f in engine.ScenarioArrays._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(legacy, f)),
+                                      np.asarray(getattr(shim, f)),
+                                      err_msg=f"field {f}")
+    # Table IV values themselves
+    expected = 4250.0 / (np.arange(1, 11) + 1)
+    np.testing.assert_allclose(res["network_cost"], expected, rtol=1e-4)
+
+
+def test_table4_policy_grid_shim_bit_identity():
+    combos_legacy = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+    batch, combos = sweep.policy_grid(m_range=range(1, 6), n_vms=3,
+                                      vm_type="medium")
+    assert combos == combos_legacy
+    plan = product(axis("sched_policy", list(SchedPolicy)),
+                   axis("binding_policy", list(BindingPolicy)),
+                   axis("n_maps", range(1, 6)),
+                   vm_type="medium")
+    res = plan.run()
+    out = sweep.simulate_batch(batch)
+    mk = np.asarray(out.makespan[:, 0]).reshape(2, 3, 5)
+    np.testing.assert_array_equal(mk, res["makespan"])
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-VM device-side cells (the closed ROADMAP item)
+# ---------------------------------------------------------------------------
+
+HET_VMS = (VM_SMALL, VM_MEDIUM, VM_LARGE)
+HET_JOB = dataclasses.replace(JOB_MEDIUM, n_maps=7, n_reduces=2)
+
+
+@pytest.mark.parametrize("sp,bp", ALL_POLICIES,
+                         ids=[f"{sp.name}-{bp.name}" for sp, bp in ALL_POLICIES])
+def test_hetero_encode_cell_matches_host_encoding(sp, bp):
+    """Mixed small/medium/large cell via per-VM-array encode_cell must match
+    from_scenario (the stack_scenarios element encoding) bit for bit."""
+    sc = Scenario(vms=HET_VMS, jobs=(HET_JOB,), sched_policy=sp,
+                  binding_policy=bp)
+    host = engine.from_scenario(sc, pad_tasks=12, pad_vms=4)
+    dev = sweep.encode_cell(
+        n_maps=7, n_reduces=2, n_vms=3,
+        vm_mips=np.array([v.mips for v in HET_VMS] + [0.0], np.float32),
+        vm_pes=np.array([float(v.pes) for v in HET_VMS] + [0.0], np.float32),
+        vm_cost=np.array([v.cost_per_sec for v in HET_VMS] + [0.0],
+                         np.float32),
+        job_length=HET_JOB.length_mi, job_data=HET_JOB.data_mb,
+        pad_tasks=12, pad_vms=4, sched_policy=int(sp), binding_policy=int(bp))
+    for f in engine.ScenarioArrays._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(host, f)), np.asarray(getattr(dev, f)),
+            err_msg=f"field {f} ({sp.name}/{bp.name})")
+
+
+@pytest.mark.parametrize("sp,bp", ALL_POLICIES,
+                         ids=[f"{sp.name}-{bp.name}" for sp, bp in ALL_POLICIES])
+def test_hetero_device_sweep_matches_oracle(sp, bp):
+    """The same mixed cell simulated through a vms-axis SweepPlan matches
+    stack_scenarios + the refsim oracle."""
+    sc = Scenario(vms=HET_VMS, jobs=(HET_JOB,), sched_policy=sp,
+                  binding_policy=bp)
+    plan = product(axis("vms", [HET_VMS]),
+                   sched_policy=sp, binding_policy=bp,
+                   n_maps=7, n_reduces=2,
+                   job_length=HET_JOB.length_mi, job_data=HET_JOB.data_mb)
+    res = plan.run()
+    stacked = sweep.simulate_batch(sweep.stack_scenarios([sc]))
+    np.testing.assert_array_equal(res["makespan"],
+                                  np.asarray(stacked.makespan[:, 0]))
+    ref = refsim.simulate(sc).job()
+    for f in ("avg_exec", "makespan", "vm_cost", "network_cost"):
+        np.testing.assert_allclose(res[f].item(), getattr(ref, f),
+                                   rtol=2e-4, atol=1e-2,
+                                   err_msg=f"{f} ({sp.name}/{bp.name})")
+
+
+def test_hetero_least_loaded_beats_round_robin_device_side():
+    """Acceptance: a heterogeneous device-side sweep where LEAST_LOADED
+    beats ROUND_ROBIN on makespan (binding differentiates inside grids)."""
+    plan = product(axis("binding_policy", list(BindingPolicy)),
+                   vms=("medium",) * 2 + ("small",) * 4,
+                   sched_policy=SchedPolicy.SPACE_SHARED,
+                   n_maps=12, n_reduces=2, job_type="medium")
+    res = plan.run()
+    ll = float(res.select(binding_policy=BindingPolicy.LEAST_LOADED)["makespan"])
+    rr = float(res.select(binding_policy=BindingPolicy.ROUND_ROBIN)["makespan"])
+    assert ll < rr, f"LEAST_LOADED {ll} !< ROUND_ROBIN {rr}"
+    # and the oracle agrees with both device-side numbers
+    for bp, got in ((BindingPolicy.LEAST_LOADED, ll),
+                    (BindingPolicy.ROUND_ROBIN, rr)):
+        sc = Scenario(vms=(VM_MEDIUM,) * 2 + (VM_SMALL,) * 4,
+                      jobs=(dataclasses.replace(JOB_MEDIUM, n_maps=12,
+                                                n_reduces=2),),
+                      sched_policy=SchedPolicy.SPACE_SHARED,
+                      binding_policy=bp)
+        assert refsim.simulate(sc).job().makespan == pytest.approx(got,
+                                                                   rel=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan composition, labeling, execution modes
+# ---------------------------------------------------------------------------
+
+def test_zip_and_select_composition():
+    plan = product(
+        zip_(axis("n_maps", (1, 2, 4)), axis("job_type",
+                                             ("small", "medium", "big"))),
+        axis("vm_type", ("small", "medium")),
+    )
+    assert plan.shape == (3, 2)
+    res = plan.run()
+    assert res["makespan"].shape == (3, 2)
+    # selecting a zipped component drops the whole zipped dim
+    one = res.select(n_maps=4, vm_type="medium")
+    assert one.shape == ()
+    d = one.to_dict()
+    single = engine.simulate(paper_scenario(job="big", vm="medium", n_maps=4))
+    assert d["makespan"] == pytest.approx(float(single.makespan[0]), rel=1e-6)
+    # multi-match keeps a filtered dim; enum/str coords both resolve
+    assert res.select(vm_type="small").shape == (3,)
+    assert res.coord((2, 1)) == {"n_maps": 4, "job_type": "big",
+                                 "vm_type": "medium"}
+    # two components of one zipped dim constrain it jointly
+    both = res.select(n_maps=4, job_type="big", vm_type="medium")
+    assert both.to_dict()["makespan"] == d["makespan"]
+    with pytest.raises(KeyError, match="not on the axis"):
+        res.select(n_maps=4, job_type="small")      # inconsistent pair
+
+
+def test_run_chunked_bit_identical():
+    plan = product(axis("n_maps", range(1, 11)))
+    res = plan.run()
+    chunked = plan.run(chunk=4)          # 10 cells -> 4+4+2(padded)
+    for name in res.metric_names:
+        np.testing.assert_array_equal(res[name], chunked[name],
+                                      err_msg=name)
+
+
+def test_run_on_mesh_matches_plain():
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("pod",))
+    plan = product(axis("n_maps", range(1, 8)))   # 7 cells: exercises padding
+    res, sharded = plan.run(), plan.run(mesh=mesh)
+    for name in res.metric_names:
+        np.testing.assert_array_equal(res[name], sharded[name], err_msg=name)
+
+
+def test_per_job_completion_and_utilization_metrics():
+    res = product(axis("n_maps", (1, 5))).run()
+    np.testing.assert_allclose(res["completion"], res["makespan"])  # submit=0
+    assert (res["utilization"] > 0).all() and (res["utilization"] <= 1).all()
+    # more parallelism -> better cluster utilization on the 3-VM cell
+    assert res.select(n_maps=5)["utilization"] > res.select(n_maps=1)["utilization"]
+
+
+def test_select_errors_name_unknown_keys():
+    res = product(axis("n_maps", (1, 2))).run()
+    with pytest.raises(KeyError, match="no axis"):
+        res.select(bogus=3)
+    with pytest.raises(KeyError, match="not on the axis"):
+        res.select(n_maps=99)
+    with pytest.raises(KeyError, match="no metric"):
+        res["nope"]
+
+
+# ---------------------------------------------------------------------------
+# Validation: clear errors instead of opaque vmap shape failures
+# ---------------------------------------------------------------------------
+
+def test_grid_arrays_unequal_lengths_names_offender():
+    params = dict(n_maps=np.arange(1, 5, dtype=np.int32),
+                  n_reduces=np.ones(4, np.int32),
+                  n_vms=np.full(4, 3, np.int32),
+                  vm_mips=np.full(3, 250.0, np.float32),   # wrong length
+                  vm_pes=np.ones(4, np.float32),
+                  vm_cost=np.ones(4, np.float32),
+                  job_length=np.full(4, 1e5, np.float32),
+                  job_data=np.full(4, 2e5, np.float32))
+    with pytest.raises(ValueError, match="vm_mips"):
+        sweep.grid_arrays(params, pad_tasks=6, pad_vms=3)
+
+
+def test_grid_arrays_unknown_key():
+    with pytest.raises(ValueError, match="unknown.*n_mapss"):
+        sweep.grid_arrays({"n_mapss": np.ones(3, np.int32)},
+                          pad_tasks=4, pad_vms=3)
+
+
+def test_grid_arrays_scalar_param_rejected():
+    with pytest.raises(ValueError, match="leading grid dimension"):
+        sweep.grid_arrays({"n_maps": np.int32(3)}, pad_tasks=4, pad_vms=3)
+
+
+def test_grid_arrays_trailing_width_validated():
+    base = dict(n_maps=np.full(4, 2, np.int32))
+    with pytest.raises(ValueError, match="vm_mips.*pad_vms=3"):
+        sweep.grid_arrays({**base, "vm_mips": np.full((4, 5), 250.0,
+                                                      np.float32)},
+                          pad_tasks=4, pad_vms=3)
+    with pytest.raises(ValueError, match="one scalar per cell"):
+        sweep.grid_arrays({**base, "job_length": np.full((4, 2), 1e5,
+                                                         np.float32)},
+                          pad_tasks=4, pad_vms=3)
+
+
+def test_zip_length_mismatch_names_axes():
+    with pytest.raises(ValueError, match="n_maps"):
+        zip_(axis("n_maps", (1, 2, 3)), axis("n_vms", (3, 6)))
+
+
+def test_plan_conflicting_parameter_owners():
+    with pytest.raises(ValueError, match="vm_mips"):
+        product(axis("vm_type", ("small",)), vm_mips=500.0).params()
+    with pytest.raises(ValueError, match="n_vms"):
+        product(axis("vms", [("small", "small")]),
+                axis("n_vms", (1, 2))).params()
+
+
+def test_axis_unknown_name_lists_valid():
+    with pytest.raises(ValueError, match="not an encode_cell parameter"):
+        axis("warp_factor", (1, 2))
+    with pytest.raises(ValueError, match="unknown VM type"):
+        axis("vm_type", ("tiny",))
+
+
+def test_plan_padding_too_small():
+    plan = product(axis("n_maps", (1, 30))).replace(pad_tasks=8)
+    with pytest.raises(ValueError, match="pad_tasks"):
+        plan.arrays()
+
+
+def test_per_vm_vector_narrower_than_n_vms_rejected():
+    """A 2-entry vm_mips vector with the default n_vms=3 must error, not
+    silently run VM 2 at 0 MIPS (regression: zero-padding gave makespan=1e30
+    with no exception)."""
+    plan = product(axis("vm_mips", [np.array([500.0, 250.0])]))
+    with pytest.raises(ValueError, match="vm_mips.*n_vms=3"):
+        plan.params()
+    # wide enough for its n_vms: fine, and extra lanes are ignored
+    ok = product(axis("vm_mips", [np.array([500.0, 250.0])]), n_vms=2)
+    assert ok.params()["vm_mips"].shape == (1, 2)
+
+
+def test_axis_vector_values_validated():
+    # vectors for a scalar-only parameter: clear error, not a deep
+    # encode_cell broadcast failure
+    with pytest.raises(ValueError, match="one scalar per cell"):
+        axis("n_maps", [[1, 2], [3, 4]])
+    # mixed scalar/vector values: the intended ValueError, not IndexError
+    with pytest.raises(ValueError, match="1-D"):
+        axis("vm_mips", [250.0, [250.0, 500.0]])
+    with pytest.raises(ValueError, match="share one length"):
+        axis("vm_mips", [[250.0], [250.0, 500.0]])
+
+
+def test_sharded_runner_cached_per_mesh():
+    from repro.core.sweep import _sharded_runner
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("pod",))
+    assert _sharded_runner(mesh) is _sharded_runner(mesh)
