@@ -1,0 +1,71 @@
+"""CI benchmark smoke gate: ``sweep_throughput`` at b64 on the CPU
+(interpret-class) path, failing on crash or on a >25% throughput
+regression against the checked-in ``BENCH_sweep.json`` baseline.
+
+Absolute wall times are not comparable across machines, so the baseline's
+``calibration_us`` (a fixed jitted micro-workload timed when the baseline
+was recorded, see ``sweep_throughput.calibration_us``) rescales the gate:
+this machine is allowed ``baseline_us × (local_calib / baseline_calib) ×
+(1 + tolerance)`` per call.  Override the tolerance with
+``BENCH_SMOKE_TOL`` (fraction, default 0.25).
+
+    PYTHONPATH=src python -m benchmarks.bench_smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+import time
+
+import numpy as np
+
+from benchmarks.sweep_throughput import _random_plan, calibration_us
+
+
+def _min_of_reps(reps=7):
+    """b64 us/call as a min over reps: the mean-of-3 the baseline records
+    is fine for trend tracking, but a pass/fail gate on a shared CI runner
+    needs the noise floor, not the noise."""
+    plan = _random_plan(64, np.random.default_rng(0))
+    res = plan.run()                               # compile + warm caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = plan.run()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, int(res["realized_epochs"].max())
+
+
+def main() -> int:
+    base_path = (pathlib.Path(__file__).resolve().parent.parent
+                 / "BENCH_sweep.json")
+    baseline = json.loads(base_path.read_text())
+    base_row = next(r for r in baseline["rows"]
+                    if r["name"] == "sweep_throughput_b64")
+    base_us = float(base_row["us_per_call"])
+    base_calib = float(baseline.get("meta", {}).get("calibration_us", 0.0))
+
+    tol = float(os.environ.get("BENCH_SMOKE_TOL", "0.25"))
+    local_calib = calibration_us()
+    scale = (local_calib / base_calib) if base_calib > 0 else 1.0
+
+    us, realized = _min_of_reps()
+    budget = base_us * scale * (1.0 + tol)
+    print(f"sweep_throughput_b64: {us:.1f} us/call min-of-7 "
+          f"({64 / us * 1e6:.0f}_scen/s, realized epochs {realized}); "
+          f"baseline {base_us:.1f} us/call, machine-speed scale "
+          f"{scale:.2f}x -> budget {budget:.1f} us/call "
+          f"(tolerance {tol:.0%})")
+    if not np.isfinite(us) or us > budget:
+        print("FAIL: benchmark smoke regression "
+              f"({us:.1f} > {budget:.1f} us/call)")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,20 @@
 """Kernel micro-benchmarks (interpret-mode timings are NOT TPU numbers —
 the derived column carries the jnp-reference comparison + the structural
-quantity that matters on TPU: HBM-traffic reduction / FLOP parity)."""
+quantity that matters on TPU: HBM-traffic reduction / FLOP parity).
+
+``python -m benchmarks.kernel_bench`` additionally sweeps ``mr_epoch``
+megakernel tile sizes and records the winners + device metadata to
+``BENCH_kernel.json`` at the repo root (interpret-mode numbers rank tile
+shapes by the work the schedule actually does — epoch-loop trips × lanes —
+which is the quantity the TPU path tiles for; re-run on real hardware to
+re-rank).
+"""
 from __future__ import annotations
 
+import json
+import multiprocessing
+import pathlib
+import platform
 import time
 
 import jax
@@ -59,23 +71,99 @@ def wkv_rows():
             ("kernel_wkv6_state_traffic_reduction", us, f"{ratio}x")]
 
 
+def _mr_batch(m_range=range(1, 21)):
+    from repro.core import sweep
+    return sweep.product(sweep.axis("n_maps", m_range)).arrays()
+
+
 def mr_sched_rows():
     import numpy as np
 
-    from repro.core import sweep
-    from repro.kernels.mr_sched import schedule
+    from repro.kernels.mr_sched import epoch_schedule, schedule
     from repro.kernels.mr_sched.ref import schedule_ref
-    batch = sweep.paper_grid(m_range=range(1, 21))
+    batch = _mr_batch()
     us_k = _time(lambda b: schedule(b, tile=8)[1], batch)
+    us_e = _time(lambda b: epoch_schedule(b, tile=8).finish, batch)
     us_r = _time(lambda b: schedule_ref(b)[1], batch)
-    s_k, f_k = schedule(batch, tile=8)
     s_r, f_r = schedule_ref(batch)
     valid = np.asarray(batch.task_valid)
-    err = float(np.abs(np.where(valid, np.asarray(f_k) - np.asarray(f_r),
-                                0)).max())
-    return [("kernel_mr_sched_interp", us_k, f"err={err:.1e}"),
+
+    def err(f_k):
+        return float(np.abs(np.where(valid,
+                                     np.asarray(f_k) - np.asarray(f_r),
+                                     0)).max())
+
+    return [("kernel_mr_sched_interp", us_k, f"err={err(schedule(batch, tile=8)[1]):.1e}"),
+            ("kernel_mr_epoch_interp", us_e,
+             f"err={err(epoch_schedule(batch, tile=8).finish):.1e}"),
             ("kernel_mr_sched_xla_engine_ref", us_r, "baseline")]
+
+
+def mr_epoch_tile_rows(tiles=(8, 16, 32, 64, 128), n=256, reps=3):
+    """Sweep ``mr_epoch`` tile sizes over a mixed-policy random batch.
+
+    A bigger tile amortizes grid steps but couples more lanes to one
+    early-exit predicate (the tile runs to its slowest lane); the sweep
+    measures that trade-off on this backend.  Returns one row per tile
+    plus a winner row.
+    """
+    import numpy as np
+
+    from repro.core import sweep
+    from repro.kernels.mr_sched import epoch_schedule
+    rng = np.random.default_rng(0)
+    params = dict(
+        n_maps=rng.integers(1, 21, n).astype(np.int32),
+        n_reduces=rng.integers(1, 3, n).astype(np.int32),
+        n_vms=rng.integers(1, 10, n).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
+        vm_pes=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+        vm_cost=np.ones(n, np.float32),
+        job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
+        sched_policy=rng.integers(0, 2, n).astype(np.int32),
+        binding_policy=rng.integers(0, 3, n).astype(np.int32),
+    )
+    batch = sweep.grid_arrays(params, pad_tasks=23, pad_vms=9)
+    rows, timings = [], {}
+    for tile in tiles:
+        us = _time(lambda b, t=tile: epoch_schedule(b, tile=t).finish,
+                   batch, reps=reps)
+        timings[tile] = us
+        rows.append((f"kernel_mr_epoch_tile{tile}", us,
+                     f"{n / us * 1e6:.0f}_scen/s"))
+    best = min(timings, key=timings.get)
+    rows.append(("kernel_mr_epoch_best_tile", timings[best], str(best)))
+    return rows, best
 
 
 def all_rows():
     return flash_rows() + wkv_rows() + mr_sched_rows()
+
+
+def main() -> None:
+    tile_rows, best_tile = mr_epoch_tile_rows()
+    rows = mr_sched_rows() + tile_rows
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
+    payload = {
+        "benchmark": "mr_sched/mr_epoch kernel micro-benchmarks",
+        "meta": {
+            "backend": jax.default_backend(),
+            "device": jax.devices()[0].device_kind,
+            "device_count": jax.device_count(),
+            "cpu_count": multiprocessing.cpu_count(),
+            "platform": platform.platform(),
+            "interpret": jax.default_backend() != "tpu",
+            "best_tile": best_tile,
+        },
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    for r in payload["rows"]:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

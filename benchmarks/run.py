@@ -31,7 +31,7 @@ def main() -> None:
     rows += speculative_execution.all_rows()
 
     print("name,us_per_call,derived")
-    for name, us, derived in rows:
+    for name, us, derived, *_ in rows:
         print(f"{name},{us:.1f},{derived}")
     sys.stdout.flush()
 

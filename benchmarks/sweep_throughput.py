@@ -8,23 +8,42 @@ devices × single-device throughput, reported as the derived column.
 
 The measured path is the declarative API end to end:
 :func:`~repro.core.sweep.zip_`-ed random axes compiled and executed by
-``SweepPlan.run()`` (encode + simulate + labeled readback per call).
+``SweepPlan.run()`` (encode + simulate + labeled readback per call) under
+the adaptive execution schedule (DESIGN.md §6 — shape buckets + batch
+early exit), so each row also records the *realized* epoch count next to
+the worst-case ``2T + 2`` bound the pre-adaptive engine always paid.
 
-``python -m benchmarks.sweep_throughput`` records the rows to
+Mixed-policy gap: scheduling policies differ in how many event epochs a
+scenario intrinsically needs (space-shared admission serializes starts), so
+comparing a mixed grid's scen/s against the all-time-shared row conflates
+policy mixing with policy *cost*.  The ``unifpol`` row therefore runs the
+mixed grid's exact workload as six per-combination uniform plans (summed
+wall time) — the relevant baseline for "what does mixing policies inside
+one batch cost?".  The recorded gap is mixed vs that.
+
+``python -m benchmarks.sweep_throughput`` records the rows plus
+backend/device metadata (and a small calibration figure that lets CI gate
+regressions across machine speeds, see ``benchmarks.bench_smoke``) to
 ``BENCH_sweep.json`` at the repo root, the perf-trajectory baseline.
 """
 from __future__ import annotations
 
 import json
+import multiprocessing
 import pathlib
+import platform
 import time
 
+import jax
 import numpy as np
 
+from repro.core import BindingPolicy, SchedPolicy
 from repro.core.sweep import axis, product, zip_
 
+EPOCH_BOUND = 2 * 21 + 2   # the pre-adaptive engine's static bound at T=21
 
-def _random_plan(n, rng, mixed_policies=False):
+
+def _random_cols(n, rng, mixed_policies=False):
     cols = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
         n_reduces=np.ones(n, np.int32),
@@ -39,10 +58,26 @@ def _random_plan(n, rng, mixed_policies=False):
     if mixed_policies:
         cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
         cols["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
+    return cols
+
+
+def _plan_of(cols):
     # one zipped dimension: all columns advance together (a labeled random
     # scenario list, not a cartesian grid)
     plan = product(zip_(*(axis(k, v) for k, v in cols.items())))
     return plan.replace(pad_tasks=21, pad_vms=9)
+
+
+def _random_plan(n, rng, mixed_policies=False):
+    return _plan_of(_random_cols(n, rng, mixed_policies))
+
+
+def _time_runs(run, reps=3):
+    run()                                       # compile + warm caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = run()
+    return (time.perf_counter() - t0) / reps, res
 
 
 def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
@@ -52,38 +87,103 @@ def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
     tag = "_mixedpol" if mixed_policies else ""
     for n in batch_sizes:
         plan = _random_plan(n, rng, mixed_policies)
-        plan.run()                                  # compile + warm caches
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            plan.run()
-        dt = (time.perf_counter() - t0) / reps
-        us_per_call = dt * 1e6
-        scen_per_s = n / dt
-        rows.append((f"sweep_throughput{tag}_b{n}", us_per_call,
-                     f"{scen_per_s:.0f}_scen/s"))
+        dt, res = _time_runs(plan.run, reps)
+        rows.append((f"sweep_throughput{tag}_b{n}", dt * 1e6,
+                     f"{n / dt:.0f}_scen/s",
+                     int(res["realized_epochs"].max())))
     return rows
+
+
+def unifpol_rows(n=2048, reps=3):
+    """The mixed grid's workload as six per-policy-combo uniform plans.
+
+    Policy-uniform sub-batches are the fair reference for the mixed row:
+    each combo pays only its own realized epoch count, exactly what a user
+    running six separate uniform sweeps would see.  Summed wall time over
+    the same 2048 scenarios -> directly comparable scen/s.
+    """
+    # same fresh rng(0) first-draw as the mixedpol row -> identical grid
+    cols = _random_cols(n, np.random.default_rng(0), mixed_policies=True)
+    plans = []
+    for sp in SchedPolicy:
+        for bp in BindingPolicy:
+            pick = np.nonzero((cols["sched_policy"] == int(sp))
+                              & (cols["binding_policy"] == int(bp)))[0]
+            if len(pick) == 0:      # small n may leave a combo unpopulated
+                continue
+            sub = {k: v[pick] for k, v in cols.items()
+                   if k not in ("sched_policy", "binding_policy")}
+            plans.append(_plan_of(sub).replace(
+                base=dict(sched_policy=sp, binding_policy=bp)))
+
+    realized = [0]
+
+    def run_all():
+        out = [p.run() for p in plans]
+        realized[0] = max(int(r["realized_epochs"].max()) for r in out)
+        return out
+
+    dt, _ = _time_runs(run_all, reps)
+    return [(f"sweep_throughput_unifpol_b{n}", dt * 1e6,
+             f"{n / dt:.0f}_scen/s", realized[0])]
+
+
+def calibration_us(reps=15):
+    """A fixed miniature sweep (b16 `run()`, min over reps — the noise
+    floor, since this feeds a pass/fail gate) timed on this machine and
+    stored with the baseline, so CI smoke runs can scale the regression
+    gate by relative machine speed.  Deliberately the same code path as
+    the gated workload — dispatch + encode + epoch loop + readback — so
+    the ratio tracks the real cost profile, which a pure-compute matmul
+    calibration would not (the b64 row is dispatch-dominated)."""
+    plan = _random_plan(16, np.random.default_rng(123))
+    plan.run()                                     # compile + warm caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        plan.run()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def all_rows():
     # mixed-policy row: same grid with random (sched, binding) per scenario —
-    # policy diversity is data, so one lowering serves all scenarios *within*
-    # the batch (this row still traces separately from the default row, whose
-    # plan leaves the policy columns to encode_cell's defaults)
+    # policy diversity is data, so one adaptive schedule serves all scenarios
+    # within the batch; the unifpol row is its uniform-execution reference
     return (throughput_rows()
-            + throughput_rows(batch_sizes=(2048,), mixed_policies=True))
+            + throughput_rows(batch_sizes=(2048,), mixed_policies=True)
+            + unifpol_rows())
 
 
 def main() -> None:
     rows = all_rows()
+    by_name = {r[0]: r for r in rows}
+    mixed = by_name["sweep_throughput_mixedpol_b2048"][1]
+    unif = by_name["sweep_throughput_unifpol_b2048"][1]
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
     payload = {
-        "benchmark": "sweep_throughput (SweepPlan.run end-to-end)",
-        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
-                 for n, us, d in rows],
+        "benchmark": "sweep_throughput (SweepPlan.run end-to-end, "
+                     "adaptive schedule)",
+        "meta": {
+            "backend": jax.default_backend(),
+            "device": jax.devices()[0].device_kind,
+            "device_count": jax.device_count(),
+            "cpu_count": multiprocessing.cpu_count(),
+            "platform": platform.platform(),
+            "epoch_bound": EPOCH_BOUND,
+            "calibration_us": round(calibration_us(), 1),
+            "mixedpol_gap_vs_unifpol": round(mixed / unif - 1.0, 4),
+        },
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d,
+                  "realized_epochs": ep}
+                 for n, us, d, ep in rows],
     }
     out.write_text(json.dumps(payload, indent=2) + "\n")
     for r in payload["rows"]:
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print(f"{r['name']},{r['us_per_call']},{r['derived']},"
+              f"epochs={r['realized_epochs']}/{EPOCH_BOUND}")
+    print(f"mixedpol vs unifpol gap: "
+          f"{payload['meta']['mixedpol_gap_vs_unifpol']:+.1%}")
     print(f"wrote {out}")
 
 

@@ -162,12 +162,18 @@ def bind_tasks(binding_policy, task_valid, task_len, vm_mips, vm_pes,
 
     vm_pes_f = jnp.asarray(vm_pes, jnp.float32)
 
+    vm_iota = jnp.arange(vm_mips.shape[0])
+
     def ll_step(i, carry):
         load, out = carry
         v = jnp.argmin(load).astype(jnp.int32)
         add = jnp.where(task_valid[i],
                         task_len[i] / (vm_mips[v] * vm_pes_f[v]), 0.0)
-        return load.at[v].add(add), out.at[i].set(v)
+        # one-hot add instead of load.at[v].add: under vmap the scatter
+        # serializes on CPU and dominated mixed-binding encode time; adding
+        # 0.0 to untouched lanes is bit-identical (loads are never -0.0)
+        return (load + jnp.where(vm_iota == v, add, 0.0),
+                out.at[i].set(v))
 
     _, ll = jax.lax.fori_loop(0, T, ll_step,
                               (load0, jnp.zeros(T, jnp.int32)))
@@ -268,22 +274,31 @@ def _padi(xs, n):
 # The engine
 # ---------------------------------------------------------------------------
 
-def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
-    """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly.
+class _Carry(NamedTuple):
+    """Per-scenario event-loop state advanced one epoch at a time."""
+    time: jax.Array
+    rem: jax.Array        # f32[T] remaining MI
+    running: jax.Array    # bool[T]
+    start: jax.Array      # f32[T]
+    finish: jax.Array     # f32[T]
+    ready: jax.Array      # f32[T]
+    maps_left: jax.Array  # i32[J]
+    epoch: jax.Array      # i32 — realized event epochs for *this* lane
 
-    Both scheduling policies run branch-free inside the one while_loop body:
 
-    * TIME_SHARED — every ready task runs; the fluid share
-      ``mips * min(1, pes / n)`` throttles crowded VMs.
-    * SPACE_SHARED — the admission gate keeps at most ``pes`` tasks running
-      per VM (so the same share formula degenerates to full ``mips``), and
-      pending tasks are admitted in (ready time, task index) priority order
-      as slots free up.
+class _EpochInv(NamedTuple):
+    """Loop-invariant derived arrays shared by every epoch of one lane."""
+    shuffle: jax.Array     # f32[J]
+    task_pes: jax.Array    # f32[T]
+    vm_onehot: jax.Array   # f32[T, V]
+    job_onehot: jax.Array  # f32[T, J]
+    same_vm: jax.Array     # bool[T, T]
+    idx_earlier: jax.Array  # bool[T, T]
+    is_space: jax.Array    # bool scalar
 
-    Every live epoch fires at least one start or completion (arrival events
-    are only scheduled when a PE slot is free), so ``2T + 2`` epochs bound
-    the loop; rates are evaluated exactly once per epoch.
-    """
+
+def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
+    """Derived quantities + initial carry for one encoded scenario."""
     T = sc.task_job.shape[0]
     J = sc.job_length.shape[0]
     V = sc.vm_mips.shape[0]
@@ -321,95 +336,172 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
     same_vm = sc.task_vm[:, None] == sc.task_vm[None, :]
     idx_earlier = idx[None, :] < idx[:, None]
 
-    class Carry(NamedTuple):
-        time: jax.Array
-        rem: jax.Array        # f32[T] remaining MI
-        running: jax.Array    # bool[T]
-        start: jax.Array      # f32[T]
-        finish: jax.Array     # f32[T]
-        ready: jax.Array      # f32[T]
-        maps_left: jax.Array  # i32[J]
-        epoch: jax.Array      # i32
+    inv = _EpochInv(shuffle=shuffle, task_pes=task_pes, vm_onehot=vm_onehot,
+                    job_onehot=job_onehot, same_vm=same_vm,
+                    idx_earlier=idx_earlier, is_space=is_space)
+    c0 = _Carry(time=jnp.float32(0.0), rem=task_len,
+                running=jnp.zeros(T, bool),
+                start=jnp.full(T, _BIG, jnp.float32),
+                finish=jnp.full(T, _BIG, jnp.float32),
+                ready=ready0, maps_left=maps_left0,
+                epoch=jnp.int32(0))
+    return inv, c0
 
-    c0 = Carry(time=jnp.float32(0.0), rem=task_len,
-               running=jnp.zeros(T, bool),
-               start=jnp.full(T, _BIG, jnp.float32),
-               finish=jnp.full(T, _BIG, jnp.float32),
-               ready=ready0, maps_left=maps_left0,
-               epoch=jnp.int32(0))
 
+def _has_unfinished(sc: ScenarioArrays, c: _Carry) -> jax.Array:
+    return jnp.any(sc.task_valid & (c.finish >= _BIG / 2))
+
+
+def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
+    """Advance one event epoch.  Idempotent for finished lanes (every
+    update is gated on ``live``/``running``), so a vmapped batch may keep
+    stepping a lane past its last event without changing its state — the
+    property the batched early-exit driver relies on.  Leaves ``epoch``
+    untouched; the drivers count realized epochs."""
+    # single rates evaluation per epoch (space-shared keeps n <= pes, so
+    # the min() clamp makes this formula serve both policies)
     def vm_counts(running):
-        return running.astype(jnp.float32) @ vm_onehot
+        return running.astype(jnp.float32) @ inv.vm_onehot
 
-    def cond(c: Carry):
-        unfinished = sc.task_valid & (c.finish >= _BIG / 2)
-        return jnp.any(unfinished) & (c.epoch < 2 * T + 2)
+    n_on_vm = vm_counts(c.running)
+    share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
+                                     / jnp.maximum(n_on_vm, 1.0))
+    r = jnp.where(c.running, inv.vm_onehot @ share, 0.0)
 
-    def body(c: Carry):
-        # single rates evaluation per epoch (space-shared keeps n <= pes, so
-        # the min() clamp makes this formula serve both policies)
-        n_on_vm = vm_counts(c.running)
-        share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
-                                         / jnp.maximum(n_on_vm, 1.0))
-        r = jnp.where(c.running, vm_onehot @ share, 0.0)
+    eta = jnp.where(c.running, c.time + c.rem / jnp.maximum(r, 1e-30),
+                    _BIG)
+    not_started = sc.task_valid & ~c.running & (c.finish >= _BIG / 2) \
+        & (c.start >= _BIG / 2)
+    # Space-shared: a pending task only defines an arrival event while
+    # its VM has a free PE slot; otherwise a completion epoch admits it.
+    has_slot = (inv.task_pes - inv.vm_onehot @ n_on_vm) > 0.5
+    arr = jnp.where(not_started & (~inv.is_space | has_slot),
+                    jnp.maximum(c.ready, c.time), _BIG)
+    t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
+    live = t_next < _BIG / 2
+    tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
 
-        eta = jnp.where(c.running, c.time + c.rem / jnp.maximum(r, 1e-30),
-                        _BIG)
-        not_started = sc.task_valid & ~c.running & (c.finish >= _BIG / 2) \
-            & (c.start >= _BIG / 2)
-        # Space-shared: a pending task only defines an arrival event while
-        # its VM has a free PE slot; otherwise a completion epoch admits it.
-        has_slot = (task_pes - vm_onehot @ n_on_vm) > 0.5
-        arr = jnp.where(not_started & (~is_space | has_slot),
-                        jnp.maximum(c.ready, c.time), _BIG)
-        t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
-        live = t_next < _BIG / 2
-        tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
+    # advance fluid state
+    rem = jnp.where(c.running, c.rem - (t_next - c.time) * r, c.rem)
 
-        # advance fluid state
-        rem = jnp.where(c.running, c.rem - (t_next - c.time) * r, c.rem)
+    # completions (all tied events fire in this one epoch)
+    done_now = live & c.running & (eta <= t_next + tie)
+    finish = jnp.where(done_now, t_next, c.finish)
+    running = c.running & ~done_now
+    rem = jnp.where(done_now, 0.0, rem)
 
-        # completions (all tied events fire in this one epoch)
-        done_now = live & c.running & (eta <= t_next + tie)
-        finish = jnp.where(done_now, t_next, c.finish)
-        running = c.running & ~done_now
-        rem = jnp.where(done_now, 0.0, rem)
+    # job map-phase completion -> release reduces after shuffle delay
+    maps_done_now = ((done_now & ~sc.task_is_reduce)
+                     .astype(jnp.float32) @ inv.job_onehot).astype(jnp.int32)
+    maps_left = c.maps_left - maps_done_now
+    phase_done = (maps_left == 0) & (c.maps_left > 0)
+    red_ready = jnp.where(phase_done, t_next + inv.shuffle, _BIG)
+    ready = jnp.where(
+        sc.task_is_reduce & phase_done[sc.task_job],
+        red_ready[sc.task_job], c.ready)
 
-        # job map-phase completion -> release reduces after shuffle delay
-        maps_done_now = ((done_now & ~sc.task_is_reduce)
-                         .astype(jnp.float32) @ job_onehot).astype(jnp.int32)
-        maps_left = c.maps_left - maps_done_now
-        phase_done = (maps_left == 0) & (c.maps_left > 0)
-        red_ready = jnp.where(phase_done, t_next + shuffle, _BIG)
-        ready = jnp.where(
-            sc.task_is_reduce & phase_done[sc.task_job],
-            red_ready[sc.task_job], c.ready)
-
-        # arrivals: time-shared starts every ready task immediately;
-        # space-shared admits the (ready, index)-first eligible tasks into
-        # the PE slots left free after this epoch's completions.
-        eligible = live & not_started & (c.ready <= t_next + tie)
-        free_after = task_pes - vm_onehot @ (n_on_vm - vm_counts(done_now))
-        key = c.ready
-        higher_prio = same_vm & ((key[None, :] < key[:, None])
+    # arrivals: time-shared starts every ready task immediately;
+    # space-shared admits the (ready, index)-first eligible tasks into
+    # the PE slots left free after this epoch's completions.
+    eligible = live & not_started & (c.ready <= t_next + tie)
+    free_after = inv.task_pes - inv.vm_onehot @ (n_on_vm
+                                                 - vm_counts(done_now))
+    key = c.ready
+    higher_prio = inv.same_vm & ((key[None, :] < key[:, None])
                                  | ((key[None, :] == key[:, None])
-                                    & idx_earlier))
-        rank = jnp.sum((higher_prio & eligible[None, :])
-                       .astype(jnp.float32), axis=1)
-        start_now = eligible & (~is_space | (rank < free_after))
-        start = jnp.where(start_now, t_next, c.start)
-        running = running | start_now
+                                    & inv.idx_earlier))
+    rank = jnp.sum((higher_prio & eligible[None, :])
+                   .astype(jnp.float32), axis=1)
+    start_now = eligible & (~inv.is_space | (rank < free_after))
+    start = jnp.where(start_now, t_next, c.start)
+    running = running | start_now
 
-        time = jnp.where(live, t_next, c.time)
-        return Carry(time, rem, running, start, finish, ready,
-                     maps_left, c.epoch + 1)
+    time = jnp.where(live, t_next, c.time)
+    return _Carry(time, rem, running, start, finish, ready,
+                  maps_left, c.epoch)
 
-    cf = jax.lax.while_loop(cond, body, c0)
+
+def _sim_output(sc: ScenarioArrays, cf: _Carry) -> SimOutput:
     exec_time = jnp.where(sc.task_valid, cf.finish - cf.start, 0.0)
     return SimOutput(start=cf.start, finish=cf.finish, ready=cf.ready,
                      exec_time=exec_time, n_epochs=cf.epoch,
                      finish_time=jnp.max(jnp.where(sc.task_valid, cf.finish,
                                                    0.0)))
+
+
+def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
+    """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly.
+
+    Both scheduling policies run branch-free inside the one while_loop body:
+
+    * TIME_SHARED — every ready task runs; the fluid share
+      ``mips * min(1, pes / n)`` throttles crowded VMs.
+    * SPACE_SHARED — the admission gate keeps at most ``pes`` tasks running
+      per VM (so the same share formula degenerates to full ``mips``), and
+      pending tasks are admitted in (ready time, task index) priority order
+      as slots free up.
+
+    Every live epoch fires at least one start or completion (arrival events
+    are only scheduled when a PE slot is free), so ``2T + 2`` epochs bound
+    the loop; rates are evaluated exactly once per epoch.  Batches should
+    prefer :func:`simulate_batch_arrays`, which shares one epoch loop across
+    all lanes and stops at the batch's realized epoch count.
+    """
+    T = sc.task_job.shape[0]
+    inv, c0 = _epoch_setup(sc)
+
+    def cond(c: _Carry):
+        return _has_unfinished(sc, c) & (c.epoch < 2 * T + 2)
+
+    def body(c: _Carry):
+        return _epoch_step(sc, inv, c)._replace(epoch=c.epoch + 1)
+
+    cf = jax.lax.while_loop(cond, body, c0)
+    return _sim_output(sc, cf)
+
+
+def simulate_batch_arrays(
+        batch: ScenarioArrays) -> tuple[SimOutput, jax.Array]:
+    """Run a stacked batch with one shared epoch loop (batch early exit).
+
+    Instead of vmapping the per-lane ``while_loop`` (whose batching rule
+    masks every carry leaf with a per-lane ``select`` each iteration), the
+    epoch loop lives *outside* the vmap: an outer ``while_loop`` advances a
+    vmapped epoch body while ``any(lane active)``, so the batch stops at its
+    own realized epoch count instead of the static ``2T + 2`` worst-case
+    bound.  :func:`_epoch_step` is idempotent for finished lanes, so no
+    masking is needed and every lane's result is bit-identical to
+    ``jax.vmap(simulate_arrays)`` (pinned in the parity suite).
+
+    Returns ``(SimOutput, realized_epochs)`` where ``realized_epochs`` is
+    the i32 scalar number of epoch iterations the batch actually executed
+    (== the max per-lane ``n_epochs``).
+    """
+    T = batch.task_job.shape[1]
+    bound = jnp.int32(2 * T + 2)
+    inv, c0 = jax.vmap(_epoch_setup)(batch)
+
+    def lanes_active(c: _Carry) -> jax.Array:
+        return jax.vmap(_has_unfinished)(batch, c)
+
+    # per-lane activity rides in the carry, so each epoch pays exactly one
+    # O(N·T) activity scan (cond and body are separate XLA computations and
+    # could not share a recomputed one)
+    def cond(state):
+        _, active, n = state
+        return jnp.any(active) & (n < bound)
+
+    def body(state):
+        c, active, n = state
+        c2 = jax.vmap(_epoch_step)(batch, inv, c)
+        # per-lane realized epochs: only lanes that still had work count
+        # this iteration (matches the per-lane while_loop's count exactly)
+        c2 = c2._replace(epoch=c.epoch + active.astype(jnp.int32))
+        return c2, lanes_active(c2), n + 1
+
+    cf, _, realized = jax.lax.while_loop(
+        cond, body, (c0, lanes_active(c0), jnp.int32(0)))
+    return jax.vmap(_sim_output)(batch, cf), realized
 
 
 # ---------------------------------------------------------------------------
@@ -420,14 +512,27 @@ def job_metrics(sc: ScenarioArrays, out: SimOutput) -> JobMetrics:
     J = sc.job_length.shape[0]
     is_map = sc.task_valid & ~sc.task_is_reduce
     is_red = sc.task_valid & sc.task_is_reduce
+    # Segment reductions as one-hot contractions / masked maxima instead of
+    # jax.ops.segment_* scatters: vmapped scatters serialize on XLA:CPU and
+    # dominated the sweep's per-call time (they cost more than the event
+    # loop itself).  XLA:CPU accumulates both a dot's contraction dim and a
+    # scatter-add in task-index order, so the sums are bit-identical
+    # (pinned in the adaptive-schedule parity suite); maxima are exact in
+    # any order.
+    job_onehot = (sc.task_job[:, None] == jnp.arange(J)[None, :]
+                  ).astype(jnp.float32)
 
     def seg_sum(x, m):
-        return jax.ops.segment_sum(jnp.where(m, x, 0.0), sc.task_job,
-                                   num_segments=J)
+        return jnp.where(m, x, 0.0) @ job_onehot
 
     def seg_max(x, m):
-        return jax.ops.segment_max(jnp.where(m, x, -_BIG), sc.task_job,
-                                   num_segments=J)
+        # two-level identity mirrors segment_max exactly: a job whose
+        # tasks are all masked out maxes the -_BIG fill values, while a
+        # job no task maps to at all (padded J rows) stays at the true
+        # max identity, -inf
+        return jnp.max(jnp.where(job_onehot > 0.5,
+                                 jnp.where(m, x, -_BIG)[:, None],
+                                 -jnp.inf), axis=0)
 
     def seg_min(x, m):
         return -seg_max(-x, m)

@@ -15,10 +15,18 @@ The declarative experiment API (DESIGN.md §4):
 * :func:`zip_` / :func:`product` — compose axes into a :class:`SweepPlan`
   (zipped axes advance together as one dimension; product axes span the
   full cartesian grid);
-* :meth:`SweepPlan.run` — compile the plan into one device-side
-  :class:`ScenarioArrays` batch and execute it (plain vmap, pod-sharded
+* :meth:`SweepPlan.run` — compile the plan into device-side
+  :class:`ScenarioArrays` batches and execute them (plain vmap, pod-sharded
   over a ``mesh``, or host-memory-``chunk``-ed), returning a labeled
   :class:`SweepResult` with ``select(**coords)`` / ``to_dict()`` lookup.
+
+``run()`` executes an *adaptive schedule* (DESIGN.md §6): cells are grouped
+into a small set of padded-shape buckets (heterogeneous grids stop paying
+for the grid-wide max (T, V) padding), each bucket runs the batch-level
+early-exit engine (``engine.simulate_batch_arrays`` — one shared epoch loop
+that stops at the batch's realized epoch count), and the realized count is
+exposed as the ``realized_epochs`` metric.  ``bucket=False`` restores the
+single max-shape batch; results are bit-identical either way.
 
 Lower-level builders (the compile targets — still public):
 
@@ -27,9 +35,6 @@ Lower-level builders (the compile targets — still public):
 * :func:`encode_cell` / :func:`grid_arrays` — device-side: build experiment
   cells (homogeneous *or* per-VM-heterogeneous) directly from traced
   parameters, entirely in jnp, so huge grids never materialize on the host.
-
-``paper_grid`` / ``policy_grid`` are kept one release longer as thin shims
-over :class:`SweepPlan` (see the DESIGN.md §4 migration note).
 """
 from __future__ import annotations
 
@@ -48,7 +53,7 @@ from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      base_task_lengths_f32)
 from .engine import (JobMetrics, ScenarioArrays, ScenarioMetrics, bind_tasks,
                      from_scenario, job_metrics, scenario_metrics,
-                     simulate_arrays)
+                     simulate_arrays, simulate_batch_arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +150,9 @@ _PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost"})
 
 
 def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
-                pad_vms: int) -> ScenarioArrays:
+                pad_vms: int,
+                static_params: Mapping[str, int] | None = None
+                ) -> ScenarioArrays:
     """vmap :func:`encode_cell` over equal-length parameter arrays.
 
     Each value is ``[N]`` (one scalar per cell) or ``[N, pad_vms]``
@@ -153,8 +160,23 @@ def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
     ``[N, pad_tasks]`` (``task_mult``).  Keys and leading lengths are
     validated up front — a mismatched key used to surface as an opaque
     vmap shape error deep inside the encoder.
+
+    ``static_params`` pins encode_cell parameters as Python compile-time
+    constants instead of per-cell columns — the bucketed ``run()`` path
+    uses it to bake a bucket's uniform ``binding_policy`` into the
+    lowering, letting XLA dead-code-eliminate the unused binding
+    strategies (the sequential LEAST_LOADED load scan dominates encode
+    time when it can't be eliminated).
     """
     names = list(params)
+    static = tuple(sorted((static_params or {}).items()))
+    for n, _ in static:
+        if n not in _CELL_PARAMS:
+            raise ValueError(f"grid_arrays: unknown static parameter {n!r}")
+        if n in names:
+            raise ValueError(
+                f"grid_arrays: parameter {n!r} passed both as a column and "
+                "as a static parameter")
     if not names:
         raise ValueError("grid_arrays: empty parameter dict")
     unknown = [n for n in names if n not in _CELL_PARAMS]
@@ -193,18 +215,20 @@ def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
         raise ValueError(
             "grid_arrays: parameter arrays must share one leading grid "
             f"length; {names[0]!r} has length {n0} but " + ", ".join(bad))
-    encoder = _grid_encoder(tuple(names), pad_tasks, pad_vms)
+    encoder = _grid_encoder(tuple(names), pad_tasks, pad_vms, static)
     return encoder(*(jnp.asarray(params[n]) for n in names))
 
 
 @lru_cache(maxsize=None)
-def _grid_encoder(names: tuple[str, ...], pad_tasks: int, pad_vms: int):
-    """One jitted vmapped encode_cell per (param set, padding) signature —
-    repeated ``SweepPlan.run()`` calls re-encode at compiled speed instead
-    of dispatching the encoder op by op."""
+def _grid_encoder(names: tuple[str, ...], pad_tasks: int, pad_vms: int,
+                  static: tuple[tuple[str, int], ...] = ()):
+    """One jitted vmapped encode_cell per (param set, padding, statics)
+    signature — repeated ``SweepPlan.run()`` calls re-encode at compiled
+    speed instead of dispatching the encoder op by op."""
     def one(*xs):
-        return encode_cell(**dict(zip(names, xs)), pad_tasks=pad_tasks,
-                           pad_vms=pad_vms)
+        kw = dict(zip(names, xs))
+        kw.update(static)
+        return encode_cell(**kw, pad_tasks=pad_tasks, pad_vms=pad_vms)
     return jax.jit(jax.vmap(one))
 
 
@@ -468,49 +492,71 @@ class SweepPlan:
         return grid_arrays(cols, pad_tasks=pad_tasks, pad_vms=pad_vms)
 
     def run(self, mesh: jax.sharding.Mesh | None = None,
-            chunk: int | None = None) -> "SweepResult":
+            chunk: int | None = None, *, bucket: object = "auto",
+            backend: str = "xla") -> "SweepResult":
         """Execute the plan and return a labeled :class:`SweepResult`.
 
-        * default — one jitted vmap over the whole batch;
+        Execution modes (combine with bucketing orthogonally):
+
+        * default — one jitted vmap per shape bucket;
         * ``mesh`` — scenarios sharded over every mesh axis (the pod path;
-          the grid is padded up to a device-count multiple and trimmed);
+          each bucket is padded up to a device-count multiple and trimmed);
         * ``chunk`` — at most ``chunk`` cells encoded + simulated per call
-          (one shared lowering; results accumulate in host memory), for
-          grids larger than device memory.
+          (one shared lowering per bucket; results accumulate in host
+          memory), for grids larger than device memory.
+
+        ``bucket`` controls the adaptive schedule (DESIGN.md §6):
+        ``"auto"`` (default) groups cells into power-of-two padded-shape
+        buckets keyed on (task count, VM count, binding policy), so
+        heterogeneous grids stop simulating phantom tasks at the grid-wide
+        max padding; ``False`` runs the whole grid as one max-shape batch.
+        Plan-level ``pad_tasks``/``pad_vms`` overrides act as bucket caps.
+        Metric values are bit-identical either way (padding only adds
+        exact-zero/identity lanes); only ``realized_epochs`` — the number
+        of event epochs the executed batch actually ran, the new
+        observability metric — reflects the schedule that produced it.
+
+        ``backend`` selects the engine: ``"xla"`` (default) is
+        :func:`engine.simulate_batch_arrays`; ``"pallas"`` runs the fused
+        ``mr_epoch`` megakernel (``kernels/mr_sched``) with per-VM/task
+        state resident in VMEM across epochs (interpret mode off-TPU;
+        single-device only — combine with ``chunk``, not ``mesh``).
         """
         if mesh is not None and chunk is not None:
             raise ValueError("run: pass mesh or chunk, not both")
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"run: chunk must be >= 1, got {chunk}")
+        if backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"run: backend must be 'xla' or 'pallas', got {backend!r}")
+        if backend == "pallas" and mesh is not None:
+            raise ValueError(
+                "run: backend='pallas' is single-device (use chunk=, "
+                "not mesh=)")
         cols, pad_tasks, pad_vms = self._compiled()
         N = self.size
-        if mesh is not None:
-            n_dev = int(mesh.devices.size)
-            full = -(-N // n_dev) * n_dev
-            batch = grid_arrays(_pad_cells(cols, full),
-                                pad_tasks=pad_tasks, pad_vms=pad_vms)
-            jm, sm = _simulate_full_sharded(batch, mesh)
-        elif chunk is not None:
-            if chunk < 1:
-                raise ValueError(f"run: chunk must be >= 1, got {chunk}")
-            parts = []
-            for lo in range(0, N, chunk):
-                part = {k: v[lo:lo + chunk] for k, v in cols.items()}
-                batch = grid_arrays(_pad_cells(part, chunk),
-                                    pad_tasks=pad_tasks, pad_vms=pad_vms)
-                parts.append(jax.tree.map(np.asarray, _simulate_full(batch)))
-            jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
-        else:
-            jm, sm = _simulate_full(
-                grid_arrays(cols, pad_tasks=pad_tasks, pad_vms=pad_vms))
-        jm = jax.tree.map(lambda x: np.asarray(x)[:N], jm)
-        sm = jax.tree.map(lambda x: np.asarray(x)[:N], sm)
-        n_jobs = jm.makespan.shape[-1]
+        groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket)
+        parts = [(idx, *_run_cells(gcols, len(idx), tb, vb, statics,
+                                   mesh, chunk, backend))
+                 for idx, gcols, statics, tb, vb in groups]
+        n_jobs = int(parts[0][1].makespan.shape[-1])
         metrics: dict[str, np.ndarray] = {}
         for f in JobMetrics._fields:
-            a = getattr(jm, f)
-            metrics[f] = a.reshape(self.shape if n_jobs == 1
-                                   else self.shape + (n_jobs,))
+            out = np.empty((N, n_jobs),
+                           np.asarray(getattr(parts[0][1], f)).dtype)
+            for idx, jm, _, _ in parts:
+                out[idx] = np.asarray(getattr(jm, f))
+            metrics[f] = out.reshape(self.shape if n_jobs == 1
+                                     else self.shape + (n_jobs,))
         for f in ScenarioMetrics._fields:
-            metrics[f] = getattr(sm, f).reshape(self.shape)
+            out = np.empty(N, np.asarray(getattr(parts[0][2], f)).dtype)
+            for idx, _, sm, _ in parts:
+                out[idx] = np.asarray(getattr(sm, f))
+            metrics[f] = out.reshape(self.shape)
+        realized = np.empty(N, np.int32)
+        for idx, _, _, rz in parts:
+            realized[idx] = rz
+        metrics["realized_epochs"] = realized.reshape(self.shape)
         return SweepResult(axis_names=tuple(d.names for d in self.dims),
                            axis_labels=tuple(d.labels for d in self.dims),
                            metrics=metrics, n_jobs=n_jobs)
@@ -523,6 +569,209 @@ def _pad_cells(cols: dict[str, np.ndarray], n: int) -> dict[str, np.ndarray]:
         return cols
     return {k: np.concatenate([v, np.repeat(v[-1:], n - have, axis=0)])
             for k, v in cols.items()}
+
+
+# ---------------------------------------------------------------------------
+# Adaptive execution schedule: shape buckets + per-bucket execution
+# ---------------------------------------------------------------------------
+
+def _bucket_pads(need: np.ndarray, cap: int, floor: int = 4) -> np.ndarray:
+    """Per-cell padded size: smallest of {floor, 2·floor, 4·floor, …, cap}
+    that fits (:func:`_pow2_pad` per unique value).  Power-of-two rounding
+    keeps the set of compiled shapes small and stable across
+    differently-composed grids (compile-cache friendly); ``cap`` is the
+    grid-wide max (or the plan's explicit pad override)."""
+    out = np.empty(len(need), np.int64)
+    for v in np.unique(need):
+        out[need == v] = _pow2_pad(int(v), cap, floor)
+    return out
+
+
+def _pow2_pad(need: int, cap: int, floor: int = 4) -> int:
+    b = floor
+    while b < need:
+        b *= 2
+    return min(b, cap)
+
+
+def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
+                   bucket) -> list[tuple[np.ndarray, dict[str, np.ndarray],
+                                         dict[str, int] | None, int, int]]:
+    """Partition grid cells into padded-shape buckets.
+
+    Returns ``[(cell_indices, columns, static_params, pad_tasks, pad_vms)]``
+    with indices ascending inside every bucket (so scattering results back
+    by index reproduces the unbucketed cell order exactly).  The heuristic
+    (DESIGN.md §6):
+
+    * **policy split** — when the grid mixes ``sched_policy`` /
+      ``binding_policy`` values *and* every combination can amortize a
+      dispatch (``N >= combos × 64``), cells split per combination and
+      the uniform values become *static* encoder parameters — inside the
+      fused bucket runner they are trace constants, so XLA eliminates the
+      policy branches (admission ranking for time-shared buckets, the
+      sequential LEAST_LOADED scan for non-LL buckets) the bucket cannot
+      take, and each combination exits at its *own* realized epoch count
+      (time-shared cells stop subsidizing space-shared serialization).
+      A policy column that is uniform across the whole grid (e.g.
+      base-pinned) is static without any split;
+    * **task padding** — ``n_maps + n_reduces`` rounded up to a power of
+      two (stable shapes across differently-composed grids), then
+      ascending-size runs are merged until each bucket holds at least
+      ``min_cells = max(256, N // 4)`` cells *and* stands alone only if
+      its padding is at most half the grid cap — many tiny or
+      nearly-max-shape buckets cost more in dispatch than their saved
+      flops, so the schedule prefers a few decisively-smaller buckets;
+    * **VM padding** — each bucket's ``n_vms`` max rounded up likewise
+      (per-VM / per-task vector columns are sliced to the bucket width;
+      entries past a cell's ``n_vms``/task count are ignored by
+      ``encode_cell``, so slicing cannot change results).
+    """
+    N = len(next(iter(cols.values())))
+    all_idx = np.arange(N)
+    if bucket is False or bucket is None or N <= 1:
+        return [(all_idx, cols, None, pad_tasks, pad_vms)]
+    if bucket is not True and bucket != "auto":
+        raise ValueError(
+            f"run: bucket must be 'auto', True, or False; got {bucket!r}")
+    min_cells = max(256, N // 4)
+    need_t = (cols["n_maps"].astype(np.int64)
+              + cols["n_reduces"].astype(np.int64))
+    need_v = cols["n_vms"].astype(np.int64)
+    tb = _bucket_pads(need_t, pad_tasks)
+
+    policy_cols = [p for p in ("sched_policy", "binding_policy")
+                   if p in cols]
+    # grid-uniform policy columns are *always* static (no split needed —
+    # the whole grid shares the value, e.g. a base-pinned policy)
+    uniform_pols = {p: int(cols[p][0]) for p in policy_cols
+                    if len(np.unique(cols[p])) == 1}
+    policy_names = [p for p in policy_cols if p not in uniform_pols]
+    if policy_names:
+        combo_key = np.stack([cols[p].astype(np.int64)
+                              for p in policy_names], axis=1)
+        combos, combo_id = np.unique(combo_key, axis=0, return_inverse=True)
+        # policy split pays for itself far sooner than shape splits: each
+        # combo exits at its own realized epoch count (time-shared combos
+        # stop subsidizing space-shared serialization) and the statics DCE
+        # the other policy's machinery — so it only needs each combo to
+        # amortize one dispatch, not a full shape bucket
+        if N < len(combos) * 64:            # too fragmented to specialize
+            policy_names, combo_id = [], np.zeros(N, np.int64)
+    else:
+        combo_id = np.zeros(N, np.int64)
+
+    merged: list[np.ndarray] = []
+    for c in np.unique(combo_id):
+        cidx = all_idx[combo_id == c]
+        sizes = tb[cidx]
+        pend: list[np.ndarray] = []
+        done_here: list[np.ndarray] = []
+        for t in np.unique(sizes):          # ascending shape runs
+            pend.append(cidx[sizes == t])
+            # stand alone only when big enough AND decisively smaller
+            # than the cap (a near-max-shape split saves ~nothing)
+            if sum(map(len, pend)) >= min_cells and 2 * t <= pad_tasks:
+                done_here.append(np.sort(np.concatenate(pend)))
+                pend = []
+        if pend:                            # undersized tail: merge upward
+            tail = np.concatenate(pend)
+            if done_here and 2 * tb[tail].max() > pad_tasks:
+                pass                        # tail forms the cap bucket
+            elif done_here and len(tail) < min_cells:
+                tail = np.concatenate([done_here.pop(), tail])
+            done_here.append(np.sort(tail))
+        merged.extend(done_here)
+
+    groups = []
+    for idx in merged:
+        t = _pow2_pad(int(need_t[idx].max()), pad_tasks)
+        vb = _pow2_pad(int(need_v[idx].max()), pad_vms)
+        statics = dict(uniform_pols)
+        statics.update({p: int(cols[p][idx[0]]) for p in policy_names})
+        gcols = {}
+        for cname, cvals in cols.items():
+            if cname in statics:
+                continue
+            cv = cvals[idx]
+            if cv.ndim == 2:
+                cv = cv[:, :t] if cname == "task_mult" else cv[:, :vb]
+            gcols[cname] = cv
+        groups.append((idx, gcols, statics or None, t, vb))
+    return groups
+
+
+@lru_cache(maxsize=None)
+def _fused_runner(names: tuple[str, ...], pad_tasks: int, pad_vms: int,
+                  statics: tuple[tuple[str, int], ...], backend: str,
+                  max_pes: int = 0):
+    """encode + simulate + metrics as ONE jitted callable per bucket
+    signature.  A single dispatch per bucket (the bucketed schedule's fixed
+    cost is dominated by per-call overhead on small hosts), and — the key
+    effect — ``statics`` and encode_cell's scalar defaults become trace
+    constants *inside the engine*, so XLA folds the per-bucket policy
+    branches instead of carrying both policies' machinery at runtime."""
+    static_kw = dict(statics)
+
+    def run(*xs):
+        def one(*cell):
+            kw = dict(zip(names, cell))
+            kw.update(static_kw)
+            return encode_cell(**kw, pad_tasks=pad_tasks, pad_vms=pad_vms)
+
+        batch = jax.vmap(one)(*xs)
+        if backend == "pallas":
+            from repro.kernels.mr_sched import \
+                epoch_schedule  # lazy: ref.py cycle
+            out = epoch_schedule(batch, max_pes=max_pes)
+            realized = jnp.max(out.n_epochs)
+        else:
+            out, realized = simulate_batch_arrays(batch)
+        return (jax.vmap(job_metrics)(batch, out),
+                jax.vmap(scenario_metrics)(batch, out), realized)
+
+    return jax.jit(run)
+
+
+def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
+               pad_vms: int, statics: dict[str, int] | None,
+               mesh, chunk, backend) -> tuple[
+                   JobMetrics, ScenarioMetrics, np.ndarray]:
+    """Encode + simulate one bucket's cells; returns host-side
+    ``(JobMetrics, ScenarioMetrics, realized_epochs[n])``."""
+    if mesh is not None:
+        # pod path: per-lane epoch loops (no per-epoch any() collective)
+        n_dev = int(mesh.devices.size)
+        full = -(-n // n_dev) * n_dev
+        batch = grid_arrays(_pad_cells(cols, full), pad_tasks=pad_tasks,
+                            pad_vms=pad_vms, static_params=statics)
+        jm, sm = _simulate_full_sharded(batch, mesh)
+        jm = jax.tree.map(lambda x: np.asarray(x)[:n], jm)
+        sm = jax.tree.map(lambda x: np.asarray(x)[:n], sm)
+        realized = np.full(n, int(np.max(sm.n_epochs)), np.int32)
+        return jm, sm, realized
+    max_pes = (max(int(np.ceil(float(np.max(cols["vm_pes"])))), 1)
+               if backend == "pallas" else 0)
+    names = tuple(sorted(cols))
+    runner = _fused_runner(names, pad_tasks, pad_vms,
+                           tuple(sorted((statics or {}).items())),
+                           backend, max_pes)
+    if chunk is not None:
+        parts, realized = [], np.empty(n, np.int32)
+        for lo in range(0, n, chunk):
+            part = _pad_cells({k: v[lo:lo + chunk] for k, v in cols.items()},
+                              min(chunk, n))
+            take = min(chunk, n - lo)
+            jm, sm, rz = runner(*(jnp.asarray(part[k]) for k in names))
+            parts.append(jax.tree.map(lambda x: np.asarray(x)[:take],
+                                      (jm, sm)))
+            realized[lo:lo + take] = int(rz)
+        jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
+        return jm, sm, realized
+    jm, sm, rz = runner(*(jnp.asarray(cols[k]) for k in names))
+    jm = jax.tree.map(np.asarray, jm)
+    sm = jax.tree.map(np.asarray, sm)
+    return jm, sm, np.full(n, int(rz), np.int32)
 
 
 def _match_label(label, want) -> bool:
@@ -633,12 +882,6 @@ def _one_full(sc: ScenarioArrays) -> tuple[JobMetrics, ScenarioMetrics]:
     return job_metrics(sc, out), scenario_metrics(sc, out)
 
 
-@jax.jit
-def _simulate_full(batch: ScenarioArrays):
-    """vmap engine + per-job and per-scenario metrics (the ``run()`` body)."""
-    return jax.vmap(_one_full)(batch)
-
-
 @lru_cache(maxsize=None)
 def _sharded_runner(mesh: jax.sharding.Mesh):
     """One jitted sharded simulate per mesh — repeated ``run(mesh=…)`` calls
@@ -678,51 +921,3 @@ def simulate_batch_sharded(batch: ScenarioArrays,
         out_shardings=sharding)
     return fn(batch)
 
-
-# ---------------------------------------------------------------------------
-# Legacy grid builders — thin SweepPlan shims, kept one release longer
-# ---------------------------------------------------------------------------
-
-def paper_grid(m_range=range(1, 21), vm_numbers=(3,), vm_types=("small",),
-               job_types=("small",), network_delay=True,
-               sched_policy=SchedPolicy.TIME_SHARED,
-               binding_policy=BindingPolicy.ROUND_ROBIN) -> ScenarioArrays:
-    """Cartesian paper grid (Groups 1–4) as a device-side batch.
-
-    Deprecated shim: build the equivalent :class:`SweepPlan` directly (see
-    DESIGN.md §4); this keeps the PR-1 call sites working one release
-    longer.  Cell order is unchanged (row-major, ``job_types`` fastest).
-    """
-    plan = product(
-        axis("n_maps", m_range),
-        axis("n_vms", vm_numbers),
-        axis("vm_type", vm_types),
-        axis("job_type", job_types),
-        network_delay=network_delay,
-        sched_policy=sched_policy,
-        binding_policy=binding_policy,
-    )
-    return plan.arrays()
-
-
-def policy_grid(m_range=range(1, 21), n_vms=3, vm_type="small",
-                job_type="small", network_delay=True) -> tuple[
-                    ScenarioArrays, list[tuple[SchedPolicy, BindingPolicy]]]:
-    """Group 5 (beyond-paper): the paper's Group-1 sweep crossed with every
-    (sched_policy × binding_policy) combination — one mixed-policy batch,
-    one lowering.  Returns the batch plus the per-block policy labels
-    (block i covers rows [i*len(m_range), (i+1)*len(m_range))).
-
-    Deprecated shim over :class:`SweepPlan` (DESIGN.md §4) — the plan's
-    labeled ``select(sched_policy=…, binding_policy=…)`` replaces the
-    per-block row bookkeeping.
-    """
-    plan = product(
-        axis("sched_policy", list(SchedPolicy)),
-        axis("binding_policy", list(BindingPolicy)),
-        axis("n_maps", m_range),
-        n_vms=n_vms, vm_type=vm_type, job_type=job_type,
-        network_delay=network_delay,
-    )
-    combos = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
-    return plan.arrays(), combos

@@ -1,2 +1,2 @@
-from . import ops, ref
-from .ops import schedule
+from . import megakernel, ops, ref
+from .ops import epoch_schedule, schedule

@@ -1,0 +1,217 @@
+"""``mr_epoch``: the fused epoch megakernel (adaptive-schedule backend).
+
+One ``pl.pallas_call`` advances a *tile* of scenario lanes through their
+whole event history: rates evaluation, the one-hot reductions, fluid-state
+advance, the next-event min, completions, shuffle release, and space-shared
+admission are fused into a single kernel body whose per-VM/per-task state
+(remaining MI, readiness, running masks, per-VM occupancy) stays resident
+in VMEM across epochs — the XLA engine (``repro.core.engine``) round-trips
+that state through HBM once per epoch.
+
+Two structural upgrades over the PR-1 ``mr_schedule`` kernel:
+
+* **Tile-level early exit** — the epoch loop is a ``lax.while_loop`` gated
+  on ``any(lane unfinished)`` (plus the ``2T + 2`` safety bound), so a tile
+  stops at its own realized epoch count instead of always burning the
+  worst-case bound; the per-lane realized counts come back as ``n_epochs``.
+* **Per-VM admission scan** — the space-shared (ready, index) admission
+  rank was a ``T×T`` higher-priority matrix (O(T²) VMEM + flops per
+  epoch); here admission extracts per-VM minima ``max_pes`` times
+  (O(max_pes·T·V)), admitting exactly the tasks whose per-VM rank is below
+  the free PE count — the ROADMAP "fold the T×T rank into a per-VM scan"
+  item.
+
+Every float-bearing step reuses the engine's exact op sequence (the one-hot
+contractions are 0/1-weighted sums, so any accumulation order is exact),
+which makes the kernel's schedule **bit-identical** to
+``engine.simulate_arrays`` — pinned by ``tests/test_adaptive_schedule.py``,
+not just approximately close.  Scope: single-job scenarios (J = 1 — what
+``sweep.encode_cell`` emits), arbitrary M/R/VM mix, both sched policies per
+lane (``sched_policy`` is lane data, so one tile may mix policies).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 1e30
+_TIME_EPS = 1e-6
+
+
+def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
+            shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
+            start_ref, finish_ref, ready_ref, n_epochs_ref,
+            *, T: int, V: int, max_pes: int, epoch_bound: int):
+    task_len = task_len_ref[...]                 # (tile, T) f32
+    task_vm = task_vm_ref[...]                   # (tile, T) i32
+    is_red = is_red_ref[...] != 0                # (tile, T)
+    valid = valid_ref[...] != 0
+    shuffle = shuffle_ref[...]                   # (tile, 1) f32
+    vm_mips = vm_mips_ref[...]                   # (tile, V)
+    vm_pes = vm_pes_ref[...]                     # (tile, V)
+    is_space = sched_ref[...] != 0               # (tile, 1) policy gate
+    tile = task_len.shape[0]
+
+    vm_onehot = (task_vm[..., None]
+                 == jax.lax.broadcasted_iota(jnp.int32,
+                                             (1, 1, V), 2))  # (tile,T,V)
+    onehot_b = vm_onehot
+    vm_onehot = vm_onehot.astype(jnp.float32)
+    task_pes = jnp.einsum("stv,sv->st", vm_onehot, vm_pes)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)     # (1, T)
+
+    def to_task(per_vm):
+        """Gather a per-VM quantity to each task's VM (exact: one-hot)."""
+        return jnp.einsum("stv,sv->st", vm_onehot, per_vm)
+
+    def per_vm_sum(per_task):
+        return jnp.einsum("stv,st->sv", vm_onehot, per_task)
+
+    state = (
+        jnp.zeros((tile,), jnp.float32),                 # time
+        task_len,                                        # rem
+        jnp.zeros((tile, T), jnp.bool_),                 # running
+        jnp.full((tile, T), _BIG, jnp.float32),          # start
+        jnp.full((tile, T), _BIG, jnp.float32),          # finish
+        ready0_ref[...],                                 # ready
+        jnp.sum((valid & ~is_red).astype(jnp.int32), axis=1),  # maps_left
+        jnp.zeros((tile,), jnp.int32),                   # lane epochs
+        jnp.int32(0),                                    # global epoch
+    )
+
+    def lanes_active(finish):
+        return jnp.any(valid & (finish >= _BIG / 2), axis=1)   # (tile,)
+
+    def cond(st):
+        return jnp.any(lanes_active(st[4])) & (st[8] < epoch_bound)
+
+    def epoch(st):
+        (time, rem, running, start, finish, ready, maps_left, lane_ep,
+         n) = st
+        active = lanes_active(finish)
+        runf = running.astype(jnp.float32)
+        # single rates evaluation per epoch (space-shared keeps n <= pes,
+        # so the min() clamp makes this formula serve both policies)
+        n_on_vm = per_vm_sum(runf)
+        share = vm_mips * jnp.minimum(1.0, vm_pes
+                                      / jnp.maximum(n_on_vm, 1.0))
+        r = jnp.where(running, to_task(share), 0.0)
+        eta = jnp.where(running,
+                        time[:, None] + rem / jnp.maximum(r, 1e-30), _BIG)
+        not_started = valid & ~running & (finish >= _BIG / 2) \
+            & (start >= _BIG / 2)
+        # space-shared: pending tasks only define arrival events while a
+        # PE slot is free; otherwise a completion epoch admits them.
+        has_slot = (task_pes - to_task(n_on_vm)) > 0.5
+        arr = jnp.where(not_started & (~is_space | has_slot),
+                        jnp.maximum(ready, time[:, None]), _BIG)
+        t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
+        live = t_next < _BIG / 2
+        tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
+
+        # advance fluid state (engine op order: guard with running, not dt)
+        rem = jnp.where(running, rem - (t_next[:, None] - time[:, None]) * r,
+                        rem)
+
+        # completions (all tied events fire in this one epoch)
+        done_now = live[:, None] & running & (eta <= (t_next + tie)[:, None])
+        finish = jnp.where(done_now, t_next[:, None], finish)
+        running = running & ~done_now
+        rem = jnp.where(done_now, 0.0, rem)
+
+        # job map-phase completion -> release reduces after shuffle delay
+        maps_done_now = jnp.sum((done_now & ~is_red).astype(jnp.int32),
+                                axis=1)
+        maps_left_new = maps_left - maps_done_now
+        phase_done = (maps_left_new == 0) & (maps_left > 0)
+        ready = jnp.where(is_red & phase_done[:, None],
+                          (t_next + shuffle[:, 0])[:, None], ready)
+
+        # arrivals: time-shared starts every ready task; space-shared
+        # admits the (ready, index)-first eligible tasks into the PE slots
+        # left free after this epoch's completions.  Instead of ranking
+        # through a T×T priority matrix, extract per-VM minima max_pes
+        # times: the task picked at scan step s has per-VM rank s, and is
+        # admitted iff s < free slots on its VM — the same set the rank
+        # formulation admits.
+        eligible = live[:, None] & not_started \
+            & (ready <= (t_next + tie)[:, None])
+        free_v = vm_pes - (n_on_vm - per_vm_sum(done_now.astype(jnp.float32)))
+        free_after = to_task(free_v)
+        admit = jnp.zeros_like(eligible)
+        remaining = eligible
+        for s in range(max_pes):
+            ready_m = jnp.where(remaining, ready, _BIG)
+            min_ready_v = jnp.min(
+                jnp.where(onehot_b, ready_m[..., None], _BIG), axis=1)
+            cand = remaining & (ready_m == to_task(min_ready_v))
+            idx_m = jnp.where(cand, idx, T)
+            min_idx_v = jnp.min(
+                jnp.where(onehot_b, idx_m[..., None], T), axis=1)
+            pick = cand & (idx == jnp.einsum(
+                "stv,sv->st", vm_onehot,
+                min_idx_v.astype(jnp.float32)).astype(jnp.int32))
+            admit = admit | (pick & (jnp.float32(s) < free_after))
+            remaining = remaining & ~pick
+        start_now = eligible & (~is_space | admit)
+        start = jnp.where(start_now, t_next[:, None], start)
+        running = running | start_now
+        time = jnp.where(live, t_next, time)
+        return (time, rem, running, start, finish, ready, maps_left_new,
+                lane_ep + active.astype(jnp.int32), n + 1)
+
+    st = jax.lax.while_loop(cond, epoch, state)
+    start_ref[...] = st[3]
+    finish_ref[...] = st[4]
+    ready_ref[...] = st[5]
+    n_epochs_ref[...] = st[7][:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "interpret", "max_pes"))
+def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
+             vm_mips, vm_pes, sched_policy=None, *, tile: int = 64,
+             max_pes: int = 8, interpret: bool = True):
+    """All args lead with the scenario dim N (padded to a tile multiple).
+
+    task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
+    shuffle: (N,1) f32; vm_mips/vm_pes: (N,V) f32; sched_policy: (N,1) i32
+    (0 time-shared | 1 space-shared; defaults to all time-shared).
+    ``max_pes`` must be >= the largest per-VM PE count in the batch (it
+    bounds the static admission scan); ``tile`` lanes share one early-exit
+    epoch loop.  Returns (start, finish, ready, n_epochs): three (N,T) f32
+    plus the per-lane realized epoch counts (N,) i32.
+    """
+    N, T = task_len.shape
+    V = vm_mips.shape[1]
+    if sched_policy is None:
+        sched_policy = jnp.zeros((N, 1), jnp.int32)
+    tile = min(tile, N)
+    while N % tile:
+        tile //= 2
+    grid = (N // tile,)
+
+    def row(i):
+        return (i, 0)
+
+    spec_t = pl.BlockSpec((tile, T), row)
+    spec_1 = pl.BlockSpec((tile, 1), row)
+    spec_v = pl.BlockSpec((tile, V), row)
+    start, finish, ready, n_epochs = pl.pallas_call(
+        functools.partial(_kernel, T=T, V=V, max_pes=max_pes,
+                          epoch_bound=2 * T + 2),
+        grid=grid,
+        in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
+                  spec_v, spec_v, spec_1],
+        out_specs=(spec_t, spec_t, spec_t, spec_1),
+        out_shape=(jax.ShapeDtypeStruct((N, T), jnp.float32),
+                   jax.ShapeDtypeStruct((N, T), jnp.float32),
+                   jax.ShapeDtypeStruct((N, T), jnp.float32),
+                   jax.ShapeDtypeStruct((N, 1), jnp.int32)),
+        interpret=interpret,
+    )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes,
+      sched_policy)
+    return start, finish, ready, n_epochs[:, 0]

@@ -1,25 +1,31 @@
-"""Wrapper: ScenarioArrays (J=1) -> kernel inputs -> (start, finish).
+"""Wrappers: ScenarioArrays (J=1) -> kernel inputs -> schedules.
 
 The derived per-task quantities (task lengths, stage-in readiness,
 shuffle delays) are computed in plain jnp — cheap, O(N·T) — and the
-event-loop hot path runs in the Pallas kernel.
+event-loop hot path runs in a Pallas kernel:
+
+* :func:`schedule` — the PR-1 ``mr_schedule`` kernel (static ``2T + 2``
+  epoch bound, T×T admission rank), returns ``(start, finish)``;
+* :func:`epoch_schedule` — the fused ``mr_epoch`` megakernel (tile-level
+  early exit + per-VM admission scan), returns a full
+  :class:`~repro.core.engine.SimOutput` so the sweep metrics layers can
+  consume it directly (``SweepPlan.run(backend="pallas")``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import network
-from repro.core.engine import ScenarioArrays
+from repro.core.engine import ScenarioArrays, SimOutput
 
 from .kernel import mr_schedule
+from .megakernel import mr_epoch
 
 
-def schedule(batch: ScenarioArrays, *, tile: int = 64,
-             interpret: bool | None = None):
-    """batch: stacked single-job scenarios (leading dim N)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _derived_inputs(batch: ScenarioArrays):
+    """The engine's exact derived-quantity op sequence, J=1 layout."""
     nm = batch.job_n_maps.astype(jnp.float32)[:, 0]        # (N,)
     nr = batch.job_n_reduces.astype(jnp.float32)[:, 0]
     stage_in = network.transfer_delay(batch.kappa_in, batch.job_data[:, 0],
@@ -34,6 +40,15 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
     task_len = jnp.where(batch.task_valid, task_len, 0.0)
     ready0 = jnp.where(batch.task_valid & ~batch.task_is_reduce,
                        (batch.job_submit[:, 0] + stage_in)[:, None], 1e30)
+    return task_len, ready0, shuffle
+
+
+def schedule(batch: ScenarioArrays, *, tile: int = 64,
+             interpret: bool | None = None):
+    """batch: stacked single-job scenarios (leading dim N)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    task_len, ready0, shuffle = _derived_inputs(batch)
     return mr_schedule(
         task_len.astype(jnp.float32), batch.task_vm.astype(jnp.int32),
         ready0.astype(jnp.float32),
@@ -44,3 +59,50 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
         batch.vm_pes.astype(jnp.float32),
         batch.sched_policy.astype(jnp.int32)[:, None],
         tile=tile, interpret=interpret)
+
+
+def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
+                   max_pes: int | None = None,
+                   interpret: bool | None = None) -> SimOutput:
+    """Run the fused ``mr_epoch`` megakernel over a stacked J=1 batch.
+
+    ``max_pes`` bounds the static per-VM admission scan and must cover the
+    largest PE count in the batch; when ``vm_pes`` is concrete it is
+    derived automatically, under a trace it defaults to 8 (pass it
+    explicitly for bigger VMs — ``SweepPlan.run`` does).  The batch is
+    padded up to a ``tile`` multiple with empty lanes (zero valid tasks,
+    so they exit immediately) and trimmed back.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if max_pes is None:
+        if isinstance(batch.vm_pes, jax.core.Tracer):
+            max_pes = 8
+        else:
+            max_pes = max(int(np.ceil(float(jnp.max(batch.vm_pes)))), 1)
+    task_len, ready0, shuffle = _derived_inputs(batch)
+    N = task_len.shape[0]
+    n_pad = (-N) % min(tile, max(N, 1))
+
+    def pad(x):
+        widths = ((0, n_pad),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, widths)
+
+    start, finish, ready, n_epochs = mr_epoch(
+        pad(task_len.astype(jnp.float32)),
+        pad(batch.task_vm.astype(jnp.int32)),
+        pad(ready0.astype(jnp.float32)),
+        pad(batch.task_is_reduce.astype(jnp.int32)),
+        pad(batch.task_valid.astype(jnp.int32)),
+        pad(shuffle.astype(jnp.float32)[:, None]),
+        pad(batch.vm_mips.astype(jnp.float32)),
+        pad(batch.vm_pes.astype(jnp.float32)),
+        pad(batch.sched_policy.astype(jnp.int32)[:, None]),
+        tile=tile, max_pes=max_pes, interpret=interpret)
+    start, finish, ready, n_epochs = (x[:N] for x in
+                                      (start, finish, ready, n_epochs))
+    exec_time = jnp.where(batch.task_valid, finish - start, 0.0)
+    finish_time = jnp.max(jnp.where(batch.task_valid, finish, 0.0), axis=1)
+    return SimOutput(start=start, finish=finish, ready=ready,
+                     exec_time=exec_time, n_epochs=n_epochs,
+                     finish_time=finish_time)

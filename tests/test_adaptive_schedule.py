@@ -1,0 +1,246 @@
+"""Adaptive execution schedule (DESIGN.md §6): seeded bit-identity suite.
+
+Pins the three new execution layers against the fixed-bound per-lane
+engine and the ``refsim`` oracle across all 6 policy combos:
+
+* ``engine.simulate_batch_arrays`` (batch-level early exit) must be
+  **bitwise** identical to ``jax.vmap(engine.simulate_arrays)`` — the
+  epoch body is idempotent for finished lanes, so sharing one epoch loop
+  may not change a single ulp;
+* the fused Pallas ``mr_epoch`` megakernel (per-VM admission scan, VMEM-
+  resident state) must be bitwise identical to the engine in interpret
+  mode — its one-hot contractions are 0/1-weighted sums, exact in any
+  accumulation order;
+* ``SweepPlan.run()``'s shape buckets must scatter back into the exact
+  unbucketed cell order with bitwise-equal metrics (padding only adds
+  exact-identity lanes), across the default, chunked, sharded and pallas
+  execution modes, and must expose the realized epoch count.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (JOB_MEDIUM, VM_MEDIUM, VM_SMALL, BindingPolicy,
+                        Scenario, SchedPolicy, engine, refsim, sweep)
+from repro.core.sweep import axis, product, zip_
+from repro.kernels.mr_sched import epoch_schedule
+
+ALL_POLICIES = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+
+
+def _random_params(n, seed, mixed_policies=True):
+    rng = np.random.default_rng(seed)
+    params = dict(
+        n_maps=rng.integers(1, 21, n).astype(np.int32),
+        n_reduces=rng.integers(1, 3, n).astype(np.int32),
+        n_vms=rng.integers(1, 10, n).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
+        vm_pes=rng.choice([1.0, 2.0, 4.0], n).astype(np.float32),
+        vm_cost=rng.choice([1.0, 2.0], n).astype(np.float32),
+        job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
+    )
+    if mixed_policies:
+        params["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+        params["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
+    return params
+
+
+def _random_batch(n, seed, mixed_policies=True, **overrides):
+    params = _random_params(n, seed, mixed_policies)
+    params.update(overrides)
+    return sweep.grid_arrays(params, pad_tasks=23, pad_vms=9)
+
+
+# ---------------------------------------------------------------------------
+# Batch-level early exit vs the per-lane fixed-bound loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp,bp", ALL_POLICIES,
+                         ids=[f"{sp.name}-{bp.name}"
+                              for sp, bp in ALL_POLICIES])
+def test_batched_early_exit_bitwise_per_policy(sp, bp):
+    n = 24
+    batch = _random_batch(n, seed=10 * int(sp) + int(bp),
+                          mixed_policies=False,
+                          sched_policy=np.full(n, int(sp), np.int32),
+                          binding_policy=np.full(n, int(bp), np.int32))
+    lane = jax.jit(jax.vmap(engine.simulate_arrays))(batch)
+    both, realized = jax.jit(engine.simulate_batch_arrays)(batch)
+    for f in lane._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(both, f)),
+                                      err_msg=f"{f} ({sp.name}/{bp.name})")
+    n_ep = np.asarray(lane.n_epochs)
+    assert int(realized) == int(n_ep.max())
+    assert int(realized) < 2 * 23 + 2, "no early exit realized"
+
+
+def test_batched_early_exit_bitwise_mixed_batch():
+    batch = _random_batch(64, seed=99)
+    lane = jax.jit(jax.vmap(engine.simulate_arrays))(batch)
+    both, realized = jax.jit(engine.simulate_batch_arrays)(batch)
+    for f in lane._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(both, f)),
+                                      err_msg=f)
+    assert int(realized) == int(np.asarray(lane.n_epochs).max())
+
+
+# ---------------------------------------------------------------------------
+# mr_epoch megakernel vs the engine (bitwise) and the refsim oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile", [8, 32])
+def test_mr_epoch_bitwise_vs_engine_mixed(tile):
+    batch = _random_batch(48, seed=tile)
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    out = epoch_schedule(batch, tile=tile, interpret=True)
+    for f in eng._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(eng, f)),
+                                      np.asarray(getattr(out, f)),
+                                      err_msg=f)
+
+
+@pytest.mark.parametrize("sp,bp", ALL_POLICIES,
+                         ids=[f"{sp.name}-{bp.name}"
+                              for sp, bp in ALL_POLICIES])
+def test_mr_epoch_bitwise_vs_engine_per_policy(sp, bp):
+    n = 16
+    batch = _random_batch(n, seed=40 + 10 * int(sp) + int(bp),
+                          mixed_policies=False,
+                          sched_policy=np.full(n, int(sp), np.int32),
+                          binding_policy=np.full(n, int(bp), np.int32))
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    out = epoch_schedule(batch, tile=8, interpret=True)
+    for f in eng._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(eng, f)),
+                                      np.asarray(getattr(out, f)),
+                                      err_msg=f"{f} ({sp.name}/{bp.name})")
+
+
+def test_mr_epoch_admission_scan_vs_refsim_oracle():
+    """Space-shared multi-PE admission through the per-VM scan reproduces
+    the sequential oracle on a heterogeneous cluster (slots contended)."""
+    job = dataclasses.replace(JOB_MEDIUM, n_maps=11, n_reduces=3)
+    sc = Scenario(vms=(VM_MEDIUM, VM_SMALL, VM_SMALL), jobs=(job,),
+                  sched_policy=SchedPolicy.SPACE_SHARED,
+                  binding_policy=BindingPolicy.LEAST_LOADED)
+    batch = sweep.stack_scenarios([sc])
+    out = epoch_schedule(batch, tile=1, interpret=True)
+    ref = refsim.simulate(sc).job()
+    valid = np.asarray(batch.task_valid)[0]
+    fin = np.asarray(out.finish)[0][valid]
+    assert float(fin.max()) == pytest.approx(
+        ref.makespan + sc.jobs[0].submit_time, rel=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed SweepPlan.run(): bit-identity, order, realized_epochs
+# ---------------------------------------------------------------------------
+
+def _mixed_plan(n=96, seed=5):
+    params = _random_params(n, seed)
+    plan = product(zip_(*(axis(k, v) for k, v in params.items())))
+    return plan.replace(pad_tasks=23, pad_vms=9)
+
+
+def test_bucketed_run_bit_identical_all_modes():
+    plan = _mixed_plan()
+    base = plan.run(bucket=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("pod",))
+    variants = {
+        "bucketed": plan.run(),
+        "chunked": plan.run(chunk=17),
+        "bucketed+chunk": plan.run(chunk=17, bucket="auto"),
+        "mesh": plan.run(mesh=mesh),
+        "pallas": plan.run(bucket=False, backend="pallas"),
+        "pallas+bucket": plan.run(backend="pallas"),
+    }
+    for tag, res in variants.items():
+        for name in base.metric_names:
+            if name == "realized_epochs":   # schedule-dependent by design
+                continue
+            np.testing.assert_array_equal(base[name], res[name],
+                                          err_msg=f"{name} ({tag})")
+
+
+def test_bucketing_preserves_coordinate_order():
+    """A product plan whose axes force heterogeneous shapes keeps its
+    row-major coordinate order under bucketing (scatter-back identity)."""
+    plan = product(axis("n_maps", (1, 19, 3, 12)),
+                   axis("n_vms", (1, 6)),
+                   axis("binding_policy", list(BindingPolicy)))
+    res_b, res_u = plan.run(), plan.run(bucket=False)
+    assert res_b.shape == (4, 2, 3)
+    np.testing.assert_array_equal(res_b["makespan"], res_u["makespan"])
+    # coordinate lookup agrees with a direct single-cell run
+    one = res_b.select(n_maps=19, n_vms=6,
+                       binding_policy=BindingPolicy.PACKED)
+    solo = product(axis("n_maps", (19,)), n_vms=6,
+                   binding_policy=BindingPolicy.PACKED).run()
+    assert one["makespan"].item() == solo["makespan"].item()
+    assert res_b.coord((1, 1, 2)) == {
+        "n_maps": 19, "n_vms": 6,
+        "binding_policy": BindingPolicy.PACKED}
+
+
+def test_bucket_groups_partition_and_order():
+    from repro.core.sweep import _bucket_groups
+    params = _random_params(300, seed=11)
+    groups = _bucket_groups(params, 23, 9, "auto")
+    seen = np.concatenate([g[0] for g in groups])
+    assert len(seen) == 300 and len(np.unique(seen)) == 300
+    for idx, gcols, statics, tb, vb in groups:
+        assert (np.diff(idx) > 0).all(), "bucket indices must ascend"
+        need_t = gcols["n_maps"] + gcols["n_reduces"]
+        assert int(need_t.max()) <= tb <= 23
+        assert int(gcols["n_vms"].max()) <= vb <= 9
+        if statics:
+            for p in statics:
+                assert p not in gcols
+
+
+def test_realized_epochs_metric_exposed():
+    plan = _mixed_plan(n=64, seed=3)
+    res = plan.run()
+    bound = 2 * 21 + 2
+    realized = res["realized_epochs"]
+    assert realized.shape == res["n_epochs"].shape
+    assert (realized >= res["n_epochs"]).all()
+    assert (realized < bound).all(), "early exit should beat the bound"
+    # unbucketed: one batch -> one realized count == global max n_epochs
+    res_u = plan.run(bucket=False)
+    assert len(np.unique(res_u["realized_epochs"])) == 1
+    assert int(res_u["realized_epochs"].max()) == int(res_u["n_epochs"].max())
+
+
+def test_run_rejects_bad_backend_and_bucket():
+    plan = product(axis("n_maps", (1, 2)))
+    with pytest.raises(ValueError, match="backend"):
+        plan.run(backend="cuda")
+    with pytest.raises(ValueError, match="bucket"):
+        plan.run(bucket=3)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("pod",))
+    with pytest.raises(ValueError, match="single-device"):
+        plan.run(mesh=mesh, backend="pallas")
+
+
+def test_static_policy_specialization_bit_identical():
+    """grid_arrays with static policies == the same policies as columns."""
+    params = _random_params(40, seed=21, mixed_policies=False)
+    n = 40
+    for sp, bp in ALL_POLICIES:
+        as_cols = dict(params,
+                       sched_policy=np.full(n, int(sp), np.int32),
+                       binding_policy=np.full(n, int(bp), np.int32))
+        a = sweep.grid_arrays(as_cols, pad_tasks=23, pad_vms=9)
+        b = sweep.grid_arrays(params, pad_tasks=23, pad_vms=9,
+                              static_params={"sched_policy": int(sp),
+                                             "binding_policy": int(bp)})
+        for f in engine.ScenarioArrays._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                err_msg=f"{f} ({sp.name}/{bp.name})")

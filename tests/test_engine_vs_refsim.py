@@ -238,7 +238,8 @@ def test_property_network_cost_vm_invariant(m, v):
 # ---------------------------------------------------------------------------
 
 def test_sweep_grid_matches_oracle():
-    batch = sweep.paper_grid(m_range=range(1, 11), vm_numbers=(3, 6))
+    batch = sweep.product(sweep.axis("n_maps", range(1, 11)),
+                          sweep.axis("n_vms", (3, 6))).arrays()
     out = sweep.simulate_batch(batch)
     i = 0
     for m in range(1, 11):

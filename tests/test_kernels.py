@@ -185,7 +185,7 @@ def test_mr_sched_reproduces_paper_metrics():
     """Kernel schedule -> paper Table IV numbers end to end."""
     from repro.core import sweep
     from repro.kernels.mr_sched import schedule
-    batch = sweep.paper_grid(m_range=range(1, 11))
+    batch = sweep.product(sweep.axis("n_maps", range(1, 11))).arrays()
     s, f = schedule(batch, tile=8)
     # delay time for M1R1: last map start + reduce start - last map finish
     valid = np.asarray(batch.task_valid)

@@ -1,6 +1,7 @@
 """Declarative sweep API (DESIGN.md §4): SweepPlan/SweepResult semantics,
-bit-identity with the legacy ``paper_grid``/``policy_grid`` encodings,
-heterogeneous-VM device-side cells, and grid validation errors.
+bit-identity with the frozen PR-1 grid parameter encodings (the removed
+``paper_grid``/``policy_grid`` shims' cell layout), heterogeneous-VM
+device-side cells, and grid validation errors.
 
 The ``table4``-marked tests double as the CI sweep smoke job: a tiny
 ``SweepPlan`` end to end on CPU, asserting bit-identity with the frozen
@@ -55,29 +56,46 @@ def test_table4_bit_identity_with_legacy_paper_grid():
                                   res["makespan"])
     np.testing.assert_array_equal(np.asarray(legacy_out.network_cost[:, 0]),
                                   res["network_cost"])
-    # and the shim itself still emits the same batch
-    shim = sweep.paper_grid(m_range=M_RANGE)
+    # the plan's own compile target matches the frozen encoding as a batch
+    arrs = product(axis("n_maps", M_RANGE)).arrays()
     for f in engine.ScenarioArrays._fields:
         np.testing.assert_array_equal(np.asarray(getattr(legacy, f)),
-                                      np.asarray(getattr(shim, f)),
+                                      np.asarray(getattr(arrs, f)),
                                       err_msg=f"field {f}")
     # Table IV values themselves
     expected = 4250.0 / (np.arange(1, 11) + 1)
     np.testing.assert_allclose(res["network_cost"], expected, rtol=1e-4)
 
 
-def test_table4_policy_grid_shim_bit_identity():
-    combos_legacy = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
-    batch, combos = sweep.policy_grid(m_range=range(1, 6), n_vms=3,
-                                      vm_type="medium")
-    assert combos == combos_legacy
+def test_table4_policy_cross_matches_legacy_block_layout():
+    """The old ``policy_grid`` block layout (policy-major, m-minor), frozen
+    as raw parameter columns, matches the SweepPlan policy cross bitwise."""
+    m_range = range(1, 6)
+    vm = VM_TYPES["medium"]
+    job = JOB_TYPES["small"]
+    combos = [(sp, bp) for sp in SchedPolicy for bp in BindingPolicy]
+    cells = [(sp, bp, m) for sp, bp in combos for m in m_range]
+    n = len(cells)
+    legacy = sweep.grid_arrays(dict(
+        n_maps=np.array([m for _, _, m in cells], np.int32),
+        n_reduces=np.ones(n, np.int32),
+        n_vms=np.full(n, 3, np.int32),
+        vm_mips=np.full(n, vm.mips, np.float32),
+        vm_pes=np.full(n, float(vm.pes), np.float32),
+        vm_cost=np.full(n, vm.cost_per_sec, np.float32),
+        job_length=np.full(n, job.length_mi, np.float32),
+        job_data=np.full(n, job.data_mb, np.float32),
+        net_enabled=np.ones(n, np.float32),
+        sched_policy=np.array([sp for sp, _, _ in cells], np.int32),
+        binding_policy=np.array([bp for _, bp, _ in cells], np.int32),
+    ), pad_tasks=max(m_range) + 1, pad_vms=3)
     plan = product(axis("sched_policy", list(SchedPolicy)),
                    axis("binding_policy", list(BindingPolicy)),
-                   axis("n_maps", range(1, 6)),
+                   axis("n_maps", m_range),
                    vm_type="medium")
     res = plan.run()
-    out = sweep.simulate_batch(batch)
-    mk = np.asarray(out.makespan[:, 0]).reshape(2, 3, 5)
+    out = sweep.simulate_batch(legacy)
+    mk = np.asarray(out.makespan[:, 0]).reshape(2, 3, len(m_range))
     np.testing.assert_array_equal(mk, res["makespan"])
 
 
