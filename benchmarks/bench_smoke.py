@@ -1,6 +1,8 @@
 """CI benchmark smoke gate: ``sweep_throughput`` at b64 on the CPU
-(interpret-class) path, failing on crash or on a >25% throughput
-regression against the checked-in ``BENCH_sweep.json`` baseline.
+(interpret-class) path — the plain grid AND the storage-subsystem
+LOCALITY grid (skewed placement, DESIGN.md §7) — failing on crash or on
+a >25% throughput regression against the checked-in ``BENCH_sweep.json``
+baseline rows.
 
 Absolute wall times are not comparable across machines, so the baseline's
 ``calibration_us`` (a fixed jitted micro-workload timed when the baseline
@@ -24,12 +26,18 @@ import numpy as np
 
 from benchmarks.sweep_throughput import _random_plan, calibration_us
 
+GATED = (          # (baseline row name, plan kwargs)
+    ("sweep_throughput_b64", {}),
+    ("sweep_throughput_locality_b64", {"locality": True}),
+)
 
-def _min_of_reps(reps=7):
+
+def _min_of_reps(reps=7, **plan_kw):
     """b64 us/call as a min over reps: the mean-of-3 the baseline records
     is fine for trend tracking, but a pass/fail gate on a shared CI runner
     needs the noise floor, not the noise."""
-    plan = _random_plan(64, np.random.default_rng(0))
+    # rng(64): the exact grid the baseline's b64 rows record (seed == n)
+    plan = _random_plan(64, np.random.default_rng(64), **plan_kw)
     res = plan.run()                               # compile + warm caches
     best = float("inf")
     for _ in range(reps):
@@ -43,25 +51,38 @@ def main() -> int:
     base_path = (pathlib.Path(__file__).resolve().parent.parent
                  / "BENCH_sweep.json")
     baseline = json.loads(base_path.read_text())
-    base_row = next(r for r in baseline["rows"]
-                    if r["name"] == "sweep_throughput_b64")
-    base_us = float(base_row["us_per_call"])
     base_calib = float(baseline.get("meta", {}).get("calibration_us", 0.0))
 
     tol = float(os.environ.get("BENCH_SMOKE_TOL", "0.25"))
     local_calib = calibration_us()
     scale = (local_calib / base_calib) if base_calib > 0 else 1.0
 
-    us, realized = _min_of_reps()
-    budget = base_us * scale * (1.0 + tol)
-    print(f"sweep_throughput_b64: {us:.1f} us/call min-of-7 "
-          f"({64 / us * 1e6:.0f}_scen/s, realized epochs {realized}); "
-          f"baseline {base_us:.1f} us/call, machine-speed scale "
-          f"{scale:.2f}x -> budget {budget:.1f} us/call "
-          f"(tolerance {tol:.0%})")
-    if not np.isfinite(us) or us > budget:
-        print("FAIL: benchmark smoke regression "
-              f"({us:.1f} > {budget:.1f} us/call)")
+    failed = False
+    for name, plan_kw in GATED:
+        base_row = next((r for r in baseline["rows"] if r["name"] == name),
+                        None)
+        if base_row is None:
+            print(f"FAIL: baseline row {name!r} missing from {base_path} — "
+                  "re-record it with `python -m benchmarks.sweep_throughput`")
+            failed = True
+            continue
+        # gate noise floor against noise floor: the recorded min-of-reps
+        # (mean-of-3 is the trend figure; comparing a local min against it
+        # made the budget depend on which way calibration drift pointed)
+        base_us = float(base_row.get("us_per_call_min",
+                                     base_row["us_per_call"]))
+        us, realized = _min_of_reps(**plan_kw)
+        budget = base_us * scale * (1.0 + tol)
+        print(f"{name}: {us:.1f} us/call min-of-7 "
+              f"({64 / us * 1e6:.0f}_scen/s, realized epochs {realized}); "
+              f"baseline {base_us:.1f} us/call, machine-speed scale "
+              f"{scale:.2f}x -> budget {budget:.1f} us/call "
+              f"(tolerance {tol:.0%})")
+        if not np.isfinite(us) or us > budget:
+            print("FAIL: benchmark smoke regression "
+                  f"({name}: {us:.1f} > {budget:.1f} us/call)")
+            failed = True
+    if failed:
         return 1
     print("OK")
     return 0

@@ -21,6 +21,12 @@ mixed grid's exact workload as six per-combination uniform plans (summed
 wall time) — the relevant baseline for "what does mixing policies inside
 one batch cost?".  The recorded gap is mixed vs that.
 
+Locality rows: the ``_locality_b*`` rows re-run the workload with the
+storage subsystem on (DESIGN.md §7 — skewed hot-spot placement,
+replication 1–3 per lane, LOCALITY binding), timing the placement hash +
+candidate-masked binding scan + fetch-delay ops the block store adds to
+the encode path; each row records its placement/replication meta.
+
 ``python -m benchmarks.sweep_throughput`` records the rows plus
 backend/device metadata (and a small calibration figure that lets CI gate
 regressions across machine speeds, see ``benchmarks.bench_smoke``) to
@@ -37,13 +43,15 @@ import time
 import jax
 import numpy as np
 
-from repro.core import BindingPolicy, SchedPolicy
+from repro.core import BindingPolicy, Placement, SchedPolicy
 from repro.core.sweep import axis, product, zip_
 
 EPOCH_BOUND = 2 * 21 + 2   # the pre-adaptive engine's static bound at T=21
+LOC_PLACEMENT = int(Placement.SKEWED)   # locality rows' placement variant
+LOC_REPLICATION = "1-3"                 # … and replication-factor range
 
 
-def _random_cols(n, rng, mixed_policies=False):
+def _random_cols(n, rng, mixed_policies=False, locality=False):
     cols = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
         n_reduces=np.ones(n, np.int32),
@@ -58,6 +66,19 @@ def _random_cols(n, rng, mixed_policies=False):
     if mixed_policies:
         cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
         cols["binding_policy"] = rng.integers(0, 3, n).astype(np.int32)
+    if locality:
+        # the storage-subsystem workload (DESIGN.md §7): block store on,
+        # skewed hot-spot placement, LOCALITY bound per lane — the
+        # placement hash + candidate-masked binding scan now sit on the
+        # encode path this row times
+        cols["binding_policy"] = np.full(
+            n, int(BindingPolicy.LOCALITY), np.int32)
+        cols["storage_enabled"] = np.ones(n, np.float32)
+        cols["replication"] = rng.integers(1, 4, n).astype(np.int32)
+        cols["placement"] = np.full(n, LOC_PLACEMENT, np.int32)
+        cols["block_size_mb"] = rng.choice([8192.0, 32768.0], n
+                                           ).astype(np.float32)
+        cols["storage_seed"] = rng.integers(0, 1000, n).astype(np.int32)
     return cols
 
 
@@ -68,29 +89,45 @@ def _plan_of(cols):
     return plan.replace(pad_tasks=21, pad_vms=9)
 
 
-def _random_plan(n, rng, mixed_policies=False):
-    return _plan_of(_random_cols(n, rng, mixed_policies))
+def _random_plan(n, rng, mixed_policies=False, locality=False):
+    return _plan_of(_random_cols(n, rng, mixed_policies, locality))
 
 
 def _time_runs(run, reps=3):
+    """(mean_seconds, min_seconds, last_result) over ``reps`` timed calls.
+
+    The mean is the trend-tracking figure; the min is the noise floor the
+    CI gate (``bench_smoke``) compares against — gating a local min-of-7
+    against a recorded *mean* left no headroom whenever the machine-speed
+    calibration drifted between samples."""
     run()                                       # compile + warm caches
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         res = run()
-    return (time.perf_counter() - t0) / reps, res
+        times.append(time.perf_counter() - t0)
+    return sum(times) / reps, min(times), res
 
 
 def throughput_rows(batch_sizes=(64, 512, 2048), reps=3,
-                    mixed_policies=False):
+                    mixed_policies=False, locality=False):
     rows = []
-    rng = np.random.default_rng(0)
-    tag = "_mixedpol" if mixed_policies else ""
+    tag = ("_locality" if locality
+           else "_mixedpol" if mixed_policies else "")
+    meta = ({"placement": Placement(LOC_PLACEMENT).name.lower(),
+             "replication": LOC_REPLICATION, "storage": True}
+            if locality else None)
     for n in batch_sizes:
-        plan = _random_plan(n, rng, mixed_policies)
-        dt, res = _time_runs(plan.run, reps)
-        rows.append((f"sweep_throughput{tag}_b{n}", dt * 1e6,
+        # seed == batch size: every b{n} row draws the same base columns
+        # regardless of which batch sizes the call sweeps, so variant rows
+        # (plain / mixedpol / locality) at one n are the *same workload*
+        # and their recorded gaps measure the variant, not rng drift
+        plan = _random_plan(n, np.random.default_rng(n), mixed_policies,
+                            locality)
+        dt, dt_min, res = _time_runs(plan.run, reps)
+        rows.append((f"sweep_throughput{tag}_b{n}", dt * 1e6, dt_min * 1e6,
                      f"{n / dt:.0f}_scen/s",
-                     int(res["realized_epochs"].max())))
+                     int(res["realized_epochs"].max()), meta))
     return rows
 
 
@@ -102,8 +139,8 @@ def unifpol_rows(n=2048, reps=3):
     running six separate uniform sweeps would see.  Summed wall time over
     the same 2048 scenarios -> directly comparable scen/s.
     """
-    # same fresh rng(0) first-draw as the mixedpol row -> identical grid
-    cols = _random_cols(n, np.random.default_rng(0), mixed_policies=True)
+    # same rng(n) draw as the mixedpol b{n} row -> identical grid
+    cols = _random_cols(n, np.random.default_rng(n), mixed_policies=True)
     plans = []
     for sp in SchedPolicy:
         for bp in BindingPolicy:
@@ -123,9 +160,9 @@ def unifpol_rows(n=2048, reps=3):
         realized[0] = max(int(r["realized_epochs"].max()) for r in out)
         return out
 
-    dt, _ = _time_runs(run_all, reps)
-    return [(f"sweep_throughput_unifpol_b{n}", dt * 1e6,
-             f"{n / dt:.0f}_scen/s", realized[0])]
+    dt, dt_min, _ = _time_runs(run_all, reps)
+    return [(f"sweep_throughput_unifpol_b{n}", dt * 1e6, dt_min * 1e6,
+             f"{n / dt:.0f}_scen/s", realized[0], None)]
 
 
 def calibration_us(reps=15):
@@ -149,10 +186,13 @@ def calibration_us(reps=15):
 def all_rows():
     # mixed-policy row: same grid with random (sched, binding) per scenario —
     # policy diversity is data, so one adaptive schedule serves all scenarios
-    # within the batch; the unifpol row is its uniform-execution reference
+    # within the batch; the unifpol row is its uniform-execution reference.
+    # locality rows: the same workload with the block store on (skewed
+    # placement, LOCALITY binding) — what the storage subsystem costs.
     return (throughput_rows()
             + throughput_rows(batch_sizes=(2048,), mixed_policies=True)
-            + unifpol_rows())
+            + unifpol_rows()
+            + throughput_rows(batch_sizes=(64, 2048), locality=True))
 
 
 def main() -> None:
@@ -160,6 +200,8 @@ def main() -> None:
     by_name = {r[0]: r for r in rows}
     mixed = by_name["sweep_throughput_mixedpol_b2048"][1]
     unif = by_name["sweep_throughput_unifpol_b2048"][1]
+    plain = by_name["sweep_throughput_b2048"][1]
+    loc = by_name["sweep_throughput_locality_b2048"][1]
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
     payload = {
         "benchmark": "sweep_throughput (SweepPlan.run end-to-end, "
@@ -173,10 +215,13 @@ def main() -> None:
             "epoch_bound": EPOCH_BOUND,
             "calibration_us": round(calibration_us(), 1),
             "mixedpol_gap_vs_unifpol": round(mixed / unif - 1.0, 4),
+            "locality_gap_vs_plain": round(loc / plain - 1.0, 4),
         },
-        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d,
-                  "realized_epochs": ep}
-                 for n, us, d, ep in rows],
+        "rows": [{"name": n, "us_per_call": round(us, 1),
+                  "us_per_call_min": round(us_min, 1), "derived": d,
+                  "realized_epochs": ep,
+                  **({"meta": m} if m else {})}
+                 for n, us, us_min, d, ep, m in rows],
     }
     out.write_text(json.dumps(payload, indent=2) + "\n")
     for r in payload["rows"]:
@@ -184,6 +229,8 @@ def main() -> None:
               f"epochs={r['realized_epochs']}/{EPOCH_BOUND}")
     print(f"mixedpol vs unifpol gap: "
           f"{payload['meta']['mixedpol_gap_vs_unifpol']:+.1%}")
+    print(f"locality (storage on) vs plain b2048 gap: "
+          f"{payload['meta']['locality_gap_vs_plain']:+.1%}")
     print(f"wrote {out}")
 
 

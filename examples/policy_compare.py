@@ -17,12 +17,18 @@ from repro.core import BindingPolicy, SchedPolicy
 from repro.core.sweep import axis, product
 
 M_SWEEP = range(1, 21)
+# The three bindings that differ without a storage model — LOCALITY is
+# bit-identical to LEAST_LOADED when the block store is off (DESIGN.md
+# §7.3); see examples/smart_city.py Part 3 for the storage-on comparison.
+BINDINGS = [BindingPolicy.ROUND_ROBIN, BindingPolicy.LEAST_LOADED,
+            BindingPolicy.PACKED]
 
 
 def part1_policy_grid():
-    print("== Part 1: M-sweep x all 6 policy combos, one vmapped call ==")
+    print(f"== Part 1: M-sweep x all {2 * len(BINDINGS)} distinct policy "
+          "combos, one vmapped call ==")
     plan = product(axis("sched_policy", list(SchedPolicy)),
-                   axis("binding_policy", list(BindingPolicy)),
+                   axis("binding_policy", BINDINGS),
                    axis("n_maps", M_SWEEP),
                    vm_type="medium")
     t0 = time.perf_counter()
@@ -31,7 +37,7 @@ def part1_policy_grid():
     print(f"  {plan.size} scenarios in {dt * 1e3:.1f} ms")
     print(f"  {'policy':34s} makespan@M1  makespan@M20")
     for sp in SchedPolicy:
-        for bp in BindingPolicy:
+        for bp in BINDINGS:
             mk = res.select(sched_policy=sp, binding_policy=bp)["makespan"]
             print(f"  {sp.name:13s} + {bp.name:12s}     {mk[0]:9.1f}     "
                   f"{mk[-1]:9.1f}")
@@ -44,12 +50,12 @@ def part2_heterogeneous_binding():
     # 2 fast + 4 slow VMs: round-robin overloads the slow ones; least-loaded
     # weighs placement by each VM's capacity (mips x PEs).  The mixed cluster
     # is one per-VM-encoded cell — the sweep never leaves the device.
-    plan = product(axis("binding_policy", list(BindingPolicy)),
+    plan = product(axis("binding_policy", BINDINGS),
                    vms=("medium",) * 2 + ("small",) * 4,
                    sched_policy=SchedPolicy.SPACE_SHARED,
                    n_maps=12, n_reduces=2, job_type="medium")
     res = plan.run()
-    for bp in BindingPolicy:
+    for bp in BINDINGS:
         r = res.select(binding_policy=bp).to_dict()
         print(f"  {bp.name:12s} makespan={r['makespan']:9.1f}s "
               f"avg_exec={r['avg_exec']:8.1f}s vm_cost=${r['vm_cost']:9.1f} "

@@ -10,19 +10,20 @@ Public API:
 * :mod:`~repro.core.workload` — LM-training-step → scenario bridge
   (stragglers, failures, checkpoint goodput).
 """
-from . import engine, network, refsim, sweep, workload
+from . import engine, network, refsim, storage, sweep, workload
 from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
                      SchedPolicy, VMSpec, paper_scenario)
 from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
+from .storage import Placement, StorageSpec
 from .sweep import Axis, SweepPlan, SweepResult
 from .workload import ChipSpec, StepCost
 
 __all__ = [
-    "engine", "network", "refsim", "sweep", "workload",
+    "engine", "network", "refsim", "storage", "sweep", "workload",
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
-    "SchedPolicy", "BindingPolicy",
+    "StorageSpec", "Placement", "SchedPolicy", "BindingPolicy",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",

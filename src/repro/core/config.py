@@ -13,6 +13,9 @@ import enum
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from .storage import Placement, StorageSpec, as_placement  # noqa: F401
+#   (re-exported: Scenario carries a StorageSpec; DESIGN.md §7)
+
 
 # ---------------------------------------------------------------------------
 # Scheduling & binding policies (DESIGN.md §3)
@@ -53,6 +56,15 @@ class BindingPolicy(enum.IntEnum):
         owning slot ``k mod total_pes`` where slots are laid out
         ``[vm0]*pes0 ++ [vm1]*pes1 ++ …`` — so consecutive tasks of a job
         (which share input splits) co-locate until a VM's PEs are full.
+    LOCALITY     — data-local binding over the storage subsystem
+        (DESIGN.md §7): a map task binds to the least-loaded VM *among
+        the replica holders* of its input block (same f32 load estimate
+        and tie-breaking as LEAST_LOADED); reduces, block-less tasks and
+        disabled storage fall back to all VMs, where the rule degenerates
+        to LEAST_LOADED bit for bit.  Any policy binding a map task off
+        its replica set pays the remote-fetch delay
+        (``storage.remote_fetch_delay``) before the task becomes ready —
+        LOCALITY avoids it by construction.
 
     Binding is resolved at *encoding* time into the per-task ``task_vm``
     field (the broker binds before execution, as CloudSim does); the policy
@@ -61,6 +73,7 @@ class BindingPolicy(enum.IntEnum):
     ROUND_ROBIN = 0
     LEAST_LOADED = 1
     PACKED = 2
+    LOCALITY = 3
 
 
 def base_task_lengths_f32(length_mi, n_maps, n_reduces, reduce_factor):
@@ -155,6 +168,7 @@ class Scenario:
     jobs: Sequence[JobSpec] = field(default_factory=lambda: (JOB_SMALL,))
     datacenter: DatacenterSpec = field(default_factory=DatacenterSpec)
     network: NetworkSpec = field(default_factory=NetworkSpec)
+    storage: StorageSpec = field(default_factory=StorageSpec)
     sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED
     binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN
 

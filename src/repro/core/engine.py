@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import network
+from . import network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 
@@ -73,9 +73,17 @@ class ScenarioArrays(NamedTuple):
     # policies (i32 scalars — data, not trace constants: one lowering serves
     # batches mixing policies under vmap; see config.SchedPolicy)
     sched_policy: jax.Array    # i32 (0 time-shared | 1 space-shared)
-    binding_policy: jax.Array  # i32 (0 RR | 1 least-loaded | 2 packed);
-    #                            already resolved into task_vm, kept as
-    #                            provenance alongside the per-task binding
+    binding_policy: jax.Array  # i32 (0 RR | 1 least-loaded | 2 packed |
+    #                            3 locality); already resolved into task_vm,
+    #                            kept as provenance alongside the binding
+    # storage (DESIGN.md §7): realized block placement as per-task data —
+    # replication / block size / placement skew are sweepable like any
+    # other parameter because only their *realization* reaches the engine
+    block_vm: jax.Array        # i32[T, V] replica VMs of the task's input
+    #                            block in replica-slot order; -1 = no slot
+    #                            (reduces, padding, storage disabled)
+    block_size: jax.Array      # f32[T] input-block size in MB (0 = none)
+    storage_enabled: jax.Array  # f32 (0/1) provenance gate
 
 
 class SimOutput(NamedTuple):
@@ -107,6 +115,10 @@ class ScenarioMetrics(NamedTuple):
     finish_time: jax.Array   # f32 — wall-clock end of the scenario
     utilization: jax.Array   # f32 — delivered MI / (cluster capacity × time)
     n_epochs: jax.Array      # i32 — event epochs executed (bench metric)
+    locality_fraction: jax.Array  # f32 — data-local maps / maps with a
+    #                               placed input block (0 if storage off)
+    transfer_bytes: jax.Array  # f32 — remote-fetched block bytes (decimal
+    #                            MB × 1e6; 0 under LOCALITY's ideal case)
 
 
 def task_lengths(sc: ScenarioArrays) -> jax.Array:
@@ -125,18 +137,24 @@ def task_lengths(sc: ScenarioArrays) -> jax.Array:
 
 
 def bind_tasks(binding_policy, task_valid, task_len, vm_mips, vm_pes,
-               vm_valid) -> jax.Array:
+               vm_valid, locality_cand=None) -> jax.Array:
     """Resolve the broker's task→VM binding as data (DESIGN.md §3.2).
 
     ``binding_policy`` may be a traced i32 scalar, so a vmapped batch can
     mix :class:`~repro.core.config.BindingPolicy` values without retracing;
-    all three strategies are computed and selected branch-free.  ``task_len``
+    all four strategies are computed and selected branch-free.  ``task_len``
     is the *base* (pre-straggler-multiplier) length — the broker binds
     before execution, so multipliers must not influence placement.  The
     LEAST_LOADED estimate is ``assigned_MI / (mips * pes)`` (full-VM
     capacity, so multi-PE VMs are not undervalued) accumulated in float32,
     matching the oracle's bookkeeping bit for bit so both layers pick
     identical VMs.
+
+    ``locality_cand`` is LOCALITY's ``bool[T, V]`` candidate mask
+    (``storage.locality_candidates``: replica holders for tasks with an
+    input block, all valid VMs otherwise).  ``None`` — no storage model —
+    makes LOCALITY bind exactly as LEAST_LOADED (same scan, all-true
+    mask), which is also what an all-true mask produces bit for bit.
     """
     task_valid = jnp.asarray(task_valid, bool)
     task_len = jnp.asarray(task_len, jnp.float32)
@@ -178,8 +196,33 @@ def bind_tasks(binding_policy, task_valid, task_len, vm_mips, vm_pes,
     _, ll = jax.lax.fori_loop(0, T, ll_step,
                               (load0, jnp.zeros(T, jnp.int32)))
 
+    # LOCALITY: the same greedy f32 scan, argmin restricted per task to its
+    # candidate mask.  Masking with _BIG reproduces load0's invalid-VM fill,
+    # so an all-true row replays LEAST_LOADED's argmin sequence bit for bit
+    # (the degenerate-parity property: replication == n_vms, reduces, or a
+    # disabled store).  A separate fori_loop, not a branch inside ll_step:
+    # under a *static* binding_policy (the bucketed sweep path) XLA DCEs
+    # whichever scan the bucket cannot take.
+    if locality_cand is None:
+        loc = ll
+    else:
+        cand = jnp.asarray(locality_cand, bool)
+
+        def loc_step(i, carry):
+            load, out = carry
+            v = jnp.argmin(jnp.where(cand[i], load, jnp.float32(_BIG))
+                           ).astype(jnp.int32)
+            add = jnp.where(task_valid[i],
+                            task_len[i] / (vm_mips[v] * vm_pes_f[v]), 0.0)
+            return (load + jnp.where(vm_iota == v, add, 0.0),
+                    out.at[i].set(v))
+
+        _, loc = jax.lax.fori_loop(0, T, loc_step,
+                                   (load0, jnp.zeros(T, jnp.int32)))
+
     vm = jnp.select([bp == BindingPolicy.ROUND_ROBIN,
-                     bp == BindingPolicy.LEAST_LOADED], [rr, ll], packed)
+                     bp == BindingPolicy.LEAST_LOADED,
+                     bp == BindingPolicy.PACKED], [rr, ll, packed], loc)
     return jnp.where(task_valid, vm, 0).astype(jnp.int32)
 
 
@@ -218,10 +261,24 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     vm_mips = _padf([v.mips for v in sc.vms], V, fill=1.0)
     vm_pes = _padf([v.pes for v in sc.vms], V, fill=1.0)
     vm_valid = np.arange(V) < len(sc.vms)
-    if sc.binding_policy == BindingPolicy.LEAST_LOADED:
+
+    # Storage model (DESIGN.md §7): realized block placement, host-side.
+    # Disabled -> all-(-1)/0 arrays, and every policy binds exactly as
+    # before (the candidate mask degenerates to vm_valid).
+    block_vm = np.full((T, V), -1, np.int32)
+    block_mb = np.zeros(T, f32)
+    bvm, bmb = storage.scenario_placement(sc, V)
+    block_vm[:len(bvm)] = bvm
+    block_mb[:len(bmb)] = bmb
+
+    if sc.binding_policy in (BindingPolicy.LEAST_LOADED,
+                             BindingPolicy.LOCALITY):
         # f32-sensitive: go through the one shared jnp implementation
+        cand = (storage.locality_candidates(np, block_vm, vm_valid)
+                if sc.binding_policy == BindingPolicy.LOCALITY else None)
         t_vm = np.asarray(bind_tasks(int(sc.binding_policy), t_val, t_len,
-                                     vm_mips, vm_pes, vm_valid), np.int32)
+                                     vm_mips, vm_pes, vm_valid,
+                                     locality_cand=cand), np.int32)
     else:
         # integer-exact fast paths — skip a JAX dispatch (+ per-padding
         # compile) per encoded scenario on the host path; equality with
@@ -255,6 +312,9 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
         net_cost_per_unit=f32(sc.network.cost_per_unit),
         sched_policy=np.int32(sc.sched_policy),
         binding_policy=np.int32(sc.binding_policy),
+        block_vm=block_vm,
+        block_size=block_mb,
+        storage_enabled=f32(1.0 if sc.storage.enabled else 0.0),
     )
 
 
@@ -311,10 +371,17 @@ def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
                                      sc.net_bw, sc.net_enabled)
     task_len = task_lengths(sc)
 
-    # Maps ready at submit + stage-in; reduces unknown until maps complete.
+    # Maps ready at submit + stage-in (+ the storage remote-fetch delay
+    # when the bound VM holds no replica of the task's input block —
+    # exactly 0.0 for local tasks and storage-less scenarios, so the
+    # pre-storage op sequence is reproduced bit for bit); reduces unknown
+    # until maps complete.
+    fetch = storage.remote_fetch_delay(sc.block_vm, sc.block_size,
+                                       sc.task_vm, sc.kappa_in, sc.net_bw,
+                                       sc.net_enabled, xp=jnp)
     ready0 = jnp.where(
         sc.task_valid & ~sc.task_is_reduce,
-        (sc.job_submit + stage_in)[sc.task_job], _BIG)
+        (sc.job_submit + stage_in)[sc.task_job] + fetch, _BIG)
 
     is_map = sc.task_valid & ~sc.task_is_reduce
     maps_left0 = jax.ops.segment_sum(is_map.astype(jnp.int32), sc.task_job,
@@ -576,8 +643,18 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
     total_mi = jnp.sum(task_lengths(sc))
     capacity = jnp.sum(jnp.where(sc.vm_valid, sc.vm_mips * sc.vm_pes, 0.0))
     util = total_mi / jnp.maximum(capacity * out.finish_time, 1e-30)
+    # Transfer-aware storage metrics (DESIGN.md §7): pure functions of the
+    # encoded placement + binding (the broker binds before execution, so
+    # locality is decided at encode time, not by the event loop).
+    blocked = storage.has_block(sc.block_vm) & sc.task_valid
+    local = blocked & storage.is_local(sc.block_vm, sc.task_vm)
+    n_blocked = jnp.sum(blocked.astype(jnp.float32))
+    loc_frac = (jnp.sum(local.astype(jnp.float32))
+                / jnp.maximum(n_blocked, 1.0))
+    xfer = jnp.sum(jnp.where(blocked & ~local, sc.block_size, 0.0)) * 1e6
     return ScenarioMetrics(finish_time=out.finish_time, utilization=util,
-                           n_epochs=out.n_epochs)
+                           n_epochs=out.n_epochs,
+                           locality_fraction=loc_frac, transfer_bytes=xfer)
 
 
 @jax.jit

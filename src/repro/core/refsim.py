@@ -35,9 +35,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import network
+from . import network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
+# the engine's masked-argmin fill: LOCALITY's candidate masking must use
+# the exact value engine.bind_tasks uses or the two layers' f32 argmin
+# sequences could diverge on a (pathological) load that reaches the fill
+from .engine import _BIG
 
 _EPS = 1e-9
 
@@ -122,11 +126,19 @@ class TaskTracker:
         self.queue: list[list[tuple[float, int]]] = \
             [[] for _ in range(self.n_vms)]
 
-    def bind(self, task: Task, base_len: np.float32) -> None:
+    def bind(self, task: Task, base_len: np.float32,
+             cand: np.ndarray | None = None) -> None:
         """``base_len`` is the pre-multiplier task length computed with the
-        f32 op sequence shared by every layer (see engine.bind_tasks)."""
-        if self.binding == BindingPolicy.LEAST_LOADED:
-            vm = int(np.argmin(self._load))
+        f32 op sequence shared by every layer (see engine.bind_tasks);
+        ``cand`` is LOCALITY's candidate-VM mask (replica holders of the
+        task's input block; ``None`` — all VMs — degenerates the rule to
+        LEAST_LOADED's exact argmin sequence)."""
+        if self.binding in (BindingPolicy.LEAST_LOADED,
+                            BindingPolicy.LOCALITY):
+            masked = self._load
+            if self.binding == BindingPolicy.LOCALITY and cand is not None:
+                masked = np.where(cand, self._load, np.float32(_BIG))
+            vm = int(np.argmin(masked))
             self._load[vm] += base_len / (np.float32(self.vms[vm].mips)
                                           * np.float32(self.vms[vm].pes))
         elif self.binding == BindingPolicy.PACKED:
@@ -198,18 +210,32 @@ class IoTSimBroker:
         self.jt = JobTracker(scenario)
         self.tt = TaskTracker(scenario.vms, scenario.sched_policy,
                               scenario.binding_policy)
+        # Storage subsystem (DESIGN.md §7): the same realized placement
+        # the array encoders consume (one shared helper — the layers
+        # cannot drift), reshaped into per-task candidate masks.
+        n_tasks = len(self.jt.tasks)
+        n_vms = len(scenario.vms)
+        self._cand: list[np.ndarray | None] = [None] * n_tasks
+        bvm, self._block_mb = storage.scenario_placement(scenario, n_vms)
+        for tid in range(n_tasks):
+            holders = bvm[tid][bvm[tid] >= 0]
+            if holders.size:
+                mask = np.zeros(n_vms, bool)
+                mask[holders] = True
+                self._cand[tid] = mask
         # Bind every task in submission order: per job, the map list is
         # submitted first, then (later, after maps) the reduce list;
         # CloudSim's broker keeps one rolling VM pointer across submissions.
         # Base lengths for the load estimate use the shared f32 op sequence
         # (not the f64 task lengths) so binding matches the engine exactly.
         f32 = np.float32
-        for t in self.jt.tasks:
+        for tid, t in enumerate(self.jt.tasks):
             job = scenario.jobs[t.job]
             map_l, red_l = base_task_lengths_f32(
                 f32(job.length_mi), f32(job.n_maps), f32(job.n_reduces),
                 f32(job.reduce_factor))
-            self.tt.bind(t, red_l if t.is_reduce else map_l)
+            self.tt.bind(t, red_l if t.is_reduce else map_l,
+                         cand=self._cand[tid])
         if length_multipliers is not None:
             assert len(length_multipliers) == len(self.jt.tasks)
             for t, m in zip(self.jt.tasks, length_multipliers):
@@ -224,12 +250,20 @@ class IoTSimBroker:
         calendar: list[tuple[float, int, int]] = []   # (time, seq, task_id)
         seq = itertools.count()
 
-        # Map tasks become ready at submit + stage-in delay.
+        # Map tasks become ready at submit + stage-in delay (+ the storage
+        # remote-fetch delay when bound off the input block's replica set).
         for ji, job in enumerate(sc.jobs):
             ready = job.submit_time + network.stage_in_delay(job, sc.network)
             for tid in self.jt.map_ids[ji]:
-                tasks[tid].ready = ready
-                heapq.heappush(calendar, (ready, next(seq), tid))
+                cand = self._cand[tid]
+                fetch = 0.0
+                if cand is not None and not cand[tasks[tid].vm]:
+                    fetch = network.transfer_delay(
+                        sc.network.kappa_in, float(self._block_mb[tid]),
+                        0.0, sc.network.bw_mbps,
+                        1.0 if sc.network.enabled else 0.0)
+                tasks[tid].ready = ready + fetch
+                heapq.heappush(calendar, (ready + fetch, next(seq), tid))
 
         for t in tasks:
             t.remaining = t.length_mi

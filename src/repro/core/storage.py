@@ -1,0 +1,256 @@
+"""Data-locality storage subsystem: block placement as device-side data.
+
+IOTSim's premise is that IoT big-data jobs are dominated by moving sensor
+data into and between cloud VMs before MapReduce processing — yet binding
+policies that ignore *where* a task's input lives treat that data as free.
+Following Locality Sim (PAPERS.md), this module models an HDFS-style block
+store:
+
+* each job's dataset is split into fixed-size **blocks**
+  (``ceil(data_mb / block_size_mb)``, the last block holding the
+  remainder); map task ``m`` reads block ``m mod n_blocks``;
+* every block is replicated ``replication``-fold onto **distinct** VMs by
+  a *seeded, counter-based placement function* — no RNG state, just an
+  integer hash of ``(seed, job, block)`` — with a ``UNIFORM`` variant
+  (hashed start VM) and a ``SKEWED`` hot-spot variant (quadratic bias
+  toward low VM indices, modelling a few storage-heavy nodes);
+* placement is **encoded into** :class:`~repro.core.engine.ScenarioArrays`
+  as per-task ``block_vm`` / ``block_size`` arrays, so replication factor,
+  block size and placement skew are sweepable data like every other
+  scenario parameter;
+* a map task bound to a VM holding a replica of its block reads locally;
+  bound anywhere else it first pays a **remote-fetch delay**
+  ``kappa_in * block_mb / BW`` through the shared
+  :func:`~repro.core.network.transfer_delay` formula (the ``M = 0``
+  point-to-point case) before becoming ready.
+
+On top of the store, ``BindingPolicy.LOCALITY`` binds each task to the
+least-loaded VM *among the replica holders* of its input block (falling
+back to all VMs for reduces, block-less tasks, or a disabled store).  Its
+load estimate and tie-breaking are exactly LEAST_LOADED's, so with
+``replication == num_vms`` (every block everywhere) LOCALITY is
+**bit-identical** to LEAST_LOADED — the degenerate-parity property pinned
+in ``tests/test_storage.py``.
+
+Cross-layer determinism (DESIGN.md §7): every function here is written
+against a module handle ``xp`` that may be ``numpy`` (the sequential
+oracle and host-side ``from_scenario``) or ``jax.numpy`` (the traced
+``encode_cell`` under ``vmap``).  The hash runs in uint32 (wraps
+identically in both), the skew transform in float32 (same IEEE ops), so
+host- and device-encoded placements agree **bit for bit**.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import numpy as np
+
+
+class Placement(enum.IntEnum):
+    """Block-placement variant (stable wire constants — i32 sweep data).
+
+    UNIFORM — replica-set start VM is a uniform hash of (seed, job, block):
+        load spreads evenly, the HDFS default-rack idealization.
+    SKEWED  — hot-spot placement: the start VM is quadratically biased
+        toward low VM indices (``floor(u² · V)`` for a hashed uniform
+        ``u``), modelling a few storage-heavy nodes that accumulate most
+        blocks — the regime where locality-blind binding pays the most
+        remote fetches and LOCALITY binding risks load imbalance.
+    """
+    UNIFORM = 0
+    SKEWED = 1
+
+
+def as_placement(v) -> Placement:
+    """Coerce a name (``"uniform"``/``"skewed"``), int, or member."""
+    if isinstance(v, str):
+        try:
+            return Placement[v.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown placement {v!r}; "
+                f"known: {[p.name.lower() for p in Placement]}") from None
+    return Placement(v)
+
+
+@dataclass(frozen=True)
+class StorageSpec:
+    """The scenario-level storage model (disabled by default: zero blocks,
+    zero fetch delays — pre-storage scenarios are reproduced bit for bit).
+
+    ``block_size_mb`` is the HDFS-style fixed block size; at the paper's
+    200 GB Small dataset the 2048 MB default yields ~98 blocks.
+    ``replication`` is clipped to the VM count at placement time (a block
+    cannot have two replicas on one VM).
+    """
+    enabled: bool = False
+    block_size_mb: float = 2048.0
+    replication: int = 3
+    placement: Placement = Placement.UNIFORM
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Seeded counter-based placement (xp-generic: numpy == jax.numpy, bit for bit)
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint32(0x7FEB352D)     # lowbias32 (Walker) avalanche constants
+_M2 = np.uint32(0x846CA68B)
+_C1 = np.uint32(0x9E3779B9)     # distinct odd mix-in constants per input
+_C2 = np.uint32(0x85EBCA6B)
+_C3 = np.uint32(0xC2B2AE35)
+_INV24 = np.float32(1.0 / (1 << 24))
+
+
+def _mix32(h):
+    """lowbias32-style avalanche; uint32 in, uint32 out, wraps in both
+    numpy array ops and jnp (operands must be arrays, not numpy scalars —
+    scalar overflow warns in numpy, array overflow wraps silently)."""
+    h = (h ^ (h >> 16)) * _M1
+    h = (h ^ (h >> 15)) * _M2
+    return h ^ (h >> 16)
+
+
+def map_block_placement(xp, map_idx, job_idx, *, seed, placement,
+                        replication, block_size_mb, job_data, n_vms,
+                        pad_vms: int):
+    """Replica VMs + block size for each map task of a job.
+
+    ``map_idx``/``job_idx`` are i32 arrays ``[K]`` (map index within its
+    job, job index); the scalars ``seed``/``placement``/``replication``/
+    ``n_vms`` (i32-like) and ``block_size_mb``/``job_data`` (f32-like) may
+    be traced.  Returns ``(block_vm, block_mb)``:
+
+    * ``block_vm`` — i32 ``[K, pad_vms]``: the VMs holding a replica of
+      the task's input block in replica-slot order, ``-1`` for slots
+      beyond the effective replication ``min(max(replication, 1), n_vms)``
+      (slot ``r`` holds VM ``(start + r) mod n_vms`` — consecutive VMs
+      from the hashed start, so replicas are always distinct and
+      ``replication == n_vms`` places every block on every VM);
+    * ``block_mb`` — f32 ``[K]``: the block's size in MB (the last block
+      of a dataset carries the remainder).
+
+    Pure arithmetic on its operands — ``xp`` is ``numpy`` or ``jax.numpy``
+    and the two produce bit-identical outputs (uint32 wrap-around hash,
+    float32 skew transform).
+    """
+    i32, f32, u32 = np.int32, np.float32, np.uint32
+    if isinstance(seed, int):
+        # numpy 2 raises OverflowError converting out-of-range Python ints
+        # to uint32 while array columns wrap silently — normalize here so
+        # the host (Python-int) and device (i32-column) seed domains agree
+        seed = seed % (1 << 32)
+    map_idx = xp.asarray(map_idx, i32)
+    n_vms_i = xp.asarray(n_vms, i32)
+
+    # dataset -> fixed-size blocks; map m reads block m mod n_blocks
+    bs = xp.maximum(xp.asarray(block_size_mb, f32), f32(1e-6))
+    data = xp.asarray(job_data, f32)
+    n_blocks = xp.maximum(xp.ceil(data / bs), f32(1.0)).astype(i32)
+    block = map_idx % n_blocks
+    last_mb = data - (n_blocks - 1).astype(f32) * bs
+    block_mb = xp.where(block == n_blocks - 1, last_mb, bs)
+
+    # seeded start VM per (seed, job, block)
+    h = _mix32(xp.asarray(block, u32) * _C1
+               + xp.asarray(job_idx, u32) * _C2
+               + xp.asarray(seed, u32) * _C3)
+    start_uni = (h % xp.asarray(xp.maximum(n_vms_i, 1), u32)).astype(i32)
+    u01 = (h >> u32(8)).astype(f32) * _INV24          # [0, 1) in f32
+    n_vms_f = n_vms_i.astype(f32)
+    start_skew = xp.minimum((u01 * u01 * n_vms_f).astype(i32),
+                            xp.maximum(n_vms_i - 1, 0))
+    start = xp.where(xp.asarray(placement, i32) == int(Placement.SKEWED),
+                     start_skew, start_uni)
+
+    # replica slot r -> VM (start + r) mod n_vms, distinct for r < n_vms
+    eff_repl = xp.clip(xp.asarray(replication, i32), 1, n_vms_i)
+    r = xp.arange(pad_vms, dtype=i32)
+    vm = (start[:, None] + r[None, :]) % xp.maximum(n_vms_i, 1)
+    block_vm = xp.where(r[None, :] < eff_repl, vm, i32(-1))
+    return block_vm, block_mb
+
+
+def scenario_placement(scenario, pad_vms: int):
+    """Realize a whole :class:`Scenario`'s block placement, host-side.
+
+    Returns ``(block_vm, block_mb)`` over the canonical task order (per
+    job: maps, then reduces) — ``i32[n_tasks, pad_vms]`` / ``f32[n_tasks]``
+    with ``-1``/``0`` rows for reduces (and everything, when the store is
+    disabled).  The one shared realization both host encoders consume
+    (``engine.from_scenario`` and ``refsim.IoTSimBroker``), so the oracle
+    and the engine cannot drift as the placement model grows.
+    ``scenario`` is duck-typed (``config`` imports this module).
+    """
+    st = scenario.storage
+    n_tasks = scenario.total_tasks()
+    block_vm = np.full((n_tasks, pad_vms), -1, np.int32)
+    block_mb = np.zeros(n_tasks, np.float32)
+    if not st.enabled:
+        return block_vm, block_mb
+    k = 0
+    for ji, job in enumerate(scenario.jobs):
+        bvm, bmb = map_block_placement(
+            np, np.arange(job.n_maps, dtype=np.int32),
+            np.full(job.n_maps, ji, np.int32),
+            seed=st.seed, placement=int(st.placement),
+            replication=st.replication,
+            block_size_mb=np.float32(st.block_size_mb),
+            job_data=np.float32(job.data_mb),
+            n_vms=len(scenario.vms), pad_vms=pad_vms)
+        block_vm[k:k + job.n_maps] = bvm
+        block_mb[k:k + job.n_maps] = bmb
+        k += job.n_maps + job.n_reduces
+    return block_vm, block_mb
+
+
+# ---------------------------------------------------------------------------
+# Derived quantities every layer shares
+# ---------------------------------------------------------------------------
+
+def locality_candidates(xp, block_vm, vm_valid):
+    """Binding candidate mask ``bool[T, V]`` for LOCALITY.
+
+    A task whose ``block_vm`` row names at least one replica may only bind
+    to replica holders; tasks without a block (reduces, padding, disabled
+    storage) fall back to every valid VM — which makes LOCALITY degenerate
+    to LEAST_LOADED's exact argmin sequence there.
+    """
+    ids = xp.arange(vm_valid.shape[0], dtype=np.int32)
+    holds = (block_vm[:, :, None] == ids[None, None, :]).any(axis=1)
+    has_block = (block_vm >= 0).any(axis=1)
+    return xp.where(has_block[:, None], holds, vm_valid[None, :])
+
+
+def is_local(block_vm, task_vm):
+    """``bool[..., T]``: the bound VM holds a replica of the task's block.
+    Elementwise over any leading batch shape (``-1`` slots never match a
+    bound VM, which is always ``>= 0``)."""
+    return (block_vm == task_vm[..., None]).any(axis=-1)
+
+
+def has_block(block_vm):
+    """``bool[..., T]``: the task reads a placed input block at all."""
+    return (block_vm >= 0).any(axis=-1)
+
+
+def remote_fetch_delay(block_vm, block_size, task_vm, kappa_in, net_bw,
+                       net_enabled, xp=None):
+    """Per-task remote-fetch delay added to map readiness (0 when local).
+
+    The fetch is a point-to-point storage read, so it reuses the shared
+    kappa formula at its ``M = 0`` point:
+    ``transfer_delay(kappa_in, block_mb, 0, BW) = kappa_in * block_mb / BW``
+    — one op sequence for the oracle (f64 floats), the engine (per-lane
+    f32) and the batched kernel wrapper (broadcast f32), so the layers
+    cannot drift.  ``kappa_in``/``net_bw``/``net_enabled`` must broadcast
+    against ``block_size``'s shape.
+    """
+    from . import network           # late: network has no jnp dependency
+    if xp is None:
+        import jax.numpy as xp      # noqa: F811 — default device path
+    fetch = network.transfer_delay(kappa_in, block_size, 0.0, net_bw,
+                                   net_enabled)
+    remote = has_block(block_vm) & ~is_local(block_vm, task_vm)
+    return xp.where(remote, fetch, 0.0)

@@ -48,12 +48,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import storage as storage_mod
 from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
 from .engine import (JobMetrics, ScenarioArrays, ScenarioMetrics, bind_tasks,
                      from_scenario, job_metrics, scenario_metrics,
                      simulate_arrays, simulate_batch_arrays)
+from .storage import Placement, StorageSpec, as_placement
+
+_DEFAULT_STORAGE = StorageSpec()    # encode_cell defaults == Scenario's
 
 
 # ---------------------------------------------------------------------------
@@ -80,8 +84,12 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 job_length, job_data, *, pad_tasks: int, pad_vms: int,
                 reduce_factor=0.5, net_enabled=1.0, net_bw=1000.0,
                 kappa_in=17.0, kappa_shuffle=4.25, net_cost_per_unit=1.0,
-                task_mult=None, sched_policy=0,
-                binding_policy=0) -> ScenarioArrays:
+                task_mult=None, sched_policy=0, binding_policy=0,
+                storage_enabled=0.0,
+                block_size_mb=_DEFAULT_STORAGE.block_size_mb,
+                replication=_DEFAULT_STORAGE.replication,
+                placement=int(_DEFAULT_STORAGE.placement),
+                storage_seed=_DEFAULT_STORAGE.seed) -> ScenarioArrays:
     """One paper cell as traced arrays — homogeneous or per-VM heterogeneous.
 
     ``vm_mips`` / ``vm_pes`` / ``vm_cost`` are **per-VM vectors** of length
@@ -89,6 +97,16 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     broadcast, reproducing the original homogeneous cells bit for bit.  With
     distinct per-VM values, LEAST_LOADED/PACKED binding differentiates inside
     device-side grids just as it does for host-encoded scenarios.
+
+    The storage model (DESIGN.md §7) is realized device-side when
+    ``storage_enabled`` is on: the seeded block placement
+    (``storage.map_block_placement`` — the same uint32/f32 op sequence the
+    host encoder runs, bit for bit) becomes per-task ``block_vm`` /
+    ``block_size`` data, LOCALITY binding draws its candidate mask from
+    it, and every policy's off-replica map tasks pick up the remote-fetch
+    delay inside the engine.  A *statically* disabled store (the plain
+    Python default) skips the placement math entirely, so pre-storage
+    grids pay nothing.
 
     All parameters may be traced — ``vmap`` this over parameter grids;
     ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
@@ -115,11 +133,32 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         f32(job_length), n_maps.astype(jnp.float32),
         n_reduces.astype(jnp.float32), f32(reduce_factor))
     base_len = jnp.where(is_red, red_len, map_len)
+
+    static_off = (not isinstance(storage_enabled, jax.core.Tracer)
+                  and np.ndim(storage_enabled) == 0
+                  and float(storage_enabled) == 0.0)
+    if static_off:
+        block_vm = jnp.full((pad_tasks, pad_vms), -1, jnp.int32)
+        block_mb = jnp.zeros(pad_tasks, jnp.float32)
+        cand = None     # LOCALITY falls back to the LEAST_LOADED scan
+    else:
+        # maps occupy task slots [0, n_maps) for the single encoded job,
+        # so the slot index doubles as the map index
+        rep_vm, rep_mb = storage_mod.map_block_placement(
+            jnp, t, jnp.zeros(pad_tasks, jnp.int32), seed=storage_seed,
+            placement=placement, replication=replication,
+            block_size_mb=block_size_mb, job_data=job_data, n_vms=n_vms,
+            pad_vms=pad_vms)
+        on = f32(storage_enabled) > 0.5
+        is_map = valid & ~is_red
+        block_vm = jnp.where(on & is_map[:, None], rep_vm, -1)
+        block_mb = jnp.where(on & is_map, rep_mb, 0.0)
+        cand = storage_mod.locality_candidates(jnp, block_vm, vm_valid)
     return ScenarioArrays(
         task_job=jnp.zeros(pad_tasks, jnp.int32),
         task_is_reduce=is_red & valid,
         task_vm=bind_tasks(binding_policy, valid, base_len, vm_mips_a,
-                           vm_pes_a, vm_valid),
+                           vm_pes_a, vm_valid, locality_cand=cand),
         task_valid=valid,
         task_mult=task_mult,
         job_length=f32(job_length)[None],
@@ -138,6 +177,9 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         net_cost_per_unit=f32(net_cost_per_unit),
         sched_policy=i32(sched_policy),
         binding_policy=i32(binding_policy),
+        block_vm=block_vm,
+        block_size=block_mb,
+        storage_enabled=f32(storage_enabled),
     )
 
 
@@ -145,8 +187,48 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
 _CELL_PARAMS = tuple(p for p in inspect.signature(encode_cell).parameters
                      if p not in ("pad_tasks", "pad_vms"))
 _INT_PARAMS = frozenset(
-    {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy"})
+    {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy",
+     "replication", "placement", "storage_seed"})
 _PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost"})
+# storage knobs that are dead weight unless storage_enabled is set
+_STORAGE_KNOBS = frozenset(
+    {"block_size_mb", "replication", "placement", "storage_seed"})
+
+
+def _validate_cell_columns(cols: Mapping[str, Any]) -> None:
+    """Plan-build-time checks for the storage/placement parameter columns —
+    a bad replication vector or placement id must fail here with a named
+    error, not deep inside the vmapped encoder (and a silently-ignored
+    storage knob must not masquerade as a swept axis).  Traced values are
+    skipped (the caller is inside someone else's jit)."""
+    conc = {n: np.asarray(v) for n, v in cols.items()
+            if not isinstance(v, jax.core.Tracer)}
+    for n in conc:
+        if n in _INT_PARAMS and not np.issubdtype(conc[n].dtype, np.integer):
+            raise ValueError(
+                f"grid_arrays: parameter {n!r} is integer-valued; got "
+                f"dtype {conc[n].dtype} (a float column here would be "
+                "silently truncated per cell)")
+    if "placement" in conc:
+        bad = np.setdiff1d(conc["placement"], [int(p) for p in Placement])
+        if bad.size:
+            raise ValueError(
+                f"grid_arrays: placement values {bad.tolist()} are not "
+                f"Placement members {[f'{int(p)}={p.name}' for p in Placement]}")
+    if "replication" in conc and (conc["replication"] < 1).any():
+        raise ValueError(
+            "grid_arrays: replication must be >= 1 in every cell (disable "
+            "the store with storage_enabled=0 instead of replication=0)")
+    if "block_size_mb" in conc and (conc["block_size_mb"] <= 0).any():
+        raise ValueError(
+            "grid_arrays: block_size_mb must be > 0 in every cell")
+    knobs = sorted(_STORAGE_KNOBS & set(cols))
+    if knobs and "storage_enabled" not in cols:
+        raise ValueError(
+            f"grid_arrays: {knobs} configure the storage model but "
+            "'storage_enabled' is never set, so they would silently do "
+            "nothing — add axis('storage', [True]) / storage=True (or an "
+            "explicit storage_enabled column)")
 
 
 def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
@@ -215,6 +297,7 @@ def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
         raise ValueError(
             "grid_arrays: parameter arrays must share one leading grid "
             f"length; {names[0]!r} has length {n0} but " + ", ".join(bad))
+    _validate_cell_columns(params)
     encoder = _grid_encoder(tuple(names), pad_tasks, pad_vms, static)
     return encoder(*(jnp.asarray(params[n]) for n in names))
 
@@ -271,7 +354,12 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
       ``job_length``/``job_data``/``reduce_factor`` (MR combination stays
       a separate ``n_maps``/``n_reduces`` axis, as in the paper);
     * ``"sched_policy"``/``"binding_policy"`` — enum members or ints;
-    * ``"network_delay"`` — bools, expands to ``net_enabled``.
+    * ``"network_delay"`` — bools, expands to ``net_enabled``;
+    * ``"storage"`` — bools, expands to ``storage_enabled`` (the block
+      store, DESIGN.md §7; combine with the raw ``replication`` /
+      ``block_size_mb`` / ``storage_seed`` parameters);
+    * ``"placement"`` — :class:`~repro.core.storage.Placement` members,
+      ints, or the names ``"uniform"`` / ``"skewed"``.
     """
     values = list(values)
     if not values:
@@ -314,6 +402,14 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
         labels = tuple((bool(v),) for v in values)
         return Axis((name,), labels,
                     {"net_enabled": f32([1.0 if v else 0.0 for v in values])})
+    if name == "storage":
+        labels = tuple((bool(v),) for v in values)
+        return Axis((name,), labels, {
+            "storage_enabled": f32([1.0 if v else 0.0 for v in values])})
+    if name == "placement":
+        members = [as_placement(v) for v in values]
+        return Axis((name,), tuple((m,) for m in members),
+                    {name: np.asarray(members, np.int32)})
     if name == "sched_policy":
         members = [SchedPolicy(v) for v in values]
         return Axis((name,), tuple((m,) for m in members),
@@ -326,7 +422,7 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
         raise ValueError(
             f"axis {name!r}: not an encode_cell parameter or spec axis; "
             f"valid: {list(_CELL_PARAMS)} + ['vm', 'vm_type', 'vms', 'job', "
-            "'job_type', 'network_delay']")
+            "'job_type', 'network_delay', 'storage', 'placement']")
     if any(np.ndim(v) > 0 for v in values):        # per-VM / per-task vectors
         if name not in _PER_VM and name != "task_mult":
             raise ValueError(
@@ -480,6 +576,10 @@ class SweepPlan:
             cols["task_mult"] = np.pad(
                 tm, ((0, 0), (0, pad_tasks - tm.shape[1])),
                 constant_values=1.0)
+        # storage/placement columns fail here, at plan build, with a named
+        # error — the fused bucket runner would otherwise trace them
+        # straight into the vmapped encoder
+        _validate_cell_columns(cols)
         return cols, pad_tasks, pad_vms
 
     def params(self) -> dict[str, np.ndarray]:
@@ -774,6 +874,16 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
     return jm, sm, np.full(n, int(rz), np.int32)
 
 
+def _plain_label(v):
+    """One coordinate label as a column-friendly scalar (enum -> name,
+    nested sequences -> string)."""
+    if isinstance(v, enum.Enum):
+        return v.name
+    if isinstance(v, (tuple, list, np.ndarray)):
+        return ",".join(str(_plain_label(x)) for x in np.asarray(v).tolist())
+    return v
+
+
 def _match_label(label, want) -> bool:
     if label is want:
         return True
@@ -865,6 +975,51 @@ class SweepResult:
         """Metrics as plain ``{name: ndarray}`` (0-d arrays as scalars)."""
         return {k: (v.item() if np.ndim(v) == 0 else np.asarray(v))
                 for k, v in self.metrics.items()}
+
+    def to_table(self) -> dict[str, np.ndarray]:
+        """Columnar (long-form) export: equal-length numpy columns, one
+        row per grid cell — times ``n_jobs`` (plus a ``job`` index column)
+        when cells hold several jobs.  Axis coordinates come first in
+        row-major grid order, metric columns follow.  Enum labels export
+        as their names and tuple labels (``vms`` clusters, per-VM vectors)
+        as strings, so every column is numeric/bool/string — directly
+        consumable by pandas/pyarrow (:meth:`to_parquet`); the first slice
+        of the ROADMAP columnar-export item."""
+        shape = self.shape
+        N = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nj = self.n_jobs
+        cols: dict[str, np.ndarray] = {}
+        for d, (names, labs) in enumerate(zip(self.axis_names,
+                                              self.axis_labels)):
+            outer = int(np.prod(shape[:d], dtype=np.int64))
+            inner = int(np.prod(shape[d + 1:], dtype=np.int64))
+            idx = np.tile(np.repeat(np.arange(shape[d]), inner), outer)
+            for ci, cname in enumerate(names):
+                vals = np.asarray([_plain_label(lab[ci]) for lab in labs])
+                cols[cname] = np.repeat(vals[idx], nj)
+        if nj > 1:
+            cols["job"] = np.tile(np.arange(nj), N)
+        for mname, m in self.metrics.items():
+            arr = np.asarray(m)
+            if arr.ndim == len(shape) + 1:       # trailing per-job dim
+                cols[mname] = arr.reshape(N * nj)
+            else:                                # per-scenario metric
+                cols[mname] = np.repeat(arr.reshape(N), nj)
+        return cols
+
+    def to_parquet(self, path) -> None:
+        """Write :meth:`to_table` to a parquet file.  Needs the *optional*
+        ``pyarrow`` dependency — import-guarded so the simulator core
+        never depends on it."""
+        try:
+            import pyarrow as pa
+            import pyarrow.parquet as pq
+        except ImportError as e:                  # pragma: no cover - env
+            raise ImportError(
+                "SweepResult.to_parquet requires the optional pyarrow "
+                "dependency (pip install pyarrow); to_table() returns the "
+                "same columns as plain numpy") from e
+        pq.write_table(pa.table(dict(self.to_table())), path)
 
     def __repr__(self) -> str:
         ax = ", ".join(f"{'×'.join(ns)}[{len(labs)}]"

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .config import (BindingPolicy, JobSpec, NetworkSpec, Scenario,
-                     SchedPolicy, VMSpec)
+                     SchedPolicy, StorageSpec, VMSpec)
 
 
 # TPU v5e (the assignment's hardware constants).
@@ -58,6 +58,7 @@ def step_scenario(cost: StepCost, chip: ChipSpec, n_devices: int, *,
                   straggler_sigma: float = 0.0, seed: int = 0,
                   sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED,
                   binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN,
+                  storage: StorageSpec | None = None,
                   ) -> tuple[Scenario, np.ndarray | None]:
     """One training step as an IOTSim scenario.
 
@@ -68,6 +69,14 @@ def step_scenario(cost: StepCost, chip: ChipSpec, n_devices: int, *,
     ``sched_policy=SPACE_SHARED`` models gang-scheduled exclusive chips
     (the realistic TPU regime — one step-shard per core, no oversubscribe);
     ``binding_policy`` picks the shard→chip placement strategy.
+
+    ``storage`` (DESIGN.md §7) attaches the block store to the step: data
+    shards become placed input blocks, so
+    ``binding_policy=BindingPolicy.LOCALITY`` models shard-local dispatch
+    (each step-shard runs on a chip already holding its data-parallel
+    shard) while locality-blind policies pay
+    ``storage.remote_fetch_delay`` per off-host shard read — the
+    input-pipeline analogue of HDFS rack awareness.
     """
     terms = cost.roofline_terms(chip)
     eff_rate = cost.flops / max(terms["compute_s"], terms["memory_s"])
@@ -87,6 +96,7 @@ def step_scenario(cost: StepCost, chip: ChipSpec, n_devices: int, *,
         mult = np.ones(n_devices + 1)
         mult[:n_devices] = rng.lognormal(0.0, straggler_sigma, n_devices)
     return Scenario(vms=(vm,) * n_devices, jobs=(job,), network=net,
+                    storage=storage if storage is not None else StorageSpec(),
                     sched_policy=sched_policy,
                     binding_policy=binding_policy), mult
 

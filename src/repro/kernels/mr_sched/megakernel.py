@@ -28,6 +28,16 @@ which makes the kernel's schedule **bit-identical** to
 not just approximately close.  Scope: single-job scenarios (J = 1 — what
 ``sweep.encode_cell`` emits), arbitrary M/R/VM mix, both sched policies per
 lane (``sched_policy`` is lane data, so one tile may mix policies).
+
+Storage subsystem (DESIGN.md §7): LOCALITY binding and the remote-fetch
+penalty reach this kernel entirely through lane data — ``task_vm`` carries
+the replica-aware binding and ``ready0`` carries the per-task fetch delay
+(``storage.remote_fetch_delay``, applied in ``ops._derived_inputs`` with
+the engine's exact f32 op sequence).  Off-replica map tasks therefore
+enter the per-VM ``(ready, index)`` admission scan at their delayed ready
+times and lose admission priority to data-local peers, with no kernel-side
+branching — one lowering serves all five policy axes' values mixed per
+lane, bit-identical to the engine (``tests/test_storage.py``).
 """
 from __future__ import annotations
 

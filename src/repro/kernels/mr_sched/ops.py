@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import network
+from repro.core import network, storage
 from repro.core.engine import ScenarioArrays, SimOutput
 
 from .kernel import mr_schedule
@@ -38,8 +38,16 @@ def _derived_inputs(batch: ScenarioArrays):
     task_len = jnp.where(batch.task_is_reduce, red_len[:, None],
                          map_len[:, None]) * batch.task_mult
     task_len = jnp.where(batch.task_valid, task_len, 0.0)
-    ready0 = jnp.where(batch.task_valid & ~batch.task_is_reduce,
-                       (batch.job_submit[:, 0] + stage_in)[:, None], 1e30)
+    # storage remote-fetch delay (DESIGN.md §7): same broadcastable op
+    # sequence as engine._epoch_setup, so off-replica map tasks enter the
+    # kernel's (ready, index) admission scan at identical f32 ready times
+    fetch = storage.remote_fetch_delay(
+        batch.block_vm, batch.block_size, batch.task_vm,
+        batch.kappa_in[:, None], batch.net_bw[:, None],
+        batch.net_enabled[:, None], xp=jnp)
+    ready0 = jnp.where(
+        batch.task_valid & ~batch.task_is_reduce,
+        (batch.job_submit[:, 0] + stage_in)[:, None] + fetch, 1e30)
     return task_len, ready0, shuffle
 
 

@@ -174,7 +174,7 @@ def test_bucketing_preserves_coordinate_order():
                    axis("n_vms", (1, 6)),
                    axis("binding_policy", list(BindingPolicy)))
     res_b, res_u = plan.run(), plan.run(bucket=False)
-    assert res_b.shape == (4, 2, 3)
+    assert res_b.shape == (4, 2, len(BindingPolicy))
     np.testing.assert_array_equal(res_b["makespan"], res_u["makespan"])
     # coordinate lookup agrees with a direct single-cell run
     one = res_b.select(n_maps=19, n_vms=6,

@@ -1,0 +1,389 @@
+"""Storage subsystem (DESIGN.md §7): block placement, LOCALITY binding,
+transfer-aware metrics — cross-layer parity in the repo's usual pattern:
+
+* placement itself is **bit-identical** between the host (numpy) and
+  device (traced jnp) encoders — one xp-generic uint32/f32 op sequence;
+* LOCALITY *binding decisions* (``task_vm``) are bit-identical between
+  the sequential oracle and the array encoders; oracle *times* agree to
+  the f32-engine tolerance (rtol 2e-4), and the engine, the batched
+  early-exit engine and the Pallas ``mr_epoch`` megakernel agree
+  **bitwise** with each other — across >= 6 seeded scenario combos;
+* the degenerate-parity property: ``replication == num_vms`` (every
+  block on every VM) makes LOCALITY bit-identical to LEAST_LOADED, its
+  no-transfer fallback ranking;
+* skewed-placement grids: LOCALITY's ``locality_fraction`` strictly
+  exceeds ROUND_ROBIN's and its ``transfer_bytes`` is exactly 0
+  (the PR acceptance criterion);
+* friendly plan-build validation for the new storage parameter columns.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (JOB_MEDIUM, JOB_SMALL, VM_MEDIUM, VM_SMALL,
+                        BindingPolicy, Placement, Scenario, SchedPolicy,
+                        StorageSpec, engine, refsim, storage, sweep)
+from repro.core.sweep import axis, product, zip_
+from repro.kernels.mr_sched import epoch_schedule
+
+REF_FIELDS = ("avg_exec", "max_exec", "min_exec", "makespan", "delay_time",
+              "vm_cost", "network_cost")
+
+
+# ---------------------------------------------------------------------------
+# The placement function: shared-layer bit-identity and model properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("placement", list(Placement))
+@pytest.mark.parametrize("seed", [0, 7, 12345])
+def test_placement_host_equals_device(placement, seed):
+    """numpy and traced-jnp placement must agree bit for bit (the uint32
+    hash wraps identically, the f32 skew transform is the same IEEE ops)."""
+    import jax.numpy as jnp
+    kw = dict(seed=seed, placement=int(placement), replication=2,
+              block_size_mb=np.float32(4096.0), job_data=np.float32(2e5),
+              n_vms=7, pad_vms=9)
+    m_idx = np.arange(20, dtype=np.int32)
+    j_idx = np.zeros(20, np.int32)
+    h_vm, h_mb = storage.map_block_placement(np, m_idx, j_idx, **kw)
+    d_vm, d_mb = jax.jit(lambda m, j: storage.map_block_placement(
+        jnp, m, j, **kw))(m_idx, j_idx)
+    np.testing.assert_array_equal(h_vm, np.asarray(d_vm))
+    np.testing.assert_array_equal(h_mb, np.asarray(d_mb))
+
+
+def test_placement_replicas_distinct_and_clipped():
+    for repl in (1, 3, 5, 99):
+        bvm, bmb = storage.map_block_placement(
+            np, np.arange(40, dtype=np.int32), np.zeros(40, np.int32),
+            seed=1, placement=0, replication=repl,
+            block_size_mb=np.float32(1000.0), job_data=np.float32(2e5),
+            n_vms=5, pad_vms=8)
+        eff = min(max(repl, 1), 5)
+        for row in bvm:
+            vms = row[row >= 0]
+            assert len(vms) == eff
+            assert len(set(vms.tolist())) == eff, "replicas must be distinct"
+            assert (vms < 5).all() and (vms >= 0).all()
+        assert (bmb > 0).all()
+    # replication == n_vms: every block on every VM
+    bvm, _ = storage.map_block_placement(
+        np, np.arange(10, dtype=np.int32), np.zeros(10, np.int32),
+        seed=1, placement=1, replication=5, block_size_mb=np.float32(1e3),
+        job_data=np.float32(2e5), n_vms=5, pad_vms=5)
+    assert (np.sort(bvm, axis=1) == np.arange(5)).all()
+
+
+def test_placement_block_sizes_cover_dataset():
+    """Fixed-size blocks with a remainder tail: sizes must tile data_mb."""
+    bvm, bmb = storage.map_block_placement(
+        np, np.arange(6, dtype=np.int32), np.zeros(6, np.int32),
+        seed=0, placement=0, replication=1,
+        block_size_mb=np.float32(900.0), job_data=np.float32(5000.0),
+        n_vms=3, pad_vms=3)
+    # ceil(5000/900) = 6 blocks: five of 900 MB + one 500 MB tail
+    assert bmb.tolist() == [900.0] * 5 + [500.0]
+
+
+def test_skewed_placement_concentrates_low_vms():
+    """SKEWED must put decisively more replicas on the low VM indices than
+    UNIFORM does (the hot-spot model the acceptance grid relies on)."""
+    counts = {}
+    for plc in Placement:
+        bvm, _ = storage.map_block_placement(
+            np, np.arange(400, dtype=np.int32), np.zeros(400, np.int32),
+            seed=3, placement=int(plc), replication=1,
+            block_size_mb=np.float32(500.0), job_data=np.float32(8e5),
+            n_vms=8, pad_vms=8)
+        counts[plc] = np.bincount(bvm[:, 0], minlength=8)
+    lo_uni = counts[Placement.UNIFORM][:3].sum()
+    lo_skew = counts[Placement.SKEWED][:3].sum()
+    assert lo_skew > 1.5 * lo_uni, (lo_skew, lo_uni)
+
+
+def test_negative_seed_host_matches_device():
+    """A negative seed must not crash the host path (numpy 2 raises
+    OverflowError casting out-of-range Python ints to uint32) and must
+    wrap to the same placement an i32 device column produces."""
+    st = StorageSpec(enabled=True, replication=2, seed=-1)
+    sc = Scenario(vms=(VM_SMALL,) * 3,
+                  jobs=(dataclasses.replace(JOB_SMALL, n_maps=5),),
+                  storage=st, binding_policy=BindingPolicy.LOCALITY)
+    host = engine.from_scenario(sc, pad_tasks=6, pad_vms=3)
+    assert [t.vm for t in refsim.simulate(sc).tasks] == \
+        np.asarray(host.task_vm).tolist()
+    batch = product(
+        axis("storage_seed", [-1]), storage=True, replication=2,
+        block_size_mb=st.block_size_mb, n_maps=5,
+        binding_policy=BindingPolicy.LOCALITY).arrays()
+    np.testing.assert_array_equal(np.asarray(host.block_vm),
+                                  np.asarray(batch.block_vm)[0])
+    np.testing.assert_array_equal(np.asarray(host.task_vm),
+                                  np.asarray(batch.task_vm)[0])
+
+
+def test_placement_seed_and_job_sensitivity():
+    def place(seed, job):
+        bvm, _ = storage.map_block_placement(
+            np, np.arange(30, dtype=np.int32),
+            np.full(30, job, np.int32), seed=seed, placement=0,
+            replication=1, block_size_mb=np.float32(500.0),
+            job_data=np.float32(2e5), n_vms=9, pad_vms=9)
+        return bvm[:, 0]
+
+    assert (place(0, 0) != place(1, 0)).any(), "seed must matter"
+    assert (place(0, 0) != place(0, 1)).any(), "job index must matter"
+    np.testing.assert_array_equal(place(4, 2), place(4, 2))
+
+
+# ---------------------------------------------------------------------------
+# LOCALITY parity: refsim <-> engine <-> batched engine <-> mr_epoch kernel
+# ---------------------------------------------------------------------------
+
+def _storage_scenario(seed: int, sp: SchedPolicy, plc: Placement,
+                      bp: BindingPolicy = BindingPolicy.LOCALITY) -> Scenario:
+    rng = np.random.default_rng(seed)
+    vms = tuple(rng.choice([VM_SMALL, VM_MEDIUM])
+                for _ in range(int(rng.integers(2, 7))))
+    job = dataclasses.replace(
+        rng.choice([JOB_SMALL, JOB_MEDIUM]),
+        n_maps=int(rng.integers(3, 15)), n_reduces=int(rng.integers(1, 3)))
+    st = StorageSpec(enabled=True,
+                     block_size_mb=float(rng.choice([1024.0, 4096.0])),
+                     replication=int(rng.integers(1, 4)),
+                     placement=plc, seed=seed)
+    return Scenario(vms=vms, jobs=(job,), storage=st,
+                    sched_policy=sp, binding_policy=bp)
+
+
+SIX_COMBOS = [(s, sp, plc)
+              for s, (sp, plc) in enumerate(
+                  [(sp, plc) for sp in SchedPolicy for plc in Placement]
+                  + [(SchedPolicy.TIME_SHARED, Placement.SKEWED),
+                     (SchedPolicy.SPACE_SHARED, Placement.UNIFORM)])]
+
+
+@pytest.mark.parametrize("seed,sp,plc", SIX_COMBOS,
+                         ids=[f"s{s}-{sp.name}-{plc.name}"
+                              for s, sp, plc in SIX_COMBOS])
+def test_locality_parity_refsim_engine_pallas(seed, sp, plc):
+    sc = _storage_scenario(100 + seed, sp, plc)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc, pad_tasks=17, pad_vms=7)
+
+    # binding decisions: oracle == encoded arrays, bitwise (ints)
+    np.testing.assert_array_equal(
+        [t.vm for t in ref.tasks],
+        np.asarray(arrs.task_vm)[:sc.total_tasks()])
+
+    # oracle times vs f32 engine: the repo's standard tolerance
+    got = engine._simulate_jit(arrs)
+    for f in REF_FIELDS:
+        np.testing.assert_allclose(
+            float(getattr(got, f)[0]), getattr(ref.jobs[0], f),
+            rtol=2e-4, atol=1e-2, err_msg=f"{f} (seed {seed})")
+
+    # engine <-> batched early exit <-> mr_epoch megakernel: bitwise
+    batch = sweep.stack_scenarios([sc, sc.replace(
+        binding_policy=BindingPolicy.ROUND_ROBIN)])
+    lane = jax.jit(jax.vmap(engine.simulate_arrays))(batch)
+    both, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    kern = epoch_schedule(batch, tile=2, interpret=True)
+    for f in lane._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(both, f)),
+                                      err_msg=f"batched {f}")
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(kern, f)),
+                                      err_msg=f"pallas {f}")
+
+
+def test_locality_mixed_grid_engine_vs_pallas_bitwise():
+    """A random mixed grid over all four binding policies x storage params
+    through grid_arrays: batched engine == megakernel, bitwise."""
+    n = 48
+    rng = np.random.default_rng(11)
+    params = dict(
+        n_maps=rng.integers(1, 19, n).astype(np.int32),
+        n_reduces=rng.integers(1, 3, n).astype(np.int32),
+        n_vms=rng.integers(1, 9, n).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0], n).astype(np.float32),
+        vm_pes=rng.choice([1.0, 2.0], n).astype(np.float32),
+        vm_cost=np.ones(n, np.float32),
+        job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
+        sched_policy=rng.integers(0, 2, n).astype(np.int32),
+        binding_policy=rng.integers(0, 4, n).astype(np.int32),
+        storage_enabled=rng.integers(0, 2, n).astype(np.float32),
+        replication=rng.integers(1, 4, n).astype(np.int32),
+        placement=rng.integers(0, 2, n).astype(np.int32),
+        block_size_mb=rng.choice([1024.0, 8192.0], n).astype(np.float32),
+        storage_seed=rng.integers(0, 100, n).astype(np.int32),
+    )
+    batch = sweep.grid_arrays(params, pad_tasks=20, pad_vms=8)
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    out = epoch_schedule(batch, tile=8, interpret=True)
+    for f in eng._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(eng, f)),
+                                      np.asarray(getattr(out, f)),
+                                      err_msg=f)
+
+
+def test_degenerate_parity_full_replication_equals_least_loaded():
+    """replication == num_vms puts every block on every VM: LOCALITY's
+    masked argmin sees LEAST_LOADED's exact load vector, so bindings and
+    every metric must be bit-identical — and nobody pays a fetch."""
+    plan = product(
+        axis("binding_policy", [BindingPolicy.LEAST_LOADED,
+                                BindingPolicy.LOCALITY]),
+        axis("n_maps", (1, 5, 12)),
+        axis("placement", list(Placement)),
+        storage=True, replication=3, n_vms=3, block_size_mb=2048.0)
+    res = plan.run()
+    ll = res.select(binding_policy=BindingPolicy.LEAST_LOADED)
+    loc = res.select(binding_policy=BindingPolicy.LOCALITY)
+    for name in res.metric_names:
+        if name == "realized_epochs":
+            continue
+        np.testing.assert_array_equal(ll[name], loc[name], err_msg=name)
+    assert (loc["transfer_bytes"] == 0.0).all()
+    assert (loc["locality_fraction"] == 1.0).all()
+    # oracle agrees: same scenario object, both policies, identical binding
+    st = StorageSpec(enabled=True, replication=4, block_size_mb=2048.0)
+    job = dataclasses.replace(JOB_MEDIUM, n_maps=9, n_reduces=2)
+    vms = (VM_SMALL, VM_MEDIUM, VM_SMALL, VM_MEDIUM)
+    binds = {}
+    for bp in (BindingPolicy.LEAST_LOADED, BindingPolicy.LOCALITY):
+        sc = Scenario(vms=vms, jobs=(job,), storage=st, binding_policy=bp)
+        binds[bp] = [t.vm for t in refsim.simulate(sc).tasks]
+    assert binds[BindingPolicy.LEAST_LOADED] == binds[BindingPolicy.LOCALITY]
+
+
+def test_storage_off_is_bitwise_noop():
+    """A disabled store (the default) must leave every policy's encoding
+    and schedule untouched — including LOCALITY, which falls back to the
+    LEAST_LOADED scan."""
+    for bp in BindingPolicy:
+        sc = Scenario(vms=(VM_SMALL, VM_MEDIUM, VM_SMALL),
+                      jobs=(dataclasses.replace(JOB_SMALL, n_maps=7),),
+                      binding_policy=bp)
+        off = engine.from_scenario(sc)
+        assert (np.asarray(off.block_vm) == -1).all()
+        assert (np.asarray(off.block_size) == 0.0).all()
+        if bp == BindingPolicy.LOCALITY:
+            ll = engine.from_scenario(
+                sc.replace(binding_policy=BindingPolicy.LEAST_LOADED))
+            np.testing.assert_array_equal(np.asarray(off.task_vm),
+                                          np.asarray(ll.task_vm))
+
+
+# ---------------------------------------------------------------------------
+# Transfer-aware metrics (the PR acceptance grid)
+# ---------------------------------------------------------------------------
+
+def _skewed_plan(**base):
+    return product(
+        axis("binding_policy", [BindingPolicy.ROUND_ROBIN,
+                                BindingPolicy.LEAST_LOADED,
+                                BindingPolicy.LOCALITY]),
+        axis("replication", (1, 2, 3)),
+        storage=True, placement="skewed", n_maps=16, n_reduces=2,
+        n_vms=8, block_size_mb=8192.0, **base)
+
+
+def test_locality_fraction_locality_beats_round_robin_skewed():
+    res = _skewed_plan().run()
+    rr = res.select(binding_policy=BindingPolicy.ROUND_ROBIN)
+    loc = res.select(binding_policy=BindingPolicy.LOCALITY)
+    assert (loc["locality_fraction"] > rr["locality_fraction"]).all(), (
+        loc["locality_fraction"], rr["locality_fraction"])
+    assert (loc["transfer_bytes"] == 0.0).all()
+    assert (rr["transfer_bytes"] > 0.0).all()
+    # fraction of data-local maps grows with the replication factor
+    rr_lf = rr["locality_fraction"]
+    assert rr_lf[0] < rr_lf[-1]
+
+
+def test_remote_fetch_delays_map_readiness():
+    """Under a locality-blind binding, enabling storage can only delay map
+    starts (fetches add to readiness) — and the oracle sees the same
+    makespan shift as the engine."""
+    job = dataclasses.replace(JOB_SMALL, n_maps=8, n_reduces=1)
+    base = Scenario(vms=(VM_SMALL,) * 4, jobs=(job,),
+                    binding_policy=BindingPolicy.ROUND_ROBIN)
+    on = base.replace(storage=StorageSpec(
+        enabled=True, replication=1, block_size_mb=8192.0,
+        placement=Placement.SKEWED, seed=5))
+    mk_off = refsim.simulate(base).job().makespan
+    mk_on = refsim.simulate(on).job().makespan
+    assert mk_on > mk_off
+    got_on = engine.simulate(on)
+    np.testing.assert_allclose(float(got_on.makespan[0]), mk_on, rtol=2e-4)
+
+
+def test_locality_vs_least_loaded_crossover_exists():
+    """The motivating question ("at what replication factor does LOCALITY
+    stop beating LEAST_LOADED under skewed placement?") has a real answer
+    on this grid: at replication 1 the hot-spot pileup costs LOCALITY more
+    than LEAST_LOADED's fetches (fetches delay maps *in parallel*), from
+    replication 2 the widened replica sets restore balance while
+    LEAST_LOADED keeps paying fetches, and at replication == n_vms the two
+    policies converge bit for bit."""
+    plan = product(
+        axis("binding_policy", [BindingPolicy.LEAST_LOADED,
+                                BindingPolicy.LOCALITY]),
+        axis("replication", (1, 2, 4, 8)),
+        storage=True, placement="skewed", n_maps=24, n_reduces=2,
+        n_vms=8, block_size_mb=32768.0, job_type="small")
+    res = plan.run()
+    ll = res.select(binding_policy=BindingPolicy.LEAST_LOADED)["makespan"]
+    loc = res.select(binding_policy=BindingPolicy.LOCALITY)["makespan"]
+    assert loc[0] > ll[0], "r=1: extreme skew should cost LOCALITY"
+    assert (loc[1:3] < ll[1:3]).all(), f"r=2,4: LOCALITY {loc} !< LL {ll}"
+    assert loc[3] == ll[3], "full replication must converge bitwise"
+
+
+# ---------------------------------------------------------------------------
+# Plan-build validation for the storage parameter columns
+# ---------------------------------------------------------------------------
+
+def test_storage_knobs_without_enable_rejected():
+    with pytest.raises(ValueError, match="storage_enabled"):
+        product(axis("replication", (1, 2, 3))).params()
+    # explicit column or the 'storage' axis both satisfy it
+    assert product(axis("replication", (1, 2)), storage=True).params()[
+        "replication"].tolist() == [1, 2]
+
+
+def test_storage_param_range_validation():
+    with pytest.raises(ValueError, match="replication must be >= 1"):
+        product(axis("replication", (0, 1)), storage=True).params()
+    with pytest.raises(ValueError, match="block_size_mb must be > 0"):
+        product(axis("block_size_mb", (0.0,)), storage=True).params()
+    with pytest.raises(ValueError, match="not.*Placement"):
+        sweep.grid_arrays(dict(n_maps=np.ones(2, np.int32),
+                               storage_enabled=np.ones(2, np.float32),
+                               placement=np.full(2, 7, np.int32)),
+                          pad_tasks=4, pad_vms=3)
+
+
+def test_storage_param_dtype_validation():
+    with pytest.raises(ValueError, match="replication.*integer"):
+        sweep.grid_arrays(dict(n_maps=np.ones(2, np.int32),
+                               storage_enabled=np.ones(2, np.float32),
+                               replication=np.full(2, 1.5, np.float32)),
+                          pad_tasks=4, pad_vms=3)
+    with pytest.raises(ValueError, match="unknown"):
+        sweep.grid_arrays(dict(replications=np.ones(2, np.int32)),
+                          pad_tasks=4, pad_vms=3)
+
+
+def test_placement_axis_coercion_and_select():
+    res = product(axis("placement", ["uniform", "skewed"]),
+                  storage=True, binding_policy=BindingPolicy.LOCALITY).run()
+    one = res.select(placement="SKEWED")
+    assert one.shape == ()
+    with pytest.raises(ValueError, match="unknown placement"):
+        axis("placement", ["diagonal"])

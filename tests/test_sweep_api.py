@@ -95,7 +95,8 @@ def test_table4_policy_cross_matches_legacy_block_layout():
                    vm_type="medium")
     res = plan.run()
     out = sweep.simulate_batch(legacy)
-    mk = np.asarray(out.makespan[:, 0]).reshape(2, 3, len(m_range))
+    mk = np.asarray(out.makespan[:, 0]).reshape(
+        len(SchedPolicy), len(BindingPolicy), len(m_range))
     np.testing.assert_array_equal(mk, res["makespan"])
 
 
@@ -227,6 +228,76 @@ def test_per_job_completion_and_utilization_metrics():
     assert (res["utilization"] > 0).all() and (res["utilization"] <= 1).all()
     # more parallelism -> better cluster utilization on the 3-VM cell
     assert res.select(n_maps=5)["utilization"] > res.select(n_maps=1)["utilization"]
+
+
+def test_to_table_columnar_export():
+    """ROADMAP columnar-export slice: long-form dict-of-numpy columns in
+    row-major grid order, coordinate columns coherent with coord()."""
+    plan = product(
+        zip_(axis("n_maps", (1, 2, 4)), axis("job_type",
+                                             ("small", "medium", "big"))),
+        axis("binding_policy", list(BindingPolicy)[:2]),
+    )
+    res = plan.run()
+    t = res.to_table()
+    n = 3 * 2
+    assert set(t) == {"n_maps", "job_type", "binding_policy",
+                      *res.metric_names}
+    for k, col in t.items():
+        assert col.shape == (n,), k
+    # row-major order: last axis fastest; enum labels export as names
+    assert t["n_maps"].tolist() == [1, 1, 2, 2, 4, 4]
+    assert t["binding_policy"].tolist() == ["ROUND_ROBIN", "LEAST_LOADED"] * 3
+    assert t["job_type"].tolist() == ["small"] * 2 + ["medium"] * 2 + ["big"] * 2
+    # values line up with select()
+    k = 5      # (n_maps=4, LEAST_LOADED)
+    sel = res.select(n_maps=4, binding_policy=BindingPolicy.LEAST_LOADED)
+    assert t["makespan"][k] == sel["makespan"].item()
+    # 0-d results export as single-row tables
+    one = sel.to_table()
+    assert one["makespan"].shape == (1,)
+
+
+def test_to_table_multi_job_long_form():
+    """Cells holding several jobs expand to one row per (cell, job) with a
+    job index column; per-scenario metrics repeat across the job rows."""
+    from repro.core import paper_scenario
+    scs = [paper_scenario(n_maps=m) for m in (1, 3)]
+    sc2 = Scenario(jobs=(scs[0].jobs[0], dataclasses.replace(
+        scs[0].jobs[0], submit_time=500.0)))
+    batch = sweep.stack_scenarios([sc2, sc2.replace(
+        jobs=tuple(dataclasses.replace(j, n_maps=2) for j in sc2.jobs))])
+    jm = sweep.simulate_batch(batch)
+    out, _ = sweep.simulate_batch_arrays(batch)
+    res = sweep.SweepResult(
+        axis_names=(("cell",),), axis_labels=(((0,), (1,)),),
+        metrics={"makespan": np.asarray(jm.makespan),
+                 "finish_time": np.asarray(out.finish_time)}, n_jobs=2)
+    t = res.to_table()
+    assert t["job"].tolist() == [0, 1, 0, 1]
+    assert t["cell"].tolist() == [0, 0, 1, 1]
+    np.testing.assert_array_equal(t["makespan"],
+                                  np.asarray(jm.makespan).reshape(4))
+    # per-scenario metric repeats across a cell's job rows
+    assert t["finish_time"][0] == t["finish_time"][1]
+
+
+def test_to_parquet_import_guarded():
+    res = product(axis("n_maps", (1, 2))).run()
+    try:
+        import pyarrow  # noqa: F401
+    except ImportError:
+        with pytest.raises(ImportError, match="pyarrow"):
+            res.to_parquet("/tmp/_sweep_should_not_exist.parquet")
+    else:
+        import tempfile
+        import pyarrow.parquet as pq
+        with tempfile.NamedTemporaryFile(suffix=".parquet") as f:
+            res.to_parquet(f.name)
+            table = pq.read_table(f.name)
+            assert table.num_rows == 2
+            np.testing.assert_array_equal(
+                np.asarray(table["makespan"]), res["makespan"])
 
 
 def test_select_errors_name_unknown_keys():
