@@ -1,6 +1,7 @@
 """CI benchmark smoke gate: ``sweep_throughput`` at b64 on the CPU
-(interpret-class) path — the plain grid AND the storage-subsystem
-LOCALITY grid (skewed placement, DESIGN.md §7) — failing on crash or on
+(interpret-class) path — the plain grid, the storage-subsystem LOCALITY
+grid (skewed placement, DESIGN.md §7) AND the elastic dynamic-fleet grid
+(arrivals + lease windows, DESIGN.md §8) — failing on crash or on
 a >25% throughput regression against the checked-in ``BENCH_sweep.json``
 baseline rows.
 
@@ -29,6 +30,7 @@ from benchmarks.sweep_throughput import _random_plan, calibration_us
 GATED = (          # (baseline row name, plan kwargs)
     ("sweep_throughput_b64", {}),
     ("sweep_throughput_locality_b64", {"locality": True}),
+    ("sweep_throughput_elastic_b64", {"elastic": True}),
 )
 
 

@@ -10,6 +10,9 @@ with the vectorized engine and pick the cheapest config meeting an SLA.
 Part 3 turns on the storage subsystem (DESIGN.md §7) and sweeps block
 replication × binding policy over a skewed placement to find where
 data-local (LOCALITY) dispatch beats load balancing.
+Part 4 right-sizes a *pay-as-you-go* fleet (DESIGN.md §8): lease length ×
+VM count × Poisson arrival rate, picking the cheapest `billed_cost`
+configuration whose worst arrival still meets the makespan target.
 
     PYTHONPATH=src python examples/smart_city.py
 """
@@ -107,7 +110,57 @@ def part3_locality_sweep():
           "(converges bit-for-bit at replication = n_vms)\n")
 
 
+def part4_lease_rightsizing(makespan_target=6000.0):
+    """Elasticity (DESIGN.md §8): the council leases VMs by the hour
+    instead of owning a static cluster.  One grid over lease length × VM
+    count × offered load answers the pay-as-you-go question the paper
+    poses but CloudSim cannot sweep: the *cheapest billed fleet* that
+    still meets the makespan target for every arrival in the stream."""
+    print("== Part 4: right-size the pay-as-you-go fleet ==")
+    n_arrivals = 12
+    lease_hours = (2, 4, 8, 24)
+    plan = sweep.product(
+        sweep.axis("n_vms", (2, 4, 6, 8)),
+        sweep.axis("vm_stop", [h * 3600.0 for h in lease_hours]),
+        sweep.arrivals(n_arrivals, rate=[1 / 1800.0, 1 / 600.0],
+                       process="poisson", seed=7),
+        vm_type="medium", n_maps=12, n_reduces=2, job_type="medium",
+        spinup_delay=120.0, billing_granularity=3600.0,
+    )
+    res = plan.run()
+    print(f"  {plan.size} cells: {len(lease_hours)} lease lengths x 4 "
+          f"fleet sizes x 2 arrival rates x {n_arrivals} arrivals "
+          "(billing: hourly, 120 s spin-up)")
+    print(f"  target: every arrival's makespan <= {makespan_target:.0f}s")
+    for rate_name, rate in (("1/30 min", 1 / 1800.0),
+                            ("1/10 min", 1 / 600.0)):
+        best = None
+        for n_vms in (2, 4, 6, 8):
+            for h in lease_hours:
+                cell = res.select(arrival_rate=rate, n_vms=n_vms,
+                                  vm_stop=h * 3600.0)
+                worst = float(cell["makespan"].max())
+                cost = float(cell["billed_cost"].max())
+                busy = float(cell["vm_busy_fraction"].mean())
+                if worst <= makespan_target and (best is None
+                                                 or cost < best[0]):
+                    best = (cost, n_vms, h, worst, busy)
+        if best:
+            cost, n_vms, h, worst, busy = best
+            print(f"  {rate_name} arrivals -> cheapest feasible: "
+                  f"{n_vms}x medium on a {h}h lease "
+                  f"(billed ${cost:.0f}, worst makespan {worst:.0f}s, "
+                  f"busy {busy:.2f})")
+        else:
+            print(f"  {rate_name} arrivals -> no leased fleet meets the "
+                  "target; lengthen the lease or add VMs")
+    stranded = int((res["makespan"] > 1e20).sum())
+    print(f"  ({stranded} cells strand work: the lease closes before "
+          "the arrival — automatically infeasible)\n")
+
+
 if __name__ == "__main__":
     part1_mixed_workload()
     part2_provisioning_sweep()
     part3_locality_sweep()
+    part4_lease_rightsizing()

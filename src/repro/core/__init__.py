@@ -10,24 +10,27 @@ Public API:
 * :mod:`~repro.core.workload` — LM-training-step → scenario bridge
   (stragglers, failures, checkpoint goodput).
 """
-from . import engine, network, refsim, storage, sweep, workload
+from . import elasticity, engine, network, refsim, storage, sweep, workload
 from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
                      SchedPolicy, VMSpec, paper_scenario)
+from .elasticity import ArrivalProcess, ElasticitySpec
 from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
 from .storage import Placement, StorageSpec
-from .sweep import Axis, SweepPlan, SweepResult
+from .sweep import Axis, StreamedSweep, SweepPlan, SweepResult
 from .workload import ChipSpec, StepCost
 
 __all__ = [
-    "engine", "network", "refsim", "storage", "sweep", "workload",
+    "elasticity", "engine", "network", "refsim", "storage", "sweep",
+    "workload",
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
     "StorageSpec", "Placement", "SchedPolicy", "BindingPolicy",
+    "ElasticitySpec", "ArrivalProcess",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",
-    "SimOutput", "Axis", "SweepPlan", "SweepResult",
+    "SimOutput", "Axis", "SweepPlan", "SweepResult", "StreamedSweep",
     "ChipSpec", "StepCost",
 ]
 

@@ -10,11 +10,15 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from dataclasses import dataclass, field
 from typing import Sequence
 
 from .storage import Placement, StorageSpec, as_placement  # noqa: F401
 #   (re-exported: Scenario carries a StorageSpec; DESIGN.md §7)
+from .elasticity import (ArrivalProcess, ElasticitySpec,  # noqa: F401
+                         as_arrival_process)
+#   (re-exported: Scenario carries an ElasticitySpec; DESIGN.md §8)
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +109,13 @@ class VMSpec:
     ``mips``; with ``n`` concurrent cloudlets on the VM it gets
     ``mips * min(1, pes / n)`` (CloudletSchedulerTimeShared fluid semantics,
     see DESIGN.md §2.1).
+
+    ``lease_start``/``lease_stop`` are the VM's pay-as-you-go lease window
+    (DESIGN.md §8): the VM admits tasks only in
+    ``[lease_start + spinup_delay, lease_stop)`` and is billed for its
+    realized lease rounded up to the scenario's billing granularity.  The
+    defaults — leased at 0, never torn down — reproduce the pre-elastic
+    static fleet bit for bit.
     """
     name: str = "small"
     mips: float = 250.0
@@ -113,6 +124,8 @@ class VMSpec:
     bw_mbps: float = 1000.0
     image_size_mb: int = 10_000
     cost_per_sec: float = 1.0
+    lease_start: float = 0.0
+    lease_stop: float = math.inf
 
 
 @dataclass(frozen=True)
@@ -143,6 +156,11 @@ class JobSpec:
     # Per-task multiplicative length noise (straggler modelling, beyond-paper).
     # 1.0 == deterministic paper behaviour.
     straggler_scale: float = 1.0
+    # Space-shared admission priority (DESIGN.md §8): among waiting tasks on
+    # one VM, higher priority is admitted first; ties fall back to the
+    # classic (ready time, task index) order.  0.0 everywhere reproduces the
+    # pre-priority rank bit for bit.
+    priority: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -169,6 +187,7 @@ class Scenario:
     datacenter: DatacenterSpec = field(default_factory=DatacenterSpec)
     network: NetworkSpec = field(default_factory=NetworkSpec)
     storage: StorageSpec = field(default_factory=StorageSpec)
+    elasticity: ElasticitySpec = field(default_factory=ElasticitySpec)
     sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED
     binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN
 

@@ -1,0 +1,172 @@
+"""Cloud elasticity: VM lease windows, arrival processes, pay-as-you-go.
+
+IOTSim's pitch is evaluating IoT big-data workloads on *pay-as-you-go*
+cloud infrastructure — yet a static fleet (every VM exists for all time
+and costs nothing) reduces the cloud to a fixed cluster.  This module
+holds the three primitives that make fleet dynamics *data* (DESIGN.md
+§8), threaded through all four execution layers like policies (§3) and
+storage (§7) before it:
+
+* **Lease windows** — every VM carries ``[lease_start, lease_stop)``
+  plus a cluster-wide ``spinup_delay``: the VM accepts task admissions
+  only inside ``[lease_start + spinup_delay, lease_stop)``.  Admission
+  gating — not preemption: a task admitted before the lease closes runs
+  to completion (the cloud does not kill your in-flight work when the
+  lease lapses; it stops accepting new work).  A pending task whose
+  eligible time falls at or past its VM's close is *stranded*: it never
+  starts (``finish`` stays at the +inf stand-in) — the simulator's
+  analogue of submitting against a torn-down fleet.
+
+* **Arrival processes** — seeded inter-arrival generation built on the
+  storage subsystem's counter-hash idiom (`storage._mix32`): no RNG
+  state, just uint32 avalanche of ``(seed, k)``, so arrival streams are
+  pure arithmetic on sweepable scalars and bit-reproducible between the
+  host planner and any future device-side generation.
+
+* **Pay-as-you-go billing** — the realized lease of each VM, rounded
+  *up* to the provider's billing granularity, priced at the VM's
+  ``cost_per_sec``.  The shared formula lives here so the engine's
+  ``billed_cost`` metric and the tests' refsim cross-checks cannot
+  drift.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import numpy as np
+
+from .storage import _C1, _C3, _mix32
+
+_BIG = 1e30     # the engine's +inf stand-in (survives f32 arithmetic)
+
+
+@dataclass(frozen=True)
+class ElasticitySpec:
+    """Scenario-level elasticity knobs (the per-VM lease window itself
+    lives on :class:`~repro.core.config.VMSpec`).
+
+    ``spinup_delay`` models VM boot/image-provisioning time: a leased VM
+    accepts admissions only from ``lease_start + spinup_delay`` (billing
+    still runs from ``lease_start`` — you pay while the image boots).
+    ``billing_granularity`` is the provider's charge unit in seconds
+    (per-second billing = 1.0, per-hour = 3600.0); realized lease time
+    is rounded up to a multiple of it.
+    """
+    spinup_delay: float = 0.0
+    billing_granularity: float = 1.0
+
+
+class ArrivalProcess(enum.IntEnum):
+    """Inter-arrival process family (stable wire constants).
+
+    POISSON — exponential gaps ``-ln(1 - u) / rate`` (memoryless M/·/·
+        offered load, the queueing-theory default).
+    UNIFORM — gaps ``2 u / rate`` (same mean ``1/rate``, bounded).
+    BURST   — ``burst`` arrivals land together, bursts spaced
+        ``burst / rate`` apart (same mean rate, maximally clumped —
+        the IoT sensor-flush pattern).
+    """
+    POISSON = 0
+    UNIFORM = 1
+    BURST = 2
+
+
+def as_arrival_process(v) -> ArrivalProcess:
+    """Coerce a name (``"poisson"``/``"uniform"``/``"burst"``), int, or
+    member."""
+    if isinstance(v, str):
+        try:
+            return ArrivalProcess[v.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown arrival process {v!r}; known: "
+                f"{[p.name.lower() for p in ArrivalProcess]}") from None
+    return ArrivalProcess(v)
+
+
+_INV24 = np.float32(1.0 / (1 << 24))
+
+
+def arrival_times(n: int, *, rate: float, process=ArrivalProcess.POISSON,
+                  seed: int = 0, burst: int = 4) -> np.ndarray:
+    """``n`` absolute arrival instants (f32, ascending, first gap counts).
+
+    Seeded and counter-based — draw ``k`` hashes ``(seed, k)`` through
+    the storage layer's lowbias32 avalanche, so streams are reproducible
+    pure arithmetic (same idiom as block placement, DESIGN.md §7.1) and
+    two plans with the same ``(n, rate, process, seed)`` see the same
+    offered load.  ``rate`` is arrivals per simulated second; gaps are
+    cumulative-summed in float64 then cast once to f32, so long streams
+    do not accumulate rounding.
+    """
+    if n < 1:
+        raise ValueError(f"arrival_times: need n >= 1, got {n}")
+    if not rate > 0.0:
+        raise ValueError(f"arrival_times: rate must be > 0, got {rate}")
+    process = as_arrival_process(process)
+    k = np.arange(n, dtype=np.uint32)
+    # seed term mixed in Python-int space: scalar uint32 overflow warns in
+    # numpy while array ops wrap silently (same dance as storage._mix32)
+    seed_mix = np.uint32((int(seed) % (1 << 32)) * int(_C3) % (1 << 32))
+    h = _mix32(k * _C1 + seed_mix)
+    u = (h >> np.uint32(8)).astype(np.float64) * float(_INV24)  # [0, 1)
+    if process == ArrivalProcess.POISSON:
+        gaps = -np.log1p(-u) / rate
+    elif process == ArrivalProcess.UNIFORM:
+        gaps = 2.0 * u / rate
+    else:                                   # BURST
+        if burst < 1:
+            raise ValueError(f"arrival_times: burst must be >= 1, "
+                             f"got {burst}")
+        gaps = np.where(k % np.uint32(burst) == 0, burst / rate, 0.0)
+    return np.cumsum(gaps).astype(np.float32)
+
+
+def billed_lease(vm_start, vm_stop, busy_end, finish_time, granularity,
+                 xp=np):
+    """Per-VM billed seconds under pay-as-you-go (xp-generic: numpy for
+    the oracle-side checks, jnp inside ``engine.scenario_metrics``).
+
+    The *realized* lease runs from ``vm_start`` to:
+
+    * ``finish_time`` (the scenario's wall-clock end) when the lease is
+      open-ended (``vm_stop`` at/above the +inf stand-in — the broker
+      releases surviving VMs when the workload drains), or
+    * ``max(vm_stop, busy_end)`` for a finite lease — you pay to your
+      declared teardown time even if the VM idles (including a lease
+      scheduled entirely after the workload drains: the window was
+      committed, so it bills), and past it while admitted work is still
+      draining (admission gating never kills in-flight tasks, so
+      neither does billing).
+
+    Realized time is clamped at 0 — this only triggers for *open-ended*
+    leases whose start falls beyond the scenario's end — and rounded up
+    to ``granularity``.  Pure arithmetic — callers multiply by per-VM
+    cost rates and mask invalid VMs.
+    """
+    end = xp.where(vm_stop >= _BIG / 2, finish_time,
+                   xp.maximum(vm_stop, busy_end))
+    dur = xp.maximum(end - vm_start, 0.0)
+    g = xp.maximum(granularity, 1e-9)
+    return xp.ceil(dur / g) * g
+
+
+def encode_lease_stop(stop) -> float:
+    """User-facing ``math.inf`` lease stops, clamped to the engine's
+    arithmetic-safe +inf stand-in (``inf`` would NaN the kernel's
+    one-hot gathers: ``0 * inf``)."""
+    return float(min(stop, _BIG)) if stop is not None else _BIG
+
+
+def scenario_windows(scenario):
+    """``(avail, close)`` per VM (f64 numpy) for the sequential oracle:
+    admission opens at ``lease_start + spinup_delay``, closes at
+    ``lease_stop``.  The f32-sensitive layers encode the same quantities
+    through :func:`~repro.core.engine.from_scenario`."""
+    el = scenario.elasticity
+    avail = np.array([v.lease_start + el.spinup_delay
+                      for v in scenario.vms])
+    close = np.array([encode_lease_stop(v.lease_stop)
+                      for v in scenario.vms])
+    return avail, close

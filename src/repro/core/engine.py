@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import network, storage
+from . import elasticity, network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 
@@ -84,6 +84,15 @@ class ScenarioArrays(NamedTuple):
     #                            (reduces, padding, storage disabled)
     block_size: jax.Array      # f32[T] input-block size in MB (0 = none)
     storage_enabled: jax.Array  # f32 (0/1) provenance gate
+    # elasticity (DESIGN.md §8): per-VM lease windows + pay-as-you-go knobs.
+    # The degenerate static fleet is vm_start=0 / vm_stop=_BIG everywhere —
+    # every availability op below is a bitwise identity there.
+    vm_start: jax.Array        # f32[V] lease start (billing runs from here)
+    vm_stop: jax.Array         # f32[V] lease stop; _BIG = never torn down
+    spinup_delay: jax.Array    # f32 scalar — admission opens at start+spinup
+    bill_gran: jax.Array       # f32 scalar — billing granularity (seconds)
+    task_prio: jax.Array       # f32[T] space-shared admission priority
+    #                            (higher admitted first; 0 = legacy rank)
 
 
 class SimOutput(NamedTuple):
@@ -119,6 +128,14 @@ class ScenarioMetrics(NamedTuple):
     #                               placed input block (0 if storage off)
     transfer_bytes: jax.Array  # f32 — remote-fetched block bytes (decimal
     #                            MB × 1e6; 0 under LOCALITY's ideal case)
+    billed_cost: jax.Array   # f32 — pay-as-you-go fleet cost: per-VM
+    #                          realized lease, ceil'd to the billing
+    #                          granularity, × cost_per_sec (DESIGN.md §8)
+    vm_busy_fraction: jax.Array  # f32 — delivered MI / leased MI capacity
+    #                              (capacity-weighted busy share of the
+    #                              fleet's realized leases)
+    queue_wait: jax.Array    # f32 — mean start − ready over started tasks
+    #                          (slot + lease-availability + spinup waits)
 
 
 def task_lengths(sc: ScenarioArrays) -> jax.Array:
@@ -243,6 +260,7 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     t_job = np.zeros(T, np.int32)
     t_red = np.zeros(T, bool)
     t_val = np.zeros(T, bool)
+    t_prio = np.zeros(T, f32)
     # Binding-load base lengths via the one shared f32 op sequence
     # (config.base_task_lengths_f32) so every layer resolves LEAST_LOADED
     # argmin ties identically.
@@ -256,6 +274,7 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
             for _ in range(n):
                 t_job[k], t_red[k], t_val[k] = ji, phase, True
                 t_len[k] = red_l if phase else map_l
+                t_prio[k] = job.priority
                 k += 1
 
     vm_mips = _padf([v.mips for v in sc.vms], V, fill=1.0)
@@ -315,6 +334,12 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
         block_vm=block_vm,
         block_size=block_mb,
         storage_enabled=f32(1.0 if sc.storage.enabled else 0.0),
+        vm_start=_padf([v.lease_start for v in sc.vms], V),
+        vm_stop=_padf([elasticity.encode_lease_stop(v.lease_stop)
+                       for v in sc.vms], V, fill=_BIG),
+        spinup_delay=f32(sc.elasticity.spinup_delay),
+        bill_gran=f32(sc.elasticity.billing_granularity),
+        task_prio=t_prio,
     )
 
 
@@ -355,6 +380,9 @@ class _EpochInv(NamedTuple):
     same_vm: jax.Array     # bool[T, T]
     idx_earlier: jax.Array  # bool[T, T]
     is_space: jax.Array    # bool scalar
+    avail_t: jax.Array     # f32[T] bound VM's admission-open time
+    #                        (lease start + spinup; 0 for a static fleet)
+    close_t: jax.Array     # f32[T] bound VM's lease stop (_BIG = never)
 
 
 def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
@@ -403,9 +431,18 @@ def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
     same_vm = sc.task_vm[:, None] == sc.task_vm[None, :]
     idx_earlier = idx[None, :] < idx[:, None]
 
+    # Lease windows as per-task gathers (DESIGN.md §8): admission on VM v
+    # opens at vm_start[v] + spinup and closes at vm_stop[v].  For the
+    # static fleet (start 0, stop _BIG) every use below is a bitwise
+    # identity: max(ready, 0) == ready for the non-negative ready times and
+    # the close comparison is always true for live events.
+    avail_t = (sc.vm_start + sc.spinup_delay)[sc.task_vm]
+    close_t = sc.vm_stop[sc.task_vm]
+
     inv = _EpochInv(shuffle=shuffle, task_pes=task_pes, vm_onehot=vm_onehot,
                     job_onehot=job_onehot, same_vm=same_vm,
-                    idx_earlier=idx_earlier, is_space=is_space)
+                    idx_earlier=idx_earlier, is_space=is_space,
+                    avail_t=avail_t, close_t=close_t)
     c0 = _Carry(time=jnp.float32(0.0), rem=task_len,
                 running=jnp.zeros(T, bool),
                 start=jnp.full(T, _BIG, jnp.float32),
@@ -439,11 +476,19 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
                     _BIG)
     not_started = sc.task_valid & ~c.running & (c.finish >= _BIG / 2) \
         & (c.start >= _BIG / 2)
+    # Lease-aware eligibility (DESIGN.md §8): a pending task becomes
+    # admissible at max(ready, lease avail) — so lease-start edges join
+    # the next-event min through the arrival candidates below — and only
+    # while its event time lands strictly before the VM's lease stop.  A
+    # candidate whose time falls at/past the close never defines an event
+    # again (stranded); the static fleet reproduces the old ops bitwise.
+    elig = jnp.maximum(c.ready, inv.avail_t)
     # Space-shared: a pending task only defines an arrival event while
     # its VM has a free PE slot; otherwise a completion epoch admits it.
     has_slot = (inv.task_pes - inv.vm_onehot @ n_on_vm) > 0.5
-    arr = jnp.where(not_started & (~inv.is_space | has_slot),
-                    jnp.maximum(c.ready, c.time), _BIG)
+    cand_t = jnp.maximum(elig, c.time)
+    arr = jnp.where(not_started & (~inv.is_space | has_slot)
+                    & (cand_t < inv.close_t), cand_t, _BIG)
     t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
     live = t_next < _BIG / 2
     tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
@@ -467,16 +512,24 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
         sc.task_is_reduce & phase_done[sc.task_job],
         red_ready[sc.task_job], c.ready)
 
-    # arrivals: time-shared starts every ready task immediately;
-    # space-shared admits the (ready, index)-first eligible tasks into
-    # the PE slots left free after this epoch's completions.
-    eligible = live & not_started & (c.ready <= t_next + tie)
+    # arrivals: time-shared starts every admissible task immediately;
+    # space-shared admits the (priority desc, eligible time, index)-first
+    # waiting tasks into the PE slots left free after this epoch's
+    # completions.  The admission key is the *eligible* time (ready
+    # joined with the lease-open edge) and the whole rank is gated on the
+    # lease still being open at t_next; all-zero priorities and a static
+    # fleet reduce every term to the classic (ready, index) rank bitwise.
+    eligible = live & not_started & (elig <= t_next + tie) \
+        & (t_next < inv.close_t)
     free_after = inv.task_pes - inv.vm_onehot @ (n_on_vm
                                                  - vm_counts(done_now))
-    key = c.ready
-    higher_prio = inv.same_vm & ((key[None, :] < key[:, None])
-                                 | ((key[None, :] == key[:, None])
-                                    & inv.idx_earlier))
+    key = elig
+    prio = sc.task_prio
+    higher_prio = inv.same_vm & (
+        (prio[None, :] > prio[:, None])
+        | ((prio[None, :] == prio[:, None])
+           & ((key[None, :] < key[:, None])
+              | ((key[None, :] == key[:, None]) & inv.idx_earlier))))
     rank = jnp.sum((higher_prio & eligible[None, :])
                    .astype(jnp.float32), axis=1)
     start_now = eligible & (~inv.is_space | (rank < free_after))
@@ -652,9 +705,39 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
     loc_frac = (jnp.sum(local.astype(jnp.float32))
                 / jnp.maximum(n_blocked, 1.0))
     xfer = jnp.sum(jnp.where(blocked & ~local, sc.block_size, 0.0)) * 1e6
+    # Pay-as-you-go accounting (DESIGN.md §8).  Billing runs over each
+    # VM's *realized* lease (elasticity.billed_lease: open-ended leases
+    # end with the workload, finite leases bill their declared window
+    # extended by any admitted work still draining), rounded up to the
+    # billing granularity.  Stranded tasks (finish at the _BIG stand-in)
+    # are excluded from delivered work and wait times.  The only [T, V]
+    # intermediates are one bool one-hot + one masked-max: for a
+    # statically open-ended fleet XLA folds ``sc.vm_stop`` to the _BIG
+    # constant and DCEs the whole busy_end chain.
+    V = sc.vm_mips.shape[0]
+    vm_onehot_b = sc.task_vm[:, None] == jnp.arange(V)[None, :]
+    ran = sc.task_valid & (out.finish < _BIG / 2)
+    fin_ran = jnp.where(ran, out.finish, 0.0)
+    busy_end = jnp.max(jnp.where(vm_onehot_b, fin_ran[:, None], 0.0),
+                       axis=0)
+    billed_t = elasticity.billed_lease(sc.vm_start, sc.vm_stop, busy_end,
+                                       out.finish_time, sc.bill_gran, xp=jnp)
+    billed = jnp.sum(jnp.where(sc.vm_valid, billed_t * sc.vm_cost, 0.0))
+    lease_end = jnp.where(sc.vm_stop >= _BIG / 2, out.finish_time,
+                          jnp.maximum(sc.vm_stop, busy_end))
+    lease_dur = jnp.maximum(lease_end - sc.vm_start, 0.0)
+    delivered = jnp.sum(jnp.where(ran, task_lengths(sc), 0.0))
+    leased_cap = jnp.sum(jnp.where(sc.vm_valid,
+                                   sc.vm_mips * sc.vm_pes * lease_dur, 0.0))
+    busy_frac = delivered / jnp.maximum(leased_cap, 1e-30)
+    started = sc.task_valid & (out.start < _BIG / 2)
+    q_wait = jnp.sum(jnp.where(started, out.start - out.ready, 0.0)) \
+        / jnp.maximum(jnp.sum(started.astype(jnp.float32)), 1.0)
     return ScenarioMetrics(finish_time=out.finish_time, utilization=util,
                            n_epochs=out.n_epochs,
-                           locality_fraction=loc_frac, transfer_bytes=xfer)
+                           locality_fraction=loc_frac, transfer_bytes=xfer,
+                           billed_cost=billed, vm_busy_fraction=busy_frac,
+                           queue_wait=q_wait)
 
 
 @jax.jit

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import network, storage
+from . import elasticity, network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 # the engine's masked-argmin fill: LOCALITY's candidate masking must use
@@ -62,6 +62,7 @@ class Task:
     start: float = math.inf
     finish: float = math.inf
     remaining: float = 0.0     # MI left (engine state)
+    priority: float = 0.0      # space-shared admission priority (job-level)
 
     @property
     def exec_time(self) -> float:
@@ -106,15 +107,23 @@ class SimResult:
 class TaskTracker:
     """Binds tasks to VMs per the broker's binding policy and manages the
     per-VM execution state: active sets (both policies) and, under
-    SPACE_SHARED, the (ready, id)-ordered wait queues for the PE slots.
+    SPACE_SHARED, the (priority desc, eligible time, id)-ordered wait
+    queues for the PE slots.  ``avail``/``close`` are the per-VM lease
+    admission windows (DESIGN.md §8): tasks are admitted only at times
+    ``t`` with ``avail[vm] <= t < close[vm]``.
     """
 
     def __init__(self, vms, sched_policy=SchedPolicy.TIME_SHARED,
-                 binding_policy=BindingPolicy.ROUND_ROBIN):
+                 binding_policy=BindingPolicy.ROUND_ROBIN,
+                 avail=None, close=None):
         self.vms = tuple(vms)
         self.n_vms = len(self.vms)
         self.sched = SchedPolicy(sched_policy)
         self.binding = BindingPolicy(binding_policy)
+        self.avail = (np.zeros(self.n_vms) if avail is None
+                      else np.asarray(avail, float))
+        self.close = (np.full(self.n_vms, math.inf) if close is None
+                      else np.asarray(close, float))
         self._rr = 0
         # least-loaded bookkeeping: float32 on purpose — the vectorized
         # engine accumulates in f32, and both layers must pick the same VM
@@ -123,7 +132,7 @@ class TaskTracker:
         self._slots = [vi for vi, vm in enumerate(self.vms)
                        for _ in range(int(vm.pes))]
         self.active: list[set[int]] = [set() for _ in range(self.n_vms)]
-        self.queue: list[list[tuple[float, int]]] = \
+        self.queue: list[list[tuple[float, float, int]]] = \
             [[] for _ in range(self.n_vms)]
 
     def bind(self, task: Task, base_len: np.float32,
@@ -159,13 +168,26 @@ class TaskTracker:
     def has_free_slot(self, vm: int) -> bool:
         return len(self.active[vm]) < int(self.vms[vm].pes)
 
-    def enqueue(self, tid: int, task: Task) -> None:
-        heapq.heappush(self.queue[task.vm], (task.ready, tid))
+    def eligible_at(self, task: Task) -> float:
+        """Earliest admissible instant: data readiness joined with the
+        bound VM's lease-open edge (the lease start *is* a calendar
+        event — arrival events are scheduled at this time)."""
+        return max(task.ready, self.avail[task.vm])
 
-    def admit(self, vm: int) -> int | None:
-        """Pop the highest-priority queued task if a PE slot is free."""
-        if self.queue[vm] and self.has_free_slot(vm):
-            return heapq.heappop(self.queue[vm])[1]
+    def is_open(self, vm: int, t: float) -> bool:
+        """The lease admits new tasks at ``t`` (strictly before close)."""
+        return t < self.close[vm]
+
+    def enqueue(self, tid: int, task: Task) -> None:
+        heapq.heappush(self.queue[task.vm],
+                       (-task.priority, self.eligible_at(task), tid))
+
+    def admit(self, vm: int, now: float) -> int | None:
+        """Pop the highest-priority queued task if a PE slot is free and
+        the lease is still open; a closed lease strands its queue."""
+        if self.queue[vm] and self.has_free_slot(vm) \
+                and self.is_open(vm, now):
+            return heapq.heappop(self.queue[vm])[2]
         return None
 
 
@@ -183,12 +205,14 @@ class JobTracker:
             for mi in range(job.n_maps):
                 m_ids.append(len(self.tasks))
                 self.tasks.append(Task(ji, mi, False,
-                                       job.length_mi / job.n_maps))
+                                       job.length_mi / job.n_maps,
+                                       priority=job.priority))
             for ri in range(job.n_reduces):
                 r_ids.append(len(self.tasks))
                 self.tasks.append(Task(
                     ji, ri, True,
-                    job.reduce_factor * job.length_mi / job.n_reduces))
+                    job.reduce_factor * job.length_mi / job.n_reduces,
+                    priority=job.priority))
             self.map_ids.append(m_ids)
             self.reduce_ids.append(r_ids)
 
@@ -208,8 +232,13 @@ class IoTSimBroker:
                  length_multipliers: list[float] | None = None):
         self.scenario = scenario
         self.jt = JobTracker(scenario)
+        # Lease admission windows (DESIGN.md §8): avail = start + spinup,
+        # close = stop — the same realized quantities the array encoders
+        # carry as vm_start/vm_stop/spinup_delay.
+        avail, close = elasticity.scenario_windows(scenario)
         self.tt = TaskTracker(scenario.vms, scenario.sched_policy,
-                              scenario.binding_policy)
+                              scenario.binding_policy,
+                              avail=avail, close=close)
         # Storage subsystem (DESIGN.md §7): the same realized placement
         # the array encoders consume (one shared helper — the layers
         # cannot drift), reshaped into per-task candidate masks.
@@ -252,6 +281,10 @@ class IoTSimBroker:
 
         # Map tasks become ready at submit + stage-in delay (+ the storage
         # remote-fetch delay when bound off the input block's replica set).
+        # The *arrival event* lands at the eligible time — readiness joined
+        # with the bound VM's lease-open edge, so lease starts are calendar
+        # events — and is never scheduled at all when it would fall at or
+        # past the lease close (the task is stranded: finish stays inf).
         for ji, job in enumerate(sc.jobs):
             ready = job.submit_time + network.stage_in_delay(job, sc.network)
             for tid in self.jt.map_ids[ji]:
@@ -263,7 +296,9 @@ class IoTSimBroker:
                         0.0, sc.network.bw_mbps,
                         1.0 if sc.network.enabled else 0.0)
                 tasks[tid].ready = ready + fetch
-                heapq.heappush(calendar, (ready + fetch, next(seq), tid))
+                elig = self.tt.eligible_at(tasks[tid])
+                if self.tt.is_open(tasks[tid].vm, elig):
+                    heapq.heappush(calendar, (elig, next(seq), tid))
 
         for t in tasks:
             t.remaining = t.length_mi
@@ -325,21 +360,34 @@ class IoTSimBroker:
                         if r_ready is not None:
                             for rid in self.jt.reduce_ids[task.job]:
                                 tasks[rid].ready = r_ready
-                                heapq.heappush(calendar,
-                                               (r_ready, next(seq), rid))
-                    # freed PE slot -> admit the next queued task
+                                elig = self.tt.eligible_at(tasks[rid])
+                                if self.tt.is_open(tasks[rid].vm, elig):
+                                    heapq.heappush(calendar,
+                                                   (elig, next(seq), rid))
+                    # freed PE slot -> admit the next queued task (only
+                    # while the VM's lease is still open)
                     if space:
-                        qid = self.tt.admit(task.vm)
+                        qid = self.tt.admit(task.vm, now)
                         if qid is not None:
                             start_task(qid)
             else:                          # arrivals: task(s) become ready
+                # Space-shared arrivals pool through the per-VM wait queue
+                # even when a slot is free: simultaneous arrivals must be
+                # admitted in (priority desc, eligible, id) order — the
+                # engine ranks all tied-eligible tasks in one epoch — not
+                # in calendar pop order.
+                arrived_vms = set()
                 while calendar and calendar[0][0] <= now + _EPS:
                     _, _, tid = heapq.heappop(calendar)
                     task = tasks[tid]
-                    if space and not self.tt.has_free_slot(task.vm):
-                        self.tt.enqueue(tid, task)   # wait for a PE slot
+                    if space:
+                        self.tt.enqueue(tid, task)
+                        arrived_vms.add(task.vm)
                     else:
                         start_task(tid)
+                for vm in arrived_vms:
+                    while (qid := self.tt.admit(vm, now)) is not None:
+                        start_task(qid)
 
         return SimResult(tasks=tasks, jobs=self._job_metrics(tasks),
                          finish_time=now, n_events=n_events)

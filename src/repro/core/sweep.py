@@ -48,16 +48,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import elasticity as elasticity_mod
 from . import storage as storage_mod
 from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
-from .engine import (JobMetrics, ScenarioArrays, ScenarioMetrics, bind_tasks,
-                     from_scenario, job_metrics, scenario_metrics,
-                     simulate_arrays, simulate_batch_arrays)
+from .elasticity import ElasticitySpec, as_arrival_process
+from .engine import (_BIG, JobMetrics, ScenarioArrays, ScenarioMetrics,
+                     bind_tasks, from_scenario, job_metrics,
+                     scenario_metrics, simulate_arrays,
+                     simulate_batch_arrays)
 from .storage import Placement, StorageSpec, as_placement
 
 _DEFAULT_STORAGE = StorageSpec()    # encode_cell defaults == Scenario's
+_DEFAULT_ELASTICITY = ElasticitySpec()
 
 
 # ---------------------------------------------------------------------------
@@ -89,7 +93,11 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 block_size_mb=_DEFAULT_STORAGE.block_size_mb,
                 replication=_DEFAULT_STORAGE.replication,
                 placement=int(_DEFAULT_STORAGE.placement),
-                storage_seed=_DEFAULT_STORAGE.seed) -> ScenarioArrays:
+                storage_seed=_DEFAULT_STORAGE.seed,
+                job_submit=0.0, vm_start=0.0, vm_stop=_BIG,
+                spinup_delay=_DEFAULT_ELASTICITY.spinup_delay,
+                billing_granularity=_DEFAULT_ELASTICITY.billing_granularity,
+                task_prio=None) -> ScenarioArrays:
     """One paper cell as traced arrays — homogeneous or per-VM heterogeneous.
 
     ``vm_mips`` / ``vm_pes`` / ``vm_cost`` are **per-VM vectors** of length
@@ -108,6 +116,16 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     Python default) skips the placement math entirely, so pre-storage
     grids pay nothing.
 
+    Elasticity (DESIGN.md §8): ``vm_start``/``vm_stop`` are per-VM lease
+    windows (scalars broadcast; ``vm_stop`` clamps to the engine's ``_BIG``
+    +inf stand-in), ``spinup_delay`` delays admission past the lease
+    start, ``billing_granularity`` sets the pay-as-you-go charge unit, and
+    ``job_submit`` is the cell's job arrival instant (an arrival-process
+    draw under :func:`arrivals`).  ``task_prio`` is a per-task priority
+    vector (``pad_tasks`` wide, like ``task_mult``).  The defaults — lease
+    ``[0, inf)``, no spinup, zero priorities — reproduce the static-fleet
+    encoding bit for bit.
+
     All parameters may be traced — ``vmap`` this over parameter grids;
     ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
     may mix policies (Group 5).  ``pad_tasks``/``pad_vms`` are static
@@ -122,6 +140,8 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     valid = t < n_tasks
     if task_mult is None:
         task_mult = jnp.ones(pad_tasks, jnp.float32)
+    if task_prio is None:
+        task_prio = jnp.zeros(pad_tasks, jnp.float32)
     vm_valid = jnp.arange(pad_vms) < n_vms
     vm_mips_a = jnp.where(vm_valid,
                           jnp.broadcast_to(f32(vm_mips), (pad_vms,)), 1.0)
@@ -129,6 +149,12 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                          jnp.broadcast_to(f32(vm_pes), (pad_vms,)), 1.0)
     vm_cost_a = jnp.where(vm_valid,
                           jnp.broadcast_to(f32(vm_cost), (pad_vms,)), 0.0)
+    vm_start_a = jnp.where(vm_valid,
+                           jnp.broadcast_to(f32(vm_start), (pad_vms,)), 0.0)
+    vm_stop_a = jnp.where(
+        vm_valid,
+        jnp.minimum(jnp.broadcast_to(f32(vm_stop), (pad_vms,)),
+                    jnp.float32(_BIG)), jnp.float32(_BIG))
     map_len, red_len = base_task_lengths_f32(
         f32(job_length), n_maps.astype(jnp.float32),
         n_reduces.astype(jnp.float32), f32(reduce_factor))
@@ -165,7 +191,7 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         job_data=f32(job_data)[None],
         job_n_maps=n_maps[None],
         job_n_reduces=n_reduces[None],
-        job_submit=jnp.zeros(1, jnp.float32),
+        job_submit=f32(job_submit)[None],
         job_reduce_factor=f32(reduce_factor)[None],
         job_valid=jnp.ones(1, bool),
         vm_mips=vm_mips_a,
@@ -180,6 +206,11 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         block_vm=block_vm,
         block_size=block_mb,
         storage_enabled=f32(storage_enabled),
+        vm_start=vm_start_a,
+        vm_stop=vm_stop_a,
+        spinup_delay=f32(spinup_delay),
+        bill_gran=f32(billing_granularity),
+        task_prio=jnp.asarray(task_prio, jnp.float32),
     )
 
 
@@ -189,7 +220,8 @@ _CELL_PARAMS = tuple(p for p in inspect.signature(encode_cell).parameters
 _INT_PARAMS = frozenset(
     {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy",
      "replication", "placement", "storage_seed"})
-_PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost"})
+_PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost", "vm_start", "vm_stop"})
+_PER_TASK = frozenset({"task_mult", "task_prio"})
 # storage knobs that are dead weight unless storage_enabled is set
 _STORAGE_KNOBS = frozenset(
     {"block_size_mb", "replication", "placement", "storage_seed"})
@@ -222,6 +254,22 @@ def _validate_cell_columns(cols: Mapping[str, Any]) -> None:
     if "block_size_mb" in conc and (conc["block_size_mb"] <= 0).any():
         raise ValueError(
             "grid_arrays: block_size_mb must be > 0 in every cell")
+    if "billing_granularity" in conc \
+            and (conc["billing_granularity"] <= 0).any():
+        raise ValueError(
+            "grid_arrays: billing_granularity must be > 0 in every cell")
+    if "spinup_delay" in conc and (conc["spinup_delay"] < 0).any():
+        raise ValueError(
+            "grid_arrays: spinup_delay must be >= 0 in every cell")
+    if "vm_start" in conc and (conc["vm_start"] < 0).any():
+        raise ValueError(
+            "grid_arrays: vm_start must be >= 0 in every cell (leases "
+            "start on the simulation clock; a negative start would bill "
+            "phantom lease time)")
+    if "job_submit" in conc and (conc["job_submit"] < 0).any():
+        raise ValueError(
+            "grid_arrays: job_submit must be >= 0 in every cell (arrival "
+            "instants are absolute simulation times)")
     knobs = sorted(_STORAGE_KNOBS & set(cols))
     if knobs and "storage_enabled" not in cols:
         raise ValueError(
@@ -276,7 +324,7 @@ def grid_arrays(params: dict[str, np.ndarray], *, pad_tasks: int,
         if len(shape) == 2:
             if n in _PER_VM:
                 want, pad = "pad_vms", pad_vms
-            elif n == "task_mult":
+            elif n in _PER_TASK:
                 want, pad = "pad_tasks", pad_tasks
             else:
                 raise ValueError(
@@ -424,10 +472,11 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
             f"valid: {list(_CELL_PARAMS)} + ['vm', 'vm_type', 'vms', 'job', "
             "'job_type', 'network_delay', 'storage', 'placement']")
     if any(np.ndim(v) > 0 for v in values):        # per-VM / per-task vectors
-        if name not in _PER_VM and name != "task_mult":
+        if name not in _PER_VM and name not in _PER_TASK:
             raise ValueError(
                 f"axis {name!r}: vector values only make sense for the "
-                f"per-VM parameters {sorted(_PER_VM)} or 'task_mult'; "
+                f"per-VM parameters {sorted(_PER_VM)} or the per-task "
+                f"parameters {sorted(_PER_TASK)}; "
                 f"{name!r} takes one scalar per cell")
         if not all(np.ndim(v) == 1 for v in values):
             raise ValueError(
@@ -467,6 +516,37 @@ def zip_(*axes: Axis) -> Axis:
     labels = tuple(tuple(part for a in axes for part in a.labels[i])
                    for i in range(len(axes[0])))
     return Axis(names, labels, columns)
+
+
+def arrivals(n: int, *, rate, process="poisson", seed: int = 0,
+             burst: int = 4) -> Axis:
+    """An arrival-stream dimension (DESIGN.md §8): ``n`` seeded draws from
+    an inter-arrival process become ``job_submit`` instants — each grid
+    point simulates one arrival of the stream against the leased fleet, so
+    offered load is a grid axis like any other parameter.
+
+    ``rate`` is arrivals per simulated second; pass a *sequence* of rates
+    to sweep offered load (the axis flattens rates × arrivals into one
+    labeled dimension, ``select(arrival_rate=...)`` filters it).
+    ``process`` is an :class:`~repro.core.elasticity.ArrivalProcess`
+    member or name (``"poisson"`` | ``"uniform"`` | ``"burst"``); draws
+    reuse the storage subsystem's counter-hash idiom, so streams are
+    reproducible pure arithmetic of ``(seed, k)``.
+    """
+    proc = as_arrival_process(process)
+    rates = list(rate) if np.ndim(rate) > 0 else [rate]
+    if not rates:
+        raise ValueError("arrivals: empty rate list")
+    times = [elasticity_mod.arrival_times(n, rate=float(r), process=proc,
+                                          seed=seed, burst=burst)
+             for r in rates]
+    col = np.concatenate(times).astype(np.float32)
+    if np.ndim(rate) > 0:
+        labels = tuple((float(r), k) for r in rates for k in range(n))
+        return Axis(("arrival_rate", "arrival"), labels,
+                    {"job_submit": col})
+    return Axis(("arrival",), tuple((k,) for k in range(n)),
+                {"job_submit": col})
 
 
 def product(*dims: Axis, **base: Any) -> "SweepPlan":
@@ -513,6 +593,15 @@ class SweepPlan:
     def replace(self, **kw) -> "SweepPlan":
         return dataclasses.replace(self, **kw)
 
+    def arrivals(self, n: int, *, rate, process="poisson", seed: int = 0,
+                 burst: int = 4) -> "SweepPlan":
+        """Append an arrival-stream dimension (see module-level
+        :func:`arrivals`): ``plan.arrivals(64, rate=0.01)`` simulates each
+        existing grid point against 64 seeded Poisson arrival instants,
+        with ``job_submit`` populated per cell."""
+        dim = arrivals(n, rate=rate, process=process, seed=seed, burst=burst)
+        return self.replace(dims=self.dims + (dim,))
+
     def _compiled(self) -> tuple[dict[str, np.ndarray], int, int]:
         """Flatten axes + base + defaults into N-cell parameter columns."""
         shape, N = self.shape, self.size
@@ -556,8 +645,8 @@ class SweepPlan:
                 f"(got {pad_tasks}), pad_vms>={v_needed} (got {pad_vms})")
         n_vms_max = int(cols["n_vms"].max())
         for cname in _PER_VM:
-            c = cols[cname]
-            if c.ndim != 2:
+            c = cols.get(cname)     # vm_start/vm_stop default off-column
+            if c is None or c.ndim != 2:
                 continue
             if c.shape[1] < n_vms_max:
                 raise ValueError(
@@ -567,15 +656,17 @@ class SweepPlan:
                     "'vms' axis, which sets n_vms itself)")
             if c.shape[1] < pad_vms:
                 cols[cname] = np.pad(c, ((0, 0), (0, pad_vms - c.shape[1])))
-        if "task_mult" in cols and cols["task_mult"].shape[1] != pad_tasks:
-            tm = cols["task_mult"]
-            if tm.shape[1] > pad_tasks:
-                raise ValueError(
-                    f"SweepPlan: task_mult width {tm.shape[1]} exceeds "
-                    f"pad_tasks={pad_tasks}")
-            cols["task_mult"] = np.pad(
-                tm, ((0, 0), (0, pad_tasks - tm.shape[1])),
-                constant_values=1.0)
+        for cname, fill in (("task_mult", 1.0), ("task_prio", 0.0)):
+            if cname in cols and cols[cname].ndim == 2 \
+                    and cols[cname].shape[1] != pad_tasks:
+                tm = cols[cname]
+                if tm.shape[1] > pad_tasks:
+                    raise ValueError(
+                        f"SweepPlan: {cname} width {tm.shape[1]} exceeds "
+                        f"pad_tasks={pad_tasks}")
+                cols[cname] = np.pad(
+                    tm, ((0, 0), (0, pad_tasks - tm.shape[1])),
+                    constant_values=fill)
         # storage/placement columns fail here, at plan build, with a named
         # error — the fused bucket runner would otherwise trace them
         # straight into the vmapped encoder
@@ -593,7 +684,7 @@ class SweepPlan:
 
     def run(self, mesh: jax.sharding.Mesh | None = None,
             chunk: int | None = None, *, bucket: object = "auto",
-            backend: str = "xla") -> "SweepResult":
+            backend: str = "xla", stream_to=None):
         """Execute the plan and return a labeled :class:`SweepResult`.
 
         Execution modes (combine with bucketing orthogonally):
@@ -621,6 +712,15 @@ class SweepPlan:
         ``mr_epoch`` megakernel (``kernels/mr_sched``) with per-VM/task
         state resident in VMEM across epochs (interpret mode off-TPU;
         single-device only — combine with ``chunk``, not ``mesh``).
+
+        ``stream_to`` (with ``chunk``) streams results to disk instead of
+        accumulating them: each ``chunk``-cell slice of the grid is
+        simulated and its long-form :meth:`SweepResult.to_table` rows
+        appended to one parquet file, so million-cell grids never hold
+        their metrics in host memory.  Returns a :class:`StreamedSweep`
+        summary rather than a :class:`SweepResult` (the ROADMAP
+        columnar-export item's second slice; needs the optional
+        ``pyarrow`` dependency).
         """
         if mesh is not None and chunk is not None:
             raise ValueError("run: pass mesh or chunk, not both")
@@ -633,33 +733,100 @@ class SweepPlan:
             raise ValueError(
                 "run: backend='pallas' is single-device (use chunk=, "
                 "not mesh=)")
+        if stream_to is not None:
+            if chunk is None:
+                raise ValueError(
+                    "run: stream_to= needs chunk= (the streamed write "
+                    "appends one chunk of cells at a time)")
+            return self._run_streaming(stream_to, chunk, bucket, backend)
         cols, pad_tasks, pad_vms = self._compiled()
-        N = self.size
-        groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket)
-        parts = [(idx, *_run_cells(gcols, len(idx), tb, vb, statics,
-                                   mesh, chunk, backend))
-                 for idx, gcols, statics, tb, vb in groups]
-        n_jobs = int(parts[0][1].makespan.shape[-1])
-        metrics: dict[str, np.ndarray] = {}
-        for f in JobMetrics._fields:
-            out = np.empty((N, n_jobs),
-                           np.asarray(getattr(parts[0][1], f)).dtype)
-            for idx, jm, _, _ in parts:
-                out[idx] = np.asarray(getattr(jm, f))
-            metrics[f] = out.reshape(self.shape if n_jobs == 1
-                                     else self.shape + (n_jobs,))
-        for f in ScenarioMetrics._fields:
-            out = np.empty(N, np.asarray(getattr(parts[0][2], f)).dtype)
-            for idx, _, sm, _ in parts:
-                out[idx] = np.asarray(getattr(sm, f))
-            metrics[f] = out.reshape(self.shape)
-        realized = np.empty(N, np.int32)
-        for idx, _, _, rz in parts:
-            realized[idx] = rz
-        metrics["realized_epochs"] = realized.reshape(self.shape)
+        metrics, n_jobs = _execute_grid(cols, self.size, pad_tasks, pad_vms,
+                                        bucket, mesh, chunk, backend)
+        shaped = {
+            name: (m.reshape(self.shape) if m.ndim == 1 or n_jobs == 1
+                   else m.reshape(self.shape + (n_jobs,)))
+            for name, m in metrics.items()}
         return SweepResult(axis_names=tuple(d.names for d in self.dims),
                            axis_labels=tuple(d.labels for d in self.dims),
-                           metrics=metrics, n_jobs=n_jobs)
+                           metrics=shaped, n_jobs=n_jobs)
+
+    def _run_streaming(self, path, chunk: int, bucket, backend
+                       ) -> "StreamedSweep":
+        """Chunked execute + parquet append (see :meth:`run`)."""
+        try:
+            import pyarrow as pa
+            import pyarrow.parquet as pq
+        except ImportError as e:                  # pragma: no cover - env
+            raise ImportError(
+                "run(stream_to=...) requires the optional pyarrow "
+                "dependency (pip install pyarrow); without it use "
+                "run(chunk=...) and to_table()") from e
+        cols, pad_tasks, pad_vms = self._compiled()
+        N, shape = self.size, self.shape
+        axis_names = tuple(d.names for d in self.dims)
+        axis_labels = tuple(d.labels for d in self.dims)
+        writer, n_rows, n_chunks = None, 0, 0
+        try:
+            for lo in range(0, N, chunk):
+                hi = min(lo + chunk, N)
+                sub = {k: v[lo:hi] for k, v in cols.items()}
+                metrics, n_jobs = _execute_grid(
+                    sub, hi - lo, pad_tasks, pad_vms, bucket, None, None,
+                    backend)
+                table = pa.table(_long_form_columns(
+                    axis_names, axis_labels, shape, metrics, n_jobs,
+                    lo, hi))
+                if writer is None:
+                    writer = pq.ParquetWriter(path, table.schema)
+                writer.write_table(table)
+                n_rows += table.num_rows
+                n_chunks += 1
+        finally:
+            if writer is not None:
+                writer.close()
+        return StreamedSweep(path=str(path), n_cells=N, n_rows=n_rows,
+                             n_chunks=n_chunks)
+
+
+def _execute_grid(cols: dict[str, np.ndarray], N: int, pad_tasks: int,
+                  pad_vms: int, bucket, mesh, chunk, backend
+                  ) -> tuple[dict[str, np.ndarray], int]:
+    """Bucket + simulate ``N`` flattened cells; returns ``(metrics,
+    n_jobs)`` with per-job metric columns shaped ``[N, n_jobs]`` and
+    per-scenario columns ``[N]`` (callers reshape to grid/table form)."""
+    groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket)
+    parts = [(idx, *_run_cells(gcols, len(idx), tb, vb, statics,
+                               mesh, chunk, backend))
+             for idx, gcols, statics, tb, vb in groups]
+    n_jobs = int(parts[0][1].makespan.shape[-1])
+    metrics: dict[str, np.ndarray] = {}
+    for f in JobMetrics._fields:
+        out = np.empty((N, n_jobs),
+                       np.asarray(getattr(parts[0][1], f)).dtype)
+        for idx, jm, _, _ in parts:
+            out[idx] = np.asarray(getattr(jm, f))
+        metrics[f] = out
+    for f in ScenarioMetrics._fields:
+        out = np.empty(N, np.asarray(getattr(parts[0][2], f)).dtype)
+        for idx, _, sm, _ in parts:
+            out[idx] = np.asarray(getattr(sm, f))
+        metrics[f] = out
+    realized = np.empty(N, np.int32)
+    for idx, _, _, rz in parts:
+        realized[idx] = rz
+    metrics["realized_epochs"] = realized
+    return metrics, n_jobs
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamedSweep:
+    """Summary of a ``run(chunk=..., stream_to=...)`` streamed export:
+    the grid's metrics live in the parquet file at ``path`` (long-form
+    ``to_table`` columns), not in host memory."""
+    path: str
+    n_cells: int
+    n_rows: int
+    n_chunks: int
 
 
 def _pad_cells(cols: dict[str, np.ndarray], n: int) -> dict[str, np.ndarray]:
@@ -795,7 +962,7 @@ def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
                 continue
             cv = cvals[idx]
             if cv.ndim == 2:
-                cv = cv[:, :t] if cname == "task_mult" else cv[:, :vb]
+                cv = cv[:, :t] if cname in _PER_TASK else cv[:, :vb]
             gcols[cname] = cv
         groups.append((idx, gcols, statics or None, t, vb))
     return groups
@@ -882,6 +1049,33 @@ def _plain_label(v):
     if isinstance(v, (tuple, list, np.ndarray)):
         return ",".join(str(_plain_label(x)) for x in np.asarray(v).tolist())
     return v
+
+
+def _long_form_columns(axis_names, axis_labels, shape, flat_metrics,
+                       n_jobs, lo, hi) -> dict[str, np.ndarray]:
+    """Long-form rows for the flat grid cells ``[lo, hi)`` — the ONE
+    row encoding behind :meth:`SweepResult.to_table` (whole grid) and
+    the streamed parquet writer (one chunk at a time), so the two
+    export paths cannot drift.  ``flat_metrics`` maps metric names to
+    ``[n, n_jobs]`` (per-job) or ``[n]`` (per-scenario) columns for the
+    slice; axis coordinates expand through :func:`_plain_label`, cells
+    with several jobs gain a ``job`` index column.
+    """
+    n = hi - lo
+    flat = np.arange(lo, hi)
+    cols: dict[str, np.ndarray] = {}
+    for d, (names, labs) in enumerate(zip(axis_names, axis_labels)):
+        inner = int(np.prod(shape[d + 1:], dtype=np.int64))
+        di = (flat // inner) % shape[d]
+        for ci, cname in enumerate(names):
+            vals = np.asarray([_plain_label(lab[ci]) for lab in labs])
+            cols[cname] = np.repeat(vals[di], n_jobs)
+    if n_jobs > 1:
+        cols["job"] = np.tile(np.arange(n_jobs), n)
+    for mname, m in flat_metrics.items():
+        cols[mname] = (m.reshape(n * n_jobs) if m.ndim == 2
+                       else np.repeat(m, n_jobs))
+    return cols
 
 
 def _match_label(label, want) -> bool:
@@ -988,24 +1182,14 @@ class SweepResult:
         shape = self.shape
         N = int(np.prod(shape, dtype=np.int64)) if shape else 1
         nj = self.n_jobs
-        cols: dict[str, np.ndarray] = {}
-        for d, (names, labs) in enumerate(zip(self.axis_names,
-                                              self.axis_labels)):
-            outer = int(np.prod(shape[:d], dtype=np.int64))
-            inner = int(np.prod(shape[d + 1:], dtype=np.int64))
-            idx = np.tile(np.repeat(np.arange(shape[d]), inner), outer)
-            for ci, cname in enumerate(names):
-                vals = np.asarray([_plain_label(lab[ci]) for lab in labs])
-                cols[cname] = np.repeat(vals[idx], nj)
-        if nj > 1:
-            cols["job"] = np.tile(np.arange(nj), N)
+        flat = {}
         for mname, m in self.metrics.items():
             arr = np.asarray(m)
-            if arr.ndim == len(shape) + 1:       # trailing per-job dim
-                cols[mname] = arr.reshape(N * nj)
-            else:                                # per-scenario metric
-                cols[mname] = np.repeat(arr.reshape(N), nj)
-        return cols
+            flat[mname] = (arr.reshape(N, nj)        # trailing per-job dim
+                           if arr.ndim == len(shape) + 1
+                           else arr.reshape(N))      # per-scenario metric
+        return _long_form_columns(self.axis_names, self.axis_labels, shape,
+                                  flat, nj, 0, N)
 
     def to_parquet(self, path) -> None:
         """Write :meth:`to_table` to a parquet file.  Needs the *optional*

@@ -38,6 +38,18 @@ enter the per-VM ``(ready, index)`` admission scan at their delayed ready
 times and lose admission priority to data-local peers, with no kernel-side
 branching — one lowering serves all five policy axes' values mixed per
 lane, bit-identical to the engine (``tests/test_storage.py``).
+
+Elasticity (DESIGN.md §8): VM lease windows are lane data too —
+``vm_start``/``vm_stop`` (+ the ``spinup`` boot delay) gate admission
+per VM: a pending task's eligible time is ``max(ready, lease open)``
+(lease-start edges therefore join the next-event min through the
+arrival candidates) and candidates whose event time lands at/past the
+lease close are stranded, never defining an event again.  The
+space-shared admission scan extracts per-VM minima of the lexicographic
+``(priority desc, eligible time, index)`` key — the per-task
+``prio`` input generalizes the classic ``(ready, index)`` rank; zero
+priorities and the static-fleet window ``[0, 1e30)`` reproduce the
+pre-elastic schedule bit for bit (``tests/test_elasticity.py``).
 """
 from __future__ import annotations
 
@@ -53,6 +65,7 @@ _TIME_EPS = 1e-6
 
 def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
             shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
+            vm_start_ref, vm_stop_ref, spinup_ref, prio_ref,
             start_ref, finish_ref, ready_ref, n_epochs_ref,
             *, T: int, V: int, max_pes: int, epoch_bound: int):
     task_len = task_len_ref[...]                 # (tile, T) f32
@@ -63,6 +76,10 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
     vm_mips = vm_mips_ref[...]                   # (tile, V)
     vm_pes = vm_pes_ref[...]                     # (tile, V)
     is_space = sched_ref[...] != 0               # (tile, 1) policy gate
+    vm_start = vm_start_ref[...]                 # (tile, V) lease open
+    vm_stop = vm_stop_ref[...]                   # (tile, V) lease close
+    spinup = spinup_ref[...]                     # (tile, 1) boot delay
+    prio = prio_ref[...]                         # (tile, T) admission prio
     tile = task_len.shape[0]
 
     vm_onehot = (task_vm[..., None]
@@ -79,6 +96,14 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
 
     def per_vm_sum(per_task):
         return jnp.einsum("stv,st->sv", vm_onehot, per_task)
+
+    # Lease admission windows (DESIGN.md §8), gathered per task with the
+    # exact f32 ops the engine's _epoch_setup uses (one-hot gathers are
+    # exact; vm_stop carries the _BIG stand-in, never inf — 0 * inf would
+    # NaN these einsums).  Static fleets make every use below a bitwise
+    # identity with the pre-elastic kernel.
+    avail_t = to_task(vm_start + spinup)         # (tile, T)
+    close_t = to_task(vm_stop)                   # (tile, T)
 
     state = (
         jnp.zeros((tile,), jnp.float32),                 # time
@@ -113,11 +138,17 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
                         time[:, None] + rem / jnp.maximum(r, 1e-30), _BIG)
         not_started = valid & ~running & (finish >= _BIG / 2) \
             & (start >= _BIG / 2)
+        # lease-aware eligibility: admissible from max(ready, lease open)
+        # — start edges join the next-event min through the candidates —
+        # and only while the event time lands before the lease close
+        # (candidates at/past it are stranded and define no event).
+        elig = jnp.maximum(ready, avail_t)
         # space-shared: pending tasks only define arrival events while a
         # PE slot is free; otherwise a completion epoch admits them.
         has_slot = (task_pes - to_task(n_on_vm)) > 0.5
-        arr = jnp.where(not_started & (~is_space | has_slot),
-                        jnp.maximum(ready, time[:, None]), _BIG)
+        cand_t = jnp.maximum(elig, time[:, None])
+        arr = jnp.where(not_started & (~is_space | has_slot)
+                        & (cand_t < close_t), cand_t, _BIG)
         t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
         live = t_next < _BIG / 2
         tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
@@ -140,24 +171,32 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         ready = jnp.where(is_red & phase_done[:, None],
                           (t_next + shuffle[:, 0])[:, None], ready)
 
-        # arrivals: time-shared starts every ready task; space-shared
-        # admits the (ready, index)-first eligible tasks into the PE slots
-        # left free after this epoch's completions.  Instead of ranking
-        # through a T×T priority matrix, extract per-VM minima max_pes
-        # times: the task picked at scan step s has per-VM rank s, and is
-        # admitted iff s < free slots on its VM — the same set the rank
-        # formulation admits.
+        # arrivals: time-shared starts every admissible task; space-shared
+        # admits the (priority desc, eligible time, index)-first waiting
+        # tasks into the PE slots left free after this epoch's
+        # completions.  Instead of ranking through a T×T priority matrix,
+        # extract per-VM lexicographic minima max_pes times: the task
+        # picked at scan step s has per-VM rank s, and is admitted iff
+        # s < free slots on its VM — the same set the engine's rank
+        # formulation admits.  The admission key is (prio, elig, idx);
+        # all-zero priorities collapse the first stage to a no-op
+        # bitwise, and a static fleet makes elig == ready.
         eligible = live[:, None] & not_started \
-            & (ready <= (t_next + tie)[:, None])
+            & (elig <= (t_next + tie)[:, None]) \
+            & (t_next[:, None] < close_t)
         free_v = vm_pes - (n_on_vm - per_vm_sum(done_now.astype(jnp.float32)))
         free_after = to_task(free_v)
         admit = jnp.zeros_like(eligible)
         remaining = eligible
         for s in range(max_pes):
-            ready_m = jnp.where(remaining, ready, _BIG)
-            min_ready_v = jnp.min(
-                jnp.where(onehot_b, ready_m[..., None], _BIG), axis=1)
-            cand = remaining & (ready_m == to_task(min_ready_v))
+            prio_m = jnp.where(remaining, prio, -_BIG)
+            max_prio_v = jnp.max(
+                jnp.where(onehot_b, prio_m[..., None], -_BIG), axis=1)
+            top = remaining & (prio_m == to_task(max_prio_v))
+            elig_m = jnp.where(top, elig, _BIG)
+            min_elig_v = jnp.min(
+                jnp.where(onehot_b, elig_m[..., None], _BIG), axis=1)
+            cand = top & (elig_m == to_task(min_elig_v))
             idx_m = jnp.where(cand, idx, T)
             min_idx_v = jnp.min(
                 jnp.where(onehot_b, idx_m[..., None], T), axis=1)
@@ -183,13 +222,19 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
 @functools.partial(jax.jit,
                    static_argnames=("tile", "interpret", "max_pes"))
 def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
-             vm_mips, vm_pes, sched_policy=None, *, tile: int = 64,
+             vm_mips, vm_pes, sched_policy=None, vm_start=None,
+             vm_stop=None, spinup=None, prio=None, *, tile: int = 64,
              max_pes: int = 8, interpret: bool = True):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
     shuffle: (N,1) f32; vm_mips/vm_pes: (N,V) f32; sched_policy: (N,1) i32
     (0 time-shared | 1 space-shared; defaults to all time-shared).
+    Elasticity lane data (DESIGN.md §8): vm_start/vm_stop: (N,V) f32 lease
+    windows (stop carries the 1e30 +inf stand-in, never ``inf``); spinup:
+    (N,1) f32; prio: (N,T) f32 space-shared admission priorities — the
+    defaults (static fleet, zero priorities) reproduce the pre-elastic
+    schedule bit for bit.
     ``max_pes`` must be >= the largest per-VM PE count in the batch (it
     bounds the static admission scan); ``tile`` lanes share one early-exit
     epoch loop.  Returns (start, finish, ready, n_epochs): three (N,T) f32
@@ -199,6 +244,14 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     V = vm_mips.shape[1]
     if sched_policy is None:
         sched_policy = jnp.zeros((N, 1), jnp.int32)
+    if vm_start is None:
+        vm_start = jnp.zeros((N, V), jnp.float32)
+    if vm_stop is None:
+        vm_stop = jnp.full((N, V), _BIG, jnp.float32)
+    if spinup is None:
+        spinup = jnp.zeros((N, 1), jnp.float32)
+    if prio is None:
+        prio = jnp.zeros((N, T), jnp.float32)
     tile = min(tile, N)
     while N % tile:
         tile //= 2
@@ -215,7 +268,7 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
                           epoch_bound=2 * T + 2),
         grid=grid,
         in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
-                  spec_v, spec_v, spec_1],
+                  spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t],
         out_specs=(spec_t, spec_t, spec_t, spec_1),
         out_shape=(jax.ShapeDtypeStruct((N, T), jnp.float32),
                    jax.ShapeDtypeStruct((N, T), jnp.float32),
@@ -223,5 +276,5 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
                    jax.ShapeDtypeStruct((N, 1), jnp.int32)),
         interpret=interpret,
     )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes,
-      sched_policy)
+      sched_policy, vm_start, vm_stop, spinup, prio)
     return start, finish, ready, n_epochs[:, 0]

@@ -106,6 +106,12 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         pad(batch.vm_mips.astype(jnp.float32)),
         pad(batch.vm_pes.astype(jnp.float32)),
         pad(batch.sched_policy.astype(jnp.int32)[:, None]),
+        # elasticity lane data (DESIGN.md §8) — pad lanes hold no valid
+        # tasks, so their zero lease windows never define events
+        pad(batch.vm_start.astype(jnp.float32)),
+        pad(batch.vm_stop.astype(jnp.float32)),
+        pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
+        pad(batch.task_prio.astype(jnp.float32)),
         tile=tile, max_pes=max_pes, interpret=interpret)
     start, finish, ready, n_epochs = (x[:N] for x in
                                       (start, finish, ready, n_epochs))

@@ -1,0 +1,503 @@
+"""Dynamic cloud elasticity (DESIGN.md §8): VM lease windows, arrival
+processes, pay-as-you-go accounting — cross-layer parity in the repo's
+usual pattern:
+
+* **degenerate static-fleet parity** — explicit ``vm_start=0`` /
+  ``vm_stop=inf`` / ``spinup=0`` / zero-priority columns must be
+  *bitwise* identical to a plan that never mentions elasticity, across
+  the bucketed, chunked and pallas execution modes (every availability
+  op is an identity there);
+* **seeded elastic grids** — lease windows, spinup, arrival instants and
+  priorities as data: oracle bindings bitwise, oracle times to the
+  f32-engine tolerance (rtol 2e-4), and engine ↔ batched early-exit ↔
+  ``mr_epoch`` megakernel **bitwise** — including lanes with stranded
+  tasks (lease closed before admission), which every array layer must
+  agree on exactly;
+* the acceptance property: shrinking a lease window (later start,
+  longer spinup) strictly increases ``queue_wait``;
+* pay-as-you-go billing: granularity ceiling, finite leases billed to
+  their declared teardown, open-ended leases billed to the realized
+  finish — cross-checked against the oracle through the one shared
+  ``elasticity.billed_lease`` formula;
+* seeded counter-based arrival processes (Poisson/uniform/burst) and
+  the ``SweepPlan.arrivals`` axis;
+* streaming chunked parquet export (``run(chunk=…, stream_to=…)``)
+  equals the in-memory ``to_table`` rows exactly.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (JOB_MEDIUM, JOB_SMALL, VM_MEDIUM, VM_SMALL,
+                        ArrivalProcess, BindingPolicy, ElasticitySpec,
+                        Scenario, SchedPolicy, elasticity, engine, refsim,
+                        sweep)
+from repro.core.sweep import arrivals, axis, product, zip_
+from repro.kernels.mr_sched import epoch_schedule
+
+_BIG = engine._BIG
+REF_FIELDS = ("avg_exec", "max_exec", "min_exec", "makespan", "delay_time",
+              "vm_cost", "network_cost")
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes: seeded counter-hash streams
+# ---------------------------------------------------------------------------
+
+def test_arrival_times_deterministic_and_seeded():
+    a = elasticity.arrival_times(50, rate=0.01, seed=3)
+    b = elasticity.arrival_times(50, rate=0.01, seed=3)
+    c = elasticity.arrival_times(50, rate=0.01, seed=4)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any(), "seed must matter"
+    assert (np.diff(a) >= 0).all() and (a >= 0).all()
+    # a longer stream extends the same draws (counter-based, no RNG state)
+    np.testing.assert_array_equal(a, elasticity.arrival_times(
+        80, rate=0.01, seed=3)[:50])
+
+
+@pytest.mark.parametrize("process", list(ArrivalProcess))
+def test_arrival_rate_scales_offered_load(process):
+    slow = elasticity.arrival_times(400, rate=0.001, process=process, seed=7)
+    fast = elasticity.arrival_times(400, rate=0.01, process=process, seed=7)
+    # mean inter-arrival ~= 1/rate; 10x the rate -> 10x the density
+    np.testing.assert_allclose(slow[-1] / fast[-1], 10.0, rtol=1e-3)
+    np.testing.assert_allclose(slow[-1] / 400, 1 / 0.001, rtol=0.2)
+
+
+def test_burst_process_clumps_arrivals():
+    t = elasticity.arrival_times(12, rate=0.01, process="burst", burst=4)
+    # groups of 4 share one instant, instants spaced burst/rate apart
+    assert (t.reshape(3, 4) == t.reshape(3, 4)[:, :1]).all()
+    np.testing.assert_allclose(np.diff(t.reshape(3, 4)[:, 0]), 400.0)
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError, match="rate"):
+        elasticity.arrival_times(5, rate=0.0)
+    with pytest.raises(ValueError, match="n >= 1"):
+        elasticity.arrival_times(0, rate=1.0)
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        elasticity.arrival_times(5, rate=1.0, process="fractal")
+    with pytest.raises(ValueError, match="burst"):
+        elasticity.arrival_times(5, rate=1.0, process="burst", burst=0)
+
+
+def test_arrivals_axis_and_plan_method():
+    plan = product(axis("n_vms", (2, 3))).arrivals(6, rate=0.005, seed=2)
+    assert plan.shape == (2, 6)
+    sub = plan.run().select(n_vms=3, arrival=4)
+    want = elasticity.arrival_times(6, rate=0.005, seed=2)[4]
+    solo = product(axis("n_vms", (3,)),
+                   job_submit=float(want)).run()
+    assert sub["makespan"].item() == solo["makespan"].item()
+    # job_submit column carries the exact stream (per n_vms grid row)
+    np.testing.assert_array_equal(
+        plan.params()["job_submit"].reshape(2, 6)[0],
+        elasticity.arrival_times(6, rate=0.005, seed=2))
+
+
+def test_arrivals_rate_sweep_one_flattened_dimension():
+    dim = arrivals(5, rate=[0.001, 0.01], process="uniform", seed=9)
+    assert dim.names == ("arrival_rate", "arrival")
+    assert len(dim) == 10
+    res = product(dim).run()
+    slow = res.select(arrival_rate=0.001)
+    assert slow.shape == (5,)
+    # offered load is a real axis: later slow arrivals submit much later
+    fast = res.select(arrival_rate=0.01)
+    assert float(slow["completion"][-1]) > float(fast["completion"][-1])
+
+
+# ---------------------------------------------------------------------------
+# Degenerate static-fleet parity (the PR's hard bit-identity criterion)
+# ---------------------------------------------------------------------------
+
+def _policy_grid():
+    return [
+        zip_(axis("n_maps", (1, 7, 14, 3)), axis("n_vms", (1, 4, 6, 3))),
+        axis("sched_policy", list(SchedPolicy)),
+        axis("binding_policy", [BindingPolicy.ROUND_ROBIN,
+                                BindingPolicy.LEAST_LOADED]),
+    ]
+
+
+def test_degenerate_elastic_columns_bitwise_noop():
+    """vm_start=0, vm_stop=inf, spinup=0, zero priorities: all execution
+    modes must reproduce the elasticity-free plan bit for bit."""
+    plain = product(*_policy_grid())
+    degen = product(*_policy_grid(), vm_start=0.0, vm_stop=math.inf,
+                    spinup_delay=0.0, billing_granularity=1.0,
+                    job_submit=0.0)
+    base = plain.run()
+    for tag, res in {
+        "bucketed": degen.run(),
+        "unbucketed": degen.run(bucket=False),
+        "chunked": degen.run(chunk=7),
+        "pallas": degen.run(backend="pallas"),
+    }.items():
+        for name in base.metric_names:
+            if name == "realized_epochs":
+                continue
+            np.testing.assert_array_equal(base[name], res[name],
+                                          err_msg=f"{name} ({tag})")
+
+
+def test_degenerate_encoding_matches_from_scenario():
+    """Default Scenario encoding carries the degenerate window and zero
+    priorities; an explicit per-VM lease in the spec round-trips through
+    both encoders bit for bit."""
+    arrs = engine.from_scenario(Scenario())
+    assert np.asarray(arrs.vm_start).tolist() == [0.0] * 3
+    assert np.asarray(arrs.vm_stop).tolist() == [np.float32(_BIG)] * 3
+    assert float(arrs.spinup_delay) == 0.0
+    assert np.asarray(arrs.task_prio).tolist() == [0.0, 0.0]
+    vms = (dataclasses.replace(VM_SMALL, lease_start=100.0, lease_stop=9e3),
+           dataclasses.replace(VM_SMALL, lease_start=0.0),
+           VM_SMALL)
+    sc = Scenario(vms=vms, jobs=(dataclasses.replace(JOB_SMALL, n_maps=4),),
+                  elasticity=ElasticitySpec(spinup_delay=30.0,
+                                            billing_granularity=60.0))
+    host = engine.from_scenario(sc, pad_tasks=5, pad_vms=4)
+    dev = sweep.encode_cell(
+        n_maps=4, n_reduces=1, n_vms=3, vm_mips=250.0, vm_pes=1.0,
+        vm_cost=1.0, job_length=JOB_SMALL.length_mi,
+        job_data=JOB_SMALL.data_mb, pad_tasks=5, pad_vms=4,
+        vm_start=np.array([100.0, 0.0, 0.0, 0.0], np.float32),
+        vm_stop=np.array([9e3, _BIG, _BIG, _BIG], np.float32),
+        spinup_delay=30.0, billing_granularity=60.0)
+    for f in engine.ScenarioArrays._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(host, f), np.float32),
+            np.asarray(getattr(dev, f), np.float32), err_msg=f"field {f}")
+
+
+# ---------------------------------------------------------------------------
+# Seeded elastic grids: refsim <-> engine <-> batched <-> mr_epoch parity
+# ---------------------------------------------------------------------------
+
+def _elastic_scenario(seed: int, sp: SchedPolicy) -> Scenario:
+    """Random leased fleet exercising every elastic knob without stranding
+    (stops are generous so the oracle's inf and the engine's _BIG never
+    have to be compared against each other)."""
+    rng = np.random.default_rng(seed)
+    vms = []
+    for _ in range(int(rng.integers(2, 7))):
+        base = VM_SMALL if rng.random() < 0.5 else VM_MEDIUM
+        start = float(rng.choice([0.0, 400.0, 1500.0]))
+        stop = float(rng.choice([start + 30000.0, math.inf]))
+        vms.append(dataclasses.replace(base, lease_start=start,
+                                       lease_stop=stop))
+    job = dataclasses.replace(
+        JOB_SMALL if rng.random() < 0.5 else JOB_MEDIUM,
+        n_maps=int(rng.integers(3, 13)), n_reduces=int(rng.integers(1, 3)),
+        submit_time=float(rng.choice([0.0, 250.0])),
+        priority=float(rng.integers(0, 3)))
+    return Scenario(
+        vms=tuple(vms), jobs=(job,),
+        elasticity=ElasticitySpec(
+            spinup_delay=float(rng.choice([0.0, 90.0])),
+            billing_granularity=float(rng.choice([1.0, 3600.0]))),
+        sched_policy=sp,
+        binding_policy=BindingPolicy(rng.integers(0, 3)))
+
+
+ELASTIC_COMBOS = [(s, sp) for s in range(4) for sp in SchedPolicy]
+
+
+@pytest.mark.parametrize("seed,sp", ELASTIC_COMBOS,
+                         ids=[f"s{s}-{sp.name}" for s, sp in ELASTIC_COMBOS])
+def test_elastic_parity_refsim_engine_pallas(seed, sp):
+    sc = _elastic_scenario(200 + seed, sp)
+    ref = refsim.simulate(sc)
+    assert all(t.finish < math.inf for t in ref.tasks), "generator stranded"
+    arrs = engine.from_scenario(sc, pad_tasks=15, pad_vms=7)
+
+    np.testing.assert_array_equal(
+        [t.vm for t in ref.tasks],
+        np.asarray(arrs.task_vm)[:sc.total_tasks()])
+
+    got = engine._simulate_jit(arrs)
+    for f in REF_FIELDS:
+        np.testing.assert_allclose(
+            float(getattr(got, f)[0]), getattr(ref.jobs[0], f),
+            rtol=2e-4, atol=1e-2, err_msg=f"{f} (seed {seed})")
+    # queue_wait: oracle wait (start - data readiness) == engine metric
+    out = engine.simulate_arrays(arrs)
+    sm = engine.scenario_metrics(arrs, out)
+    ref_wait = np.mean([t.start - t.ready for t in ref.tasks])
+    np.testing.assert_allclose(float(sm.queue_wait), ref_wait,
+                               rtol=2e-4, atol=1e-2)
+
+    # engine <-> batched early exit <-> mr_epoch megakernel: bitwise
+    batch = sweep.stack_scenarios(
+        [sc, sc.replace(sched_policy=SchedPolicy.TIME_SHARED)])
+    lane = jax.jit(jax.vmap(engine.simulate_arrays))(batch)
+    both, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    kern = epoch_schedule(batch, tile=2, interpret=True)
+    for f in lane._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(both, f)),
+                                      err_msg=f"batched {f}")
+        np.testing.assert_array_equal(np.asarray(getattr(lane, f)),
+                                      np.asarray(getattr(kern, f)),
+                                      err_msg=f"pallas {f}")
+
+
+def test_elastic_mixed_grid_engine_vs_pallas_bitwise():
+    """A random device-side grid mixing policies, storage AND elasticity —
+    including deliberately stranding lease windows — through grid_arrays:
+    batched engine == megakernel, bitwise."""
+    n = 48
+    rng = np.random.default_rng(23)
+    params = dict(
+        n_maps=rng.integers(1, 16, n).astype(np.int32),
+        n_reduces=rng.integers(1, 3, n).astype(np.int32),
+        n_vms=rng.integers(1, 9, n).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0], n).astype(np.float32),
+        vm_pes=rng.choice([1.0, 2.0], n).astype(np.float32),
+        vm_cost=np.ones(n, np.float32),
+        job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
+        job_submit=rng.choice([0.0, 400.0], n).astype(np.float32),
+        sched_policy=rng.integers(0, 2, n).astype(np.int32),
+        binding_policy=rng.integers(0, 3, n).astype(np.int32),
+        spinup_delay=rng.choice([0.0, 120.0], n).astype(np.float32),
+        vm_start=rng.choice([0.0, 800.0], (n, 8)).astype(np.float32),
+        # some stop values close *before* some tasks become eligible:
+        # stranded lanes must agree bitwise across the array layers too
+        vm_stop=rng.choice([900.0, 40000.0, _BIG], (n, 8)
+                           ).astype(np.float32),
+        task_prio=rng.integers(0, 3, (n, 18)).astype(np.float32),
+    )
+    batch = sweep.grid_arrays(params, pad_tasks=18, pad_vms=8)
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    out = epoch_schedule(batch, tile=8, interpret=True)
+    stranded = np.asarray(batch.task_valid) & (np.asarray(eng.finish)
+                                               >= _BIG / 2)
+    assert stranded.any(), "grid should exercise stranding"
+    for f in eng._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(eng, f)),
+                                      np.asarray(getattr(out, f)),
+                                      err_msg=f)
+
+
+def test_stranded_semantics_refsim_matches_engine():
+    """A lease that closes before a queued task can be admitted strands it
+    in *both* simulators: the oracle leaves finish=inf, the engine leaves
+    the _BIG stand-in, and the stranded sets are identical."""
+    vms = (dataclasses.replace(VM_SMALL, lease_stop=900.0),
+           dataclasses.replace(VM_SMALL, lease_stop=600.0))
+    job = dataclasses.replace(JOB_SMALL, n_maps=6, n_reduces=1)
+    sc = Scenario(vms=vms, jobs=(job,),
+                  sched_policy=SchedPolicy.SPACE_SHARED)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs)
+    ref_stranded = [t.finish == math.inf for t in ref.tasks]
+    eng_stranded = (np.asarray(out.finish) >= _BIG / 2)[
+        :sc.total_tasks()].tolist()
+    assert ref_stranded == eng_stranded
+    assert any(ref_stranded), "scenario should strand its reduce"
+    # strict close: a task eligible exactly at the stop is NOT admitted
+    sc0 = Scenario(vms=(dataclasses.replace(VM_SMALL, lease_stop=0.0),),
+                   jobs=(JOB_SMALL,),
+                   network=dataclasses.replace(sc.network, enabled=False))
+    assert refsim.simulate(sc0).tasks[0].finish == math.inf
+    out0 = engine.simulate_arrays(engine.from_scenario(sc0))
+    assert float(np.asarray(out0.finish)[0]) >= _BIG / 2
+
+
+def test_lease_start_edge_is_an_event():
+    """A map ready before its VM's lease opens starts exactly at the
+    lease-open edge (start + spinup) — in both simulators."""
+    vms = (dataclasses.replace(VM_SMALL, lease_start=2000.0),) * 2
+    sc = Scenario(vms=vms, jobs=(JOB_SMALL,),
+                  elasticity=ElasticitySpec(spinup_delay=500.0))
+    ref = refsim.simulate(sc)
+    assert ref.tasks[0].start == 2500.0
+    out = engine.simulate_arrays(engine.from_scenario(sc))
+    assert float(np.asarray(out.start)[0]) == 2500.0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: shrinking the lease window strictly increases queue_wait
+# ---------------------------------------------------------------------------
+
+def test_shrinking_lease_strictly_increases_queue_wait():
+    starts = (0.0, 600.0, 1200.0, 2400.0)
+    res = product(axis("vm_start", starts),
+                  n_maps=8, n_reduces=2, n_vms=4).run()
+    qw = res["queue_wait"]
+    assert (np.diff(qw) > 0).all(), qw
+    assert qw[0] == 0.0     # time-shared static fleet: no waiting at all
+    # spinup delay shrinks the window from the same edge
+    res2 = product(axis("spinup_delay", (0.0, 300.0, 900.0)),
+                   vm_start=600.0, n_maps=8, n_reduces=2, n_vms=4).run()
+    assert (np.diff(res2["queue_wait"]) > 0).all()
+    # and the wait shows up in completion too (admission really delayed)
+    assert float(res["completion"][-1]) > float(res["completion"][0])
+
+
+# ---------------------------------------------------------------------------
+# Pay-as-you-go billing
+# ---------------------------------------------------------------------------
+
+def test_billed_cost_granularity_and_open_lease():
+    res = product(axis("billing_granularity", (1.0, 3600.0)),
+                  n_maps=4, n_vms=3, vm_cost=2.0).run()
+    fin = float(res["finish_time"][0])
+    # open-ended lease: billed to the realized finish, per VM
+    np.testing.assert_allclose(res["billed_cost"][0],
+                               3 * 2.0 * np.ceil(fin), rtol=1e-6)
+    np.testing.assert_allclose(
+        res["billed_cost"][1],
+        3 * 2.0 * 3600.0 * np.ceil(fin / 3600.0), rtol=1e-6)
+    # coarser granularity can only bill more
+    assert res["billed_cost"][1] >= res["billed_cost"][0]
+
+
+def test_billed_cost_finite_lease_bills_declared_window():
+    """A finite lease bills its declared window even when the workload
+    finishes early — the pay-as-you-go trade the smart_city Part-4
+    right-sizing sweep optimizes."""
+    res = product(axis("vm_stop", (20000.0, 50000.0)),
+                  n_maps=4, n_vms=2).run()
+    assert float(res["finish_time"].max()) < 20000.0
+    np.testing.assert_allclose(res["billed_cost"], [2 * 20000.0,
+                                                    2 * 50000.0])
+    # vm_busy_fraction scales inversely with the idle lease tail
+    assert res["vm_busy_fraction"][0] > res["vm_busy_fraction"][1]
+
+
+def test_billed_lease_shared_formula_matches_oracle():
+    sc = _elastic_scenario(321, SchedPolicy.SPACE_SHARED)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc)
+    sm = engine.scenario_metrics(arrs, engine.simulate_arrays(arrs))
+    el = sc.elasticity
+    busy_end = np.zeros(len(sc.vms))
+    for t in ref.tasks:
+        busy_end[t.vm] = max(busy_end[t.vm], t.finish)
+    billed = elasticity.billed_lease(
+        np.array([v.lease_start for v in sc.vms]),
+        np.array([elasticity.encode_lease_stop(v.lease_stop)
+                  for v in sc.vms]),
+        busy_end, ref.finish_time, el.billing_granularity)
+    want = float(np.sum(billed * [v.cost_per_sec for v in sc.vms]))
+    np.testing.assert_allclose(float(sm.billed_cost), want, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware admission rank (satellite: first priority slice)
+# ---------------------------------------------------------------------------
+
+def test_priority_reorders_space_shared_admission():
+    """One 1-PE VM, 4 queued maps: the task_prio vector overrides the
+    (ready, index) order — highest priority admitted first."""
+    prio = np.zeros(5, np.float32)
+    prio[3] = 2.0       # map 3 jumps the queue
+    prio[2] = 1.0
+    base = dict(n_maps=4, n_reduces=1, n_vms=1,
+                sched_policy=SchedPolicy.SPACE_SHARED)
+    plain = product(**base).run()
+    boosted = product(axis("task_prio", [prio]), **base).run()
+    assert float(boosted["makespan"].item()) == float(plain["makespan"])
+    # the boosted cell admits map 3 before maps 0-2 finished: its exec
+    # window starts first among the equal-ready maps
+    b = sweep.grid_arrays(dict(task_prio=prio[None],
+                               n_maps=np.array([4], np.int32),
+                               n_reduces=np.array([1], np.int32),
+                               n_vms=np.array([1], np.int32),
+                               vm_mips=np.array([250.0], np.float32),
+                               vm_pes=np.array([1.0], np.float32),
+                               vm_cost=np.array([1.0], np.float32),
+                               job_length=np.array([362880.0], np.float32),
+                               job_data=np.array([2e5], np.float32),
+                               sched_policy=np.array(
+                                   [int(SchedPolicy.SPACE_SHARED)],
+                                   np.int32)),
+                          pad_tasks=5, pad_vms=1)
+    out = engine.simulate_arrays(jax.tree.map(lambda x: x[0], b))
+    starts = np.asarray(out.start)[:4]
+    assert starts[3] == starts.min()
+    assert starts[2] == np.sort(starts)[1]
+    # oracle agrees through job-level priorities: the high-priority job's
+    # tasks win the shared VM's queue although submitted second
+    lo = dataclasses.replace(JOB_SMALL, n_maps=3, priority=0.0)
+    hi = dataclasses.replace(JOB_SMALL, n_maps=3, priority=5.0)
+    sc = Scenario(vms=(VM_SMALL,), jobs=(lo, hi),
+                  sched_policy=SchedPolicy.SPACE_SHARED)
+    ref = refsim.simulate(sc)
+    hi_starts = [t.start for t in ref.tasks if t.job == 1 and not
+                 t.is_reduce]
+    lo_starts = [t.start for t in ref.tasks if t.job == 0 and not
+                 t.is_reduce]
+    assert max(hi_starts) < max(lo_starts)
+    got = engine._simulate_jit(engine.from_scenario(sc))
+    for f in REF_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, f))[:2],
+            [getattr(ref.jobs[0], f), getattr(ref.jobs[1], f)],
+            rtol=2e-4, atol=1e-2, err_msg=f)
+
+
+def test_zero_priority_column_is_bitwise_noop():
+    plan = product(axis("n_maps", (3, 9)), axis("sched_policy",
+                                                list(SchedPolicy)), n_vms=2)
+    withp = product(axis("n_maps", (3, 9)),
+                    axis("sched_policy", list(SchedPolicy)), n_vms=2,
+                    task_prio=np.zeros(10, np.float32))
+    a, b = plan.run(), withp.run()
+    for name in a.metric_names:
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Streaming chunked parquet export (satellite: ROADMAP arrow item)
+# ---------------------------------------------------------------------------
+
+def test_streaming_export_equals_in_memory_table(tmp_path):
+    pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    plan = product(axis("n_maps", (1, 5, 9)),
+                   axis("vm_stop", (30000.0, math.inf)),
+                   axis("sched_policy", list(SchedPolicy)),
+                   n_vms=3, spinup_delay=60.0)
+    path = tmp_path / "grid.parquet"
+    info = plan.run(chunk=5, stream_to=path)
+    assert (info.n_cells, info.n_rows) == (12, 12) and info.n_chunks == 3
+    disk = pq.read_table(path)
+    mem = plan.run().to_table()
+    assert disk.column_names == list(mem)
+    for name, col in mem.items():
+        if name == "realized_epochs":   # schedule-dependent by design
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(disk[name]), np.asarray(col), err_msg=name)
+
+
+def test_streaming_requires_chunk(tmp_path):
+    plan = product(axis("n_maps", (1, 2)))
+    with pytest.raises(ValueError, match="chunk"):
+        plan.run(stream_to=tmp_path / "x.parquet")
+
+
+# ---------------------------------------------------------------------------
+# Plan-build validation for the elastic parameter columns
+# ---------------------------------------------------------------------------
+
+def test_elastic_param_validation():
+    with pytest.raises(ValueError, match="billing_granularity"):
+        product(axis("billing_granularity", (0.0,))).params()
+    with pytest.raises(ValueError, match="spinup_delay"):
+        product(axis("spinup_delay", (-5.0,))).params()
+    with pytest.raises(ValueError, match="job_submit"):
+        product(axis("job_submit", (-1.0,))).params()
+    # per-VM lease vectors ride the 'vm_*' column machinery
+    cols = product(axis("vm_start", [np.array([0.0, 100.0])]),
+                   n_vms=2).params()
+    assert cols["vm_start"].shape == (1, 2)
