@@ -1,9 +1,10 @@
 """CI benchmark smoke gate: ``sweep_throughput`` at b64 on the CPU
 (interpret-class) path — the plain grid, the storage-subsystem LOCALITY
 grid (skewed placement, DESIGN.md §7) AND the elastic dynamic-fleet grid
-(arrivals + lease windows, DESIGN.md §8) — failing on crash or on
-a >25% throughput regression against the checked-in ``BENCH_sweep.json``
-baseline rows.
+(arrivals + lease windows, DESIGN.md §8) AND the tail-heavy compacted
+grid (sparse active-lane compaction, DESIGN.md §9) — failing on crash or
+on a >25% throughput regression against the checked-in
+``BENCH_sweep.json`` baseline rows.
 
 Absolute wall times are not comparable across machines, so the baseline's
 ``calibration_us`` (a fixed jitted micro-workload timed when the baseline
@@ -27,24 +28,34 @@ import numpy as np
 
 from benchmarks.sweep_throughput import _random_plan, calibration_us
 
-GATED = (          # (baseline row name, plan kwargs)
-    ("sweep_throughput_b64", {}),
-    ("sweep_throughput_locality_b64", {"locality": True}),
-    ("sweep_throughput_elastic_b64", {"elastic": True}),
+GATED = (          # (baseline row name, plan kwargs, run kwargs)
+    ("sweep_throughput_b64", {}, {}),
+    ("sweep_throughput_locality_b64", {"locality": True}, {}),
+    ("sweep_throughput_elastic_b64", {"elastic": True}, {}),
+    # the sparse-compaction row (DESIGN.md §9): tail-heavy grid through
+    # the compacted driver with the measured-cost auto interval — gates
+    # both the compact host loop and the cost-model calibration path
+    ("sweep_throughput_tailheavy_compact_b64", {"tailheavy": True},
+     {"compact": "auto"}),
 )
 
+# the tail-heavy grid must actually realize a deep tail, else the row
+# gates nothing (the ISSUE's floor for a meaningful compaction workload)
+MIN_TAIL_EPOCHS = 20
 
-def _min_of_reps(reps=7, **plan_kw):
+
+def _min_of_reps(reps=7, run_kw=None, **plan_kw):
     """b64 us/call as a min over reps: the mean-of-3 the baseline records
     is fine for trend tracking, but a pass/fail gate on a shared CI runner
     needs the noise floor, not the noise."""
+    run_kw = run_kw or {}
     # rng(64): the exact grid the baseline's b64 rows record (seed == n)
     plan = _random_plan(64, np.random.default_rng(64), **plan_kw)
-    res = plan.run()                               # compile + warm caches
+    res = plan.run(**run_kw)                       # compile + warm caches
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        res = plan.run()
+        res = plan.run(**run_kw)
         best = min(best, time.perf_counter() - t0)
     return best * 1e6, int(res["realized_epochs"].max())
 
@@ -60,7 +71,7 @@ def main() -> int:
     scale = (local_calib / base_calib) if base_calib > 0 else 1.0
 
     failed = False
-    for name, plan_kw in GATED:
+    for name, plan_kw, run_kw in GATED:
         base_row = next((r for r in baseline["rows"] if r["name"] == name),
                         None)
         if base_row is None:
@@ -73,7 +84,7 @@ def main() -> int:
         # made the budget depend on which way calibration drift pointed)
         base_us = float(base_row.get("us_per_call_min",
                                      base_row["us_per_call"]))
-        us, realized = _min_of_reps(**plan_kw)
+        us, realized = _min_of_reps(run_kw=run_kw, **plan_kw)
         budget = base_us * scale * (1.0 + tol)
         print(f"{name}: {us:.1f} us/call min-of-7 "
               f"({64 / us * 1e6:.0f}_scen/s, realized epochs {realized}); "
@@ -83,6 +94,11 @@ def main() -> int:
         if not np.isfinite(us) or us > budget:
             print("FAIL: benchmark smoke regression "
                   f"({name}: {us:.1f} > {budget:.1f} us/call)")
+            failed = True
+        if plan_kw.get("tailheavy") and realized < MIN_TAIL_EPOCHS:
+            print(f"FAIL: tail-heavy grid realized only {realized} epochs "
+                  f"(< {MIN_TAIL_EPOCHS}) — the compaction row is not "
+                  "exercising a deep tail")
             failed = True
     if failed:
         return 1

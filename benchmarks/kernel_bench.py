@@ -137,13 +137,64 @@ def mr_epoch_tile_rows(tiles=(8, 16, 32, 64, 128), n=256, reps=3):
     return rows, best
 
 
+def mr_epoch_compact_tile_rows(tiles=(8, 16, 32, 64), n=64, reps=3):
+    """Sweep ``mr_epoch`` tiles over the compacted batch shapes the sparse
+    host loop actually dispatches (DESIGN.md §9).
+
+    The workload is the tail-heavy grid's straggler residue: ``n`` lanes
+    at T=41 whose 1/8 stragglers run ~2·T epochs — the pow2 shape the
+    compacted driver re-tiles and re-dispatches after each gather.  The
+    timing drives :func:`epoch_schedule_compact` end to end (host loop,
+    gather/scatter and chunked kernel included), so the winner is the
+    tile the compact path should use at this lane count.  On CPU these
+    are interpret-mode numbers (rank, not TPU wall time); on a real TPU
+    the ``interpret=None`` default lowers the kernel natively
+    (``interpret=False``) and the same sweep re-ranks the tiles.
+    """
+    import numpy as np
+
+    from repro.core import sweep
+    from repro.kernels.mr_sched import epoch_schedule_compact
+    rng = np.random.default_rng(1)
+    strag = rng.random(n) < 1.0 / 8.0
+    strag[0] = True
+    params = dict(
+        n_maps=np.full(n, 40, np.int32),
+        n_reduces=np.ones(n, np.int32),
+        n_vms=np.where(strag, 1, rng.integers(6, 10, n)).astype(np.int32),
+        vm_mips=rng.choice([250.0, 500.0, 1000.0], n).astype(np.float32),
+        vm_pes=np.where(strag, 1.0,
+                        rng.choice([2.0, 4.0], n)).astype(np.float32),
+        vm_cost=np.ones(n, np.float32),
+        job_length=rng.choice([362880.0, 725760.0], n).astype(np.float32),
+        job_data=rng.choice([2e5, 4e5], n).astype(np.float32),
+        sched_policy=np.ones(n, np.int32),
+        binding_policy=np.zeros(n, np.int32),
+    )
+    batch = sweep.grid_arrays(params, pad_tasks=41, pad_vms=9)
+    rows, timings = [], {}
+    for tile in tiles:
+        def run(b, t=tile):
+            out, _ = epoch_schedule_compact(b, k=8, tile=t)
+            return out.finish
+        us = _time(run, batch, reps=reps)
+        timings[tile] = us
+        rows.append((f"kernel_mr_epoch_compact_tile{tile}", us,
+                     f"{n / us * 1e6:.0f}_scen/s"))
+    best = min(timings, key=timings.get)
+    rows.append(("kernel_mr_epoch_compact_best_tile", timings[best],
+                 str(best)))
+    return rows, best
+
+
 def all_rows():
     return flash_rows() + wkv_rows() + mr_sched_rows()
 
 
 def main() -> None:
     tile_rows, best_tile = mr_epoch_tile_rows()
-    rows = mr_sched_rows() + tile_rows
+    compact_rows, best_tile_compact = mr_epoch_compact_tile_rows()
+    rows = mr_sched_rows() + tile_rows + compact_rows
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
     payload = {
         "benchmark": "mr_sched/mr_epoch kernel micro-benchmarks",
@@ -155,6 +206,7 @@ def main() -> None:
             "platform": platform.platform(),
             "interpret": jax.default_backend() != "tpu",
             "best_tile": best_tile,
+            "best_tile_compact": best_tile_compact,
         },
         "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                  for n, us, d in rows],

@@ -61,10 +61,12 @@ EPOCH_BOUND = 2 * 21 + 2   # the pre-adaptive engine's static bound at T=21
 LOC_PLACEMENT = int(Placement.SKEWED)   # locality rows' placement variant
 LOC_REPLICATION = "1-3"                 # … and replication-factor range
 ELASTIC_RATE = 0.002                    # elastic rows' Poisson arrival rate
+TAIL_MAPS = 40                          # tailheavy rows' uniform map count
+TAIL_PAD = TAIL_MAPS + 1                # … and their task padding (T=41)
 
 
 def _random_cols(n, rng, mixed_policies=False, locality=False,
-                 elastic=False):
+                 elastic=False, tailheavy=False):
     cols = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
         n_reduces=np.ones(n, np.int32),
@@ -108,19 +110,44 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
         cols["spinup_delay"] = rng.choice([0.0, 60.0], n).astype(np.float32)
         cols["task_prio"] = rng.integers(0, 3, (n, 21)).astype(np.float32)
         cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+    if tailheavy:
+        # the sparse-compaction workload (DESIGN.md §9): every lane runs
+        # the SAME 40-map space-shared shape — one policy combo, one
+        # shape, so the static policy/shape bucketing cannot isolate the
+        # tail — but ~1/8 of lanes are stragglers stuck on a single 1-PE
+        # VM: 40 sequential admissions -> ~2·T realized epochs, while
+        # the rest spread their maps over 12-36 PEs and retire within a
+        # few epochs.  The tail is *data-dependent inside one compiled
+        # bucket*, exactly the regime compaction targets: the dense
+        # driver steps all lanes to the last straggler, the compacted
+        # driver steps only the pow2-padded survivors.  Lane 0 is always
+        # a straggler so every batch size realizes >= 20 epochs (the
+        # bench_smoke gate asserts it).
+        strag = rng.random(n) < 1.0 / 8.0
+        strag[0] = True
+        cols["n_maps"] = np.full(n, TAIL_MAPS, np.int32)
+        cols["n_vms"] = np.where(strag, 1,
+                                 rng.integers(6, 10, n)).astype(np.int32)
+        cols["vm_pes"] = np.where(strag, 1.0,
+                                  rng.choice([2.0, 4.0], n)
+                                  ).astype(np.float32)
+        cols["sched_policy"] = np.ones(n, np.int32)
+        cols["binding_policy"] = np.zeros(n, np.int32)
     return cols
 
 
-def _plan_of(cols):
+def _plan_of(cols, pad_tasks=21):
     # one zipped dimension: all columns advance together (a labeled random
     # scenario list, not a cartesian grid)
     plan = product(zip_(*(axis(k, v) for k, v in cols.items())))
-    return plan.replace(pad_tasks=21, pad_vms=9)
+    return plan.replace(pad_tasks=pad_tasks, pad_vms=9)
 
 
 def _random_plan(n, rng, mixed_policies=False, locality=False,
-                 elastic=False):
-    return _plan_of(_random_cols(n, rng, mixed_policies, locality, elastic))
+                 elastic=False, tailheavy=False):
+    return _plan_of(_random_cols(n, rng, mixed_policies, locality, elastic,
+                                 tailheavy),
+                    pad_tasks=TAIL_PAD if tailheavy else 21)
 
 
 def _time_runs(run, reps=7):
@@ -141,6 +168,27 @@ def _time_runs(run, reps=7):
         res = run()
         times.append(time.perf_counter() - t0)
     return sum(times) / reps, min(times), res
+
+
+def _time_ab(run_a, run_b, reps=7):
+    """Min-of-alternating-A/B: interleave the two variants' timed calls so
+    this host's bimodal slow phases hit both sides equally — timing A's
+    seven reps back-to-back and then B's lets one variant land entirely in
+    a fast phase and fabricate a gap.  Returns ``(mean_a, min_a, mean_b,
+    min_b)`` in seconds; the mins are the noise floors the recorded
+    A-vs-B gaps use."""
+    run_a()                                     # compile + warm caches
+    run_b()
+    times_a, times_b = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_a()
+        times_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_b()
+        times_b.append(time.perf_counter() - t0)
+    return (sum(times_a) / reps, min(times_a),
+            sum(times_b) / reps, min(times_b))
 
 
 def throughput_rows(batch_sizes=(64, 512, 2048), reps=7,
@@ -168,6 +216,42 @@ def throughput_rows(batch_sizes=(64, 512, 2048), reps=7,
         rows.append((f"sweep_throughput{tag}_b{n}", dt * 1e6, dt_min * 1e6,
                      f"{n / dt:.0f}_scen/s",
                      int(res["realized_epochs"].max()), meta))
+    return rows
+
+
+def tailheavy_rows(batch_sizes=(64, 2048), reps=7):
+    """Dense vs compacted execution on the tail-heavy grid (DESIGN.md §9).
+
+    The pair of rows per batch size is timed min-of-alternating-A/B
+    (:func:`_time_ab`): A is the dense bucketed ``run()``, B the same plan
+    with ``compact="auto"`` — the auto interval and the bucket boundaries
+    both come from the measured cost model.  The compact row's meta
+    records its ``compaction_gap_vs_dense`` (min-vs-min; negative =
+    compaction is faster)."""
+    from repro.core import costmodel
+    rows = []
+    for n in batch_sizes:
+        plan = _random_plan(n, np.random.default_rng(n), tailheavy=True)
+        res = [None]
+
+        def run_compact(plan=plan, res=res):
+            res[0] = plan.run(compact="auto")
+
+        dt_a, min_a, dt_b, min_b = _time_ab(plan.run, run_compact, reps)
+        realized = int(res[0]["realized_epochs"].max())
+        k_auto = costmodel.default_cost_model().compact_interval(n, TAIL_PAD)
+        tail = f"1/8_stragglers_{TAIL_MAPS}maps_1vm_spaceshared"
+        rows.append((f"sweep_throughput_tailheavy_b{n}", dt_a * 1e6,
+                     min_a * 1e6, f"{n / dt_a:.0f}_scen/s", realized,
+                     {"tail": tail}))
+        rows.append((f"sweep_throughput_tailheavy_compact_b{n}",
+                     dt_b * 1e6, min_b * 1e6, f"{n / dt_b:.0f}_scen/s",
+                     realized,
+                     {"tail": tail,
+                      "compact": "auto", "auto_k": k_auto,
+                      "timing": "min_of_alternating_ab",
+                      "compaction_gap_vs_dense": round(min_b / min_a - 1.0,
+                                                       4)}))
     return rows
 
 
@@ -231,11 +315,16 @@ def all_rows():
     # placement, LOCALITY binding) — what the storage subsystem costs.
     # elastic rows: the same workload as a dynamic fleet (arrivals, lease
     # windows, priorities) — what the elasticity subsystem costs.
+    # tailheavy rows: one compiled shape whose 1/8 straggler lanes run
+    # ~2T epochs while the rest retire early — dense vs compact="auto"
+    # timed alternating-A/B (what sparse compaction buys on the
+    # data-dependent tail it targets).
     return (throughput_rows()
             + throughput_rows(batch_sizes=(2048,), mixed_policies=True)
             + unifpol_rows()
             + throughput_rows(batch_sizes=(64, 2048), locality=True)
-            + throughput_rows(batch_sizes=(64, 2048), elastic=True))
+            + throughput_rows(batch_sizes=(64, 2048), elastic=True)
+            + tailheavy_rows())
 
 
 def main() -> None:
@@ -250,6 +339,9 @@ def main() -> None:
     # plain all-time-shared row would mostly measure the policy-mixing
     # tax PR 3 already quantifies, not elasticity
     ela = by_name["sweep_throughput_elastic_b2048"][1]
+    # compaction gap: noise-floor min vs min on the alternating-A/B pair
+    th_dense = by_name["sweep_throughput_tailheavy_b2048"][2]
+    th_comp = by_name["sweep_throughput_tailheavy_compact_b2048"][2]
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
     payload = {
         "benchmark": "sweep_throughput (SweepPlan.run end-to-end, "
@@ -265,6 +357,9 @@ def main() -> None:
             "mixedpol_gap_vs_unifpol": round(mixed / unif - 1.0, 4),
             "locality_gap_vs_plain": round(loc / plain - 1.0, 4),
             "elastic_gap_vs_mixedpol": round(ela / mixed - 1.0, 4),
+            "compaction_gap_vs_dense": round(th_comp / th_dense - 1.0, 4),
+            "compaction_speedup_tailheavy_b2048": round(th_dense / th_comp,
+                                                        2),
         },
         "rows": [{"name": n, "us_per_call": round(us, 1),
                   "us_per_call_min": round(us_min, 1), "derived": d,
@@ -282,6 +377,8 @@ def main() -> None:
           f"{payload['meta']['locality_gap_vs_plain']:+.1%}")
     print(f"elastic (dynamic fleet) vs mixedpol b2048 gap: "
           f"{payload['meta']['elastic_gap_vs_mixedpol']:+.1%}")
+    print(f"compaction vs dense tailheavy b2048 (min-of-A/B): "
+          f"{payload['meta']['compaction_speedup_tailheavy_b2048']:.2f}x")
     print(f"wrote {out}")
 
 

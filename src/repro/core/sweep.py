@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import costmodel as costmodel_mod
 from . import elasticity as elasticity_mod
 from . import storage as storage_mod
 from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
@@ -57,7 +58,8 @@ from .elasticity import ElasticitySpec, as_arrival_process
 from .engine import (_BIG, JobMetrics, ScenarioArrays, ScenarioMetrics,
                      bind_tasks, from_scenario, job_metrics,
                      scenario_metrics, simulate_arrays,
-                     simulate_batch_arrays)
+                     simulate_batch_arrays, simulate_batch_arrays_compact)
+from .util import pow2_pad, pow2_pads
 from .storage import Placement, StorageSpec, as_placement
 
 _DEFAULT_STORAGE = StorageSpec()    # encode_cell defaults == Scenario's
@@ -684,7 +686,8 @@ class SweepPlan:
 
     def run(self, mesh: jax.sharding.Mesh | None = None,
             chunk: int | None = None, *, bucket: object = "auto",
-            backend: str = "xla", stream_to=None):
+            backend: str = "xla", stream_to=None, compact: object = None,
+            cost_model: "costmodel_mod.CostModel | None" = None):
         """Execute the plan and return a labeled :class:`SweepResult`.
 
         Execution modes (combine with bucketing orthogonally):
@@ -721,6 +724,23 @@ class SweepPlan:
         summary rather than a :class:`SweepResult` (the ROADMAP
         columnar-export item's second slice; needs the optional
         ``pyarrow`` dependency).
+
+        ``compact`` turns on sparse active-lane compaction (DESIGN.md §9):
+        every K epochs the still-active lanes are gathered into a
+        pow2-padded compacted batch, stepped, and scattered back, so a
+        tail-heavy bucket whose last 40 lanes are still running steps 64
+        lanes instead of 2048.  ``compact="auto"`` (or ``True``) derives K
+        from the measured cost model; an int pins K.  Results are
+        bit-identical to the dense path — ``_epoch_step`` is idempotent
+        for finished lanes — including per-lane ``n_epochs`` and the
+        bucket's ``realized_epochs``.  Composes with ``bucket``/``chunk``
+        (compaction runs per bucket resp. per chunk) and with
+        ``backend="pallas"`` (the megakernel re-tiles the compacted
+        batch).  The ``mesh`` path ignores ``compact``: it shards
+        *per-lane* epoch loops with no cross-lane batch coupling, so
+        there is no dense tail to compact away.  ``cost_model`` overrides
+        the per-device measured calibration (pin one for deterministic
+        scheduling decisions across hosts).
         """
         if mesh is not None and chunk is not None:
             raise ValueError("run: pass mesh or chunk, not both")
@@ -733,15 +753,18 @@ class SweepPlan:
             raise ValueError(
                 "run: backend='pallas' is single-device (use chunk=, "
                 "not mesh=)")
+        compact = _check_compact(compact)
         if stream_to is not None:
             if chunk is None:
                 raise ValueError(
                     "run: stream_to= needs chunk= (the streamed write "
                     "appends one chunk of cells at a time)")
-            return self._run_streaming(stream_to, chunk, bucket, backend)
+            return self._run_streaming(stream_to, chunk, bucket, backend,
+                                       compact, cost_model)
         cols, pad_tasks, pad_vms = self._compiled()
         metrics, n_jobs = _execute_grid(cols, self.size, pad_tasks, pad_vms,
-                                        bucket, mesh, chunk, backend)
+                                        bucket, mesh, chunk, backend,
+                                        compact, cost_model)
         shaped = {
             name: (m.reshape(self.shape) if m.ndim == 1 or n_jobs == 1
                    else m.reshape(self.shape + (n_jobs,)))
@@ -750,8 +773,8 @@ class SweepPlan:
                            axis_labels=tuple(d.labels for d in self.dims),
                            metrics=shaped, n_jobs=n_jobs)
 
-    def _run_streaming(self, path, chunk: int, bucket, backend
-                       ) -> "StreamedSweep":
+    def _run_streaming(self, path, chunk: int, bucket, backend,
+                       compact=None, cost=None) -> "StreamedSweep":
         """Chunked execute + parquet append (see :meth:`run`)."""
         try:
             import pyarrow as pa
@@ -772,7 +795,7 @@ class SweepPlan:
                 sub = {k: v[lo:hi] for k, v in cols.items()}
                 metrics, n_jobs = _execute_grid(
                     sub, hi - lo, pad_tasks, pad_vms, bucket, None, None,
-                    backend)
+                    backend, compact, cost)
                 table = pa.table(_long_form_columns(
                     axis_names, axis_labels, shape, metrics, n_jobs,
                     lo, hi))
@@ -788,15 +811,32 @@ class SweepPlan:
                              n_chunks=n_chunks)
 
 
+def _check_compact(compact):
+    """Normalize the ``compact`` knob: None/False off, True -> 'auto',
+    'auto' or a positive int interval pass through."""
+    if compact is None or compact is False:
+        return None
+    if compact is True:
+        return "auto"
+    if compact == "auto" or (isinstance(compact, int) and compact >= 1):
+        return compact
+    raise ValueError(
+        f"run: compact must be None, False, True, 'auto', or an int "
+        f">= 1; got {compact!r}")
+
+
 def _execute_grid(cols: dict[str, np.ndarray], N: int, pad_tasks: int,
-                  pad_vms: int, bucket, mesh, chunk, backend
+                  pad_vms: int, bucket, mesh, chunk, backend,
+                  compact=None, cost=None
                   ) -> tuple[dict[str, np.ndarray], int]:
     """Bucket + simulate ``N`` flattened cells; returns ``(metrics,
     n_jobs)`` with per-job metric columns shaped ``[N, n_jobs]`` and
     per-scenario columns ``[N]`` (callers reshape to grid/table form)."""
-    groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket)
+    if compact is not None and cost is None:
+        cost = costmodel_mod.default_cost_model()
+    groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket, cost)
     parts = [(idx, *_run_cells(gcols, len(idx), tb, vb, statics,
-                               mesh, chunk, backend))
+                               mesh, chunk, backend, compact, cost))
              for idx, gcols, statics, tb, vb in groups]
     n_jobs = int(parts[0][1].makespan.shape[-1])
     metrics: dict[str, np.ndarray] = {}
@@ -842,34 +882,26 @@ def _pad_cells(cols: dict[str, np.ndarray], n: int) -> dict[str, np.ndarray]:
 # Adaptive execution schedule: shape buckets + per-bucket execution
 # ---------------------------------------------------------------------------
 
-def _bucket_pads(need: np.ndarray, cap: int, floor: int = 4) -> np.ndarray:
-    """Per-cell padded size: smallest of {floor, 2·floor, 4·floor, …, cap}
-    that fits (:func:`_pow2_pad` per unique value).  Power-of-two rounding
-    keeps the set of compiled shapes small and stable across
-    differently-composed grids (compile-cache friendly); ``cap`` is the
-    grid-wide max (or the plan's explicit pad override)."""
-    out = np.empty(len(need), np.int64)
-    for v in np.unique(need):
-        out[need == v] = _pow2_pad(int(v), cap, floor)
-    return out
-
-
-def _pow2_pad(need: int, cap: int, floor: int = 4) -> int:
-    b = floor
-    while b < need:
-        b *= 2
-    return min(b, cap)
+# Per-cell padded sizes: smallest of {floor, 2·floor, 4·floor, …, cap}
+# that fits.  Power-of-two rounding keeps the set of compiled shapes small
+# and stable across differently-composed grids (compile-cache friendly);
+# ``cap`` is the grid-wide max (or the plan's explicit pad override).
+# Vectorized in core.util — the measured-cost scorer calls it on every
+# candidate partition, which made the old per-unique-value loop hot.
+_bucket_pads = pow2_pads
+_pow2_pad = pow2_pad
 
 
 def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
-                   bucket) -> list[tuple[np.ndarray, dict[str, np.ndarray],
-                                         dict[str, int] | None, int, int]]:
+                   bucket, cost: "costmodel_mod.CostModel | None" = None
+                   ) -> list[tuple[np.ndarray, dict[str, np.ndarray],
+                                   dict[str, int] | None, int, int]]:
     """Partition grid cells into padded-shape buckets.
 
     Returns ``[(cell_indices, columns, static_params, pad_tasks, pad_vms)]``
     with indices ascending inside every bucket (so scattering results back
-    by index reproduces the unbucketed cell order exactly).  The heuristic
-    (DESIGN.md §6):
+    by index reproduces the unbucketed cell order exactly).  The schedule
+    (DESIGN.md §6, scored since §9 by the measured cost model):
 
     * **policy split** — when the grid mixes ``sched_policy`` /
       ``binding_policy`` values *and* every combination can amortize a
@@ -884,11 +916,14 @@ def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
       base-pinned) is static without any split;
     * **task padding** — ``n_maps + n_reduces`` rounded up to a power of
       two (stable shapes across differently-composed grids), then
-      ascending-size runs are merged until each bucket holds at least
-      ``min_cells = max(256, N // 4)`` cells *and* stands alone only if
-      its padding is at most half the grid cap — many tiny or
-      nearly-max-shape buckets cost more in dispatch than their saved
-      flops, so the schedule prefers a few decisively-smaller buckets;
+      ascending-size runs stand alone exactly when the *measured* cost
+      model says the split pays: the lane-epoch work the run saves by
+      running at its own padding instead of the grid cap
+      (``cost.split_gain_us``) must exceed the one extra fused dispatch
+      the split costs (``cost.dispatch_us``).  This replaces the old
+      static ``min_cells = max(256, N // 4)`` magic number — on a fast
+      device dispatches are cheap and grids shatter into more, tighter
+      buckets; on a slow-dispatch host small runs merge upward;
     * **VM padding** — each bucket's ``n_vms`` max rounded up likewise
       (per-VM / per-task vector columns are sliced to the bucket width;
       entries past a cell's ``n_vms``/task count are ignored by
@@ -901,7 +936,7 @@ def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
     if bucket is not True and bucket != "auto":
         raise ValueError(
             f"run: bucket must be 'auto', True, or False; got {bucket!r}")
-    min_cells = max(256, N // 4)
+    cost = cost or costmodel_mod.default_cost_model()
     need_t = (cols["n_maps"].astype(np.int64)
               + cols["n_reduces"].astype(np.int64))
     need_v = cols["n_vms"].astype(np.int64)
@@ -936,17 +971,28 @@ def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
         done_here: list[np.ndarray] = []
         for t in np.unique(sizes):          # ascending shape runs
             pend.append(cidx[sizes == t])
-            # stand alone only when big enough AND decisively smaller
-            # than the cap (a near-max-shape split saves ~nothing)
-            if sum(map(len, pend)) >= min_cells and 2 * t <= pad_tasks:
+            # stand alone exactly when the modelled lane-epoch saving of
+            # running these cells at pad t instead of the grid cap buys
+            # back the extra dispatch the split costs (near-max-shape
+            # runs never qualify: the gain tends to zero as t -> cap)
+            n_pend = sum(map(len, pend))
+            if cost.split_gain_us(n_pend, int(t), pad_tasks) \
+                    >= cost.dispatch_us:
                 done_here.append(np.sort(np.concatenate(pend)))
                 pend = []
-        if pend:                            # undersized tail: merge upward
+        if pend:                            # tail that never paid alone
             tail = np.concatenate(pend)
-            if done_here and 2 * tb[tail].max() > pad_tasks:
-                pass                        # tail forms the cap bucket
-            elif done_here and len(tail) < min_cells:
-                tail = np.concatenate([done_here.pop(), tail])
+            if done_here:
+                # merging the tail down pulls the previous bucket's cells
+                # UP to the tail's padding — keep the previous bucket
+                # separate iff its own split gain vs the tail pad still
+                # beats a dispatch
+                prev = done_here[-1]
+                t_prev = int(tb[prev].max())
+                t_tail = int(tb[tail].max())
+                if cost.split_gain_us(len(prev), t_prev, t_tail) \
+                        < cost.dispatch_us:
+                    tail = np.concatenate([done_here.pop(), tail])
             done_here.append(np.sort(tail))
         merged.extend(done_here)
 
@@ -1000,14 +1046,46 @@ def _fused_runner(names: tuple[str, ...], pad_tasks: int, pad_vms: int,
     return jax.jit(run)
 
 
+@jax.jit
+def _metrics_batch(batch, out):
+    """Fused metrics pass for the compacted path (its epoch stepping is
+    host-driven, so metrics dispatch separately from simulation)."""
+    return (jax.vmap(job_metrics)(batch, out),
+            jax.vmap(scenario_metrics)(batch, out))
+
+
+def _run_compact(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
+                 statics: dict[str, int] | None, backend: str, k, cost,
+                 max_pes: int):
+    """One compacted-stepping execution of a cell slice (DESIGN.md §9):
+    jitted encode -> host-driven compacted epoch stepping -> jitted
+    metrics.  Encode and metrics stay fused and signature-cached exactly
+    like the dense runner; only the epoch loop leaves jit, because
+    compaction needs host control flow over the active-lane count (XLA
+    shapes are static)."""
+    batch = grid_arrays(cols, pad_tasks=pad_tasks, pad_vms=pad_vms,
+                        static_params=statics)
+    if backend == "pallas":
+        from repro.kernels.mr_sched import \
+            epoch_schedule_compact  # lazy: ref.py cycle
+        out, realized = epoch_schedule_compact(batch, k=k, max_pes=max_pes,
+                                               cost_model=cost)
+    else:
+        out, realized = simulate_batch_arrays_compact(batch, k=k,
+                                                      cost_model=cost)
+    jm, sm = _metrics_batch(batch, out)
+    return jm, sm, int(realized)
+
+
 def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                pad_vms: int, statics: dict[str, int] | None,
-               mesh, chunk, backend) -> tuple[
+               mesh, chunk, backend, compact=None, cost=None) -> tuple[
                    JobMetrics, ScenarioMetrics, np.ndarray]:
     """Encode + simulate one bucket's cells; returns host-side
     ``(JobMetrics, ScenarioMetrics, realized_epochs[n])``."""
     if mesh is not None:
-        # pod path: per-lane epoch loops (no per-epoch any() collective)
+        # pod path: per-lane epoch loops (no per-epoch any() collective,
+        # hence no dense tail for `compact` to trim — it is ignored here)
         n_dev = int(mesh.devices.size)
         full = -(-n // n_dev) * n_dev
         batch = grid_arrays(_pad_cells(cols, full), pad_tasks=pad_tasks,
@@ -1019,6 +1097,26 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
         return jm, sm, realized
     max_pes = (max(int(np.ceil(float(np.max(cols["vm_pes"])))), 1)
                if backend == "pallas" else 0)
+    if compact is not None:
+        if chunk is not None:
+            parts, realized = [], np.empty(n, np.int32)
+            for lo in range(0, n, chunk):
+                part = _pad_cells(
+                    {k: v[lo:lo + chunk] for k, v in cols.items()},
+                    min(chunk, n))
+                take = min(chunk, n - lo)
+                jm, sm, rz = _run_compact(part, pad_tasks, pad_vms, statics,
+                                          backend, compact, cost, max_pes)
+                parts.append(jax.tree.map(lambda x: np.asarray(x)[:take],
+                                          (jm, sm)))
+                realized[lo:lo + take] = rz
+            jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
+            return jm, sm, realized
+        jm, sm, rz = _run_compact(cols, pad_tasks, pad_vms, statics,
+                                  backend, compact, cost, max_pes)
+        jm = jax.tree.map(np.asarray, jm)
+        sm = jax.tree.map(np.asarray, sm)
+        return jm, sm, np.full(n, rz, np.int32)
     names = tuple(sorted(cols))
     runner = _fused_runner(names, pad_tasks, pad_vms,
                            tuple(sorted((statics or {}).items())),

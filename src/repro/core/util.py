@@ -1,0 +1,38 @@
+"""Small shared numeric utilities (host-side, numpy).
+
+``pow2_pad``/``pow2_pads`` are the one shape-rounding rule every layer
+of the adaptive schedule uses — bucket task/VM paddings (``sweep``),
+compacted active-lane counts (``engine.simulate_batch_arrays_compact``,
+``kernels.mr_sched.ops``), and the cost model's candidate partitions
+(``costmodel``).  Hoisted here because the measured-cost bucket scorer
+evaluates many candidate partitions per plan, which made the original
+per-unique-value Python loop a hot spot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# floor * 2**j ladder, precomputed far past any realistic padding; the
+# table form makes the vectorized rounding exact (no float log2 edge
+# cases at exact powers of two)
+_MAX_DOUBLINGS = 50
+
+
+def pow2_pads(need, cap: int, floor: int = 4) -> np.ndarray:
+    """Vectorized :func:`pow2_pad`: smallest ``floor * 2**j >= need``
+    elementwise, clamped to ``cap``.  ``need`` may be any integer array;
+    entries ``<= floor`` round to ``floor``, entries past ``cap`` clamp
+    to ``cap`` (the grid-wide max or an explicit pad override)."""
+    need = np.asarray(need, np.int64)
+    table = floor * (np.int64(1) << np.arange(_MAX_DOUBLINGS, dtype=np.int64))
+    idx = np.searchsorted(table, np.maximum(need, 1), side="left")
+    return np.minimum(table[np.minimum(idx, _MAX_DOUBLINGS - 1)],
+                      np.int64(cap))
+
+
+def pow2_pad(need: int, cap: int, floor: int = 4) -> int:
+    """Smallest of ``{floor, 2*floor, 4*floor, ...}`` that fits ``need``,
+    clamped to ``cap``.  Power-of-two rounding keeps the set of compiled
+    shapes small and stable across differently-composed grids/batches
+    (compile-cache friendly)."""
+    return int(pow2_pads(np.asarray([need]), cap, floor)[0])

@@ -1,2 +1,2 @@
 from . import megakernel, ops, ref
-from .ops import epoch_schedule, schedule
+from .ops import epoch_schedule, epoch_schedule_compact, schedule

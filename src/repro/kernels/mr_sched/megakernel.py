@@ -66,7 +66,10 @@ _TIME_EPS = 1e-6
 def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
             shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
             vm_start_ref, vm_stop_ref, spinup_ref, prio_ref,
-            start_ref, finish_ref, ready_ref, n_epochs_ref,
+            time0_ref, rem0_ref, running0_ref, start0_ref, finish0_ref,
+            maps0_ref, lane_ep0_ref,
+            time_ref, rem_ref, running_ref, start_ref, finish_ref,
+            ready_ref, maps_ref, n_epochs_ref,
             *, T: int, V: int, max_pes: int, epoch_bound: int):
     task_len = task_len_ref[...]                 # (tile, T) f32
     task_vm = task_vm_ref[...]                   # (tile, T) i32
@@ -105,16 +108,20 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
     avail_t = to_task(vm_start + spinup)         # (tile, T)
     close_t = to_task(vm_stop)                   # (tile, T)
 
+    # carry state arrives as refs (the wrapper builds the canonical
+    # initial state with the exact constants this kernel used to
+    # initialize in VMEM — compacted/chunked drivers resume mid-history
+    # by feeding a previous call's state back in)
     state = (
-        jnp.zeros((tile,), jnp.float32),                 # time
-        task_len,                                        # rem
-        jnp.zeros((tile, T), jnp.bool_),                 # running
-        jnp.full((tile, T), _BIG, jnp.float32),          # start
-        jnp.full((tile, T), _BIG, jnp.float32),          # finish
+        time0_ref[...][:, 0],                            # time
+        rem0_ref[...],                                   # rem
+        running0_ref[...] != 0,                          # running
+        start0_ref[...],                                 # start
+        finish0_ref[...],                                # finish
         ready0_ref[...],                                 # ready
-        jnp.sum((valid & ~is_red).astype(jnp.int32), axis=1),  # maps_left
-        jnp.zeros((tile,), jnp.int32),                   # lane epochs
-        jnp.int32(0),                                    # global epoch
+        maps0_ref[...][:, 0],                            # maps_left
+        lane_ep0_ref[...][:, 0],                         # lane epochs
+        jnp.int32(0),                                    # epochs this call
     )
 
     def lanes_active(finish):
@@ -213,18 +220,43 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
                 lane_ep + active.astype(jnp.int32), n + 1)
 
     st = jax.lax.while_loop(cond, epoch, state)
+    time_ref[...] = st[0][:, None]
+    rem_ref[...] = st[1]
+    running_ref[...] = st[2].astype(jnp.int32)
     start_ref[...] = st[3]
     finish_ref[...] = st[4]
     ready_ref[...] = st[5]
+    maps_ref[...] = st[6][:, None]
     n_epochs_ref[...] = st[7][:, None]
 
 
+def initial_state(task_len, ready0, is_red, valid):
+    """The canonical t=0 carry state, built with the exact constants the
+    kernel used to initialize in VMEM (so feeding it through the state
+    inputs is a bitwise no-op vs the pre-carry kernel).  Layout — every
+    leaf 2-D for the BlockSpecs: ``(time (N,1) f32, rem (N,T) f32,
+    running (N,T) i32, start (N,T) f32, finish (N,T) f32, ready (N,T)
+    f32, maps_left (N,1) i32, n_epochs (N,1) i32)``."""
+    N, T = task_len.shape
+    return (jnp.zeros((N, 1), jnp.float32),
+            task_len,
+            jnp.zeros((N, T), jnp.int32),
+            jnp.full((N, T), _BIG, jnp.float32),
+            jnp.full((N, T), _BIG, jnp.float32),
+            ready0,
+            jnp.sum(((valid != 0) & ~(is_red != 0)).astype(jnp.int32),
+                    axis=1, keepdims=True),
+            jnp.zeros((N, 1), jnp.int32))
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("tile", "interpret", "max_pes"))
+                   static_argnames=("tile", "interpret", "max_pes",
+                                    "epoch_limit"))
 def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
              vm_mips, vm_pes, sched_policy=None, vm_start=None,
-             vm_stop=None, spinup=None, prio=None, *, tile: int = 64,
-             max_pes: int = 8, interpret: bool = True):
+             vm_stop=None, spinup=None, prio=None, state=None, *,
+             tile: int = 64, max_pes: int = 8, interpret: bool = True,
+             epoch_limit: int | None = None):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
@@ -235,10 +267,18 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     (N,1) f32; prio: (N,T) f32 space-shared admission priorities — the
     defaults (static fleet, zero priorities) reproduce the pre-elastic
     schedule bit for bit.
+
+    ``state``/``epoch_limit`` make the kernel *resumable* (DESIGN.md §9):
+    ``state`` is a full carry in :func:`initial_state` layout (default —
+    the t=0 state; when given, the ``ready0`` argument is superseded by
+    ``state[5]``) and ``epoch_limit`` caps how many event epochs this
+    call advances (default — the ``2T + 2`` engine bound, i.e. run to
+    completion).  The compacted driver (``ops.epoch_schedule_compact``)
+    steps K-epoch chunks over gathered active lanes this way.
+
     ``max_pes`` must be >= the largest per-VM PE count in the batch (it
     bounds the static admission scan); ``tile`` lanes share one early-exit
-    epoch loop.  Returns (start, finish, ready, n_epochs): three (N,T) f32
-    plus the per-lane realized epoch counts (N,) i32.
+    epoch loop.  Returns the advanced carry state (same 8-leaf layout).
     """
     N, T = task_len.shape
     V = vm_mips.shape[1]
@@ -252,6 +292,10 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         spinup = jnp.zeros((N, 1), jnp.float32)
     if prio is None:
         prio = jnp.zeros((N, T), jnp.float32)
+    if state is None:
+        state = initial_state(task_len, ready0, is_red, valid)
+    if epoch_limit is None:
+        epoch_limit = 2 * T + 2
     tile = min(tile, N)
     while N % tile:
         tile //= 2
@@ -263,18 +307,21 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     spec_t = pl.BlockSpec((tile, T), row)
     spec_1 = pl.BlockSpec((tile, 1), row)
     spec_v = pl.BlockSpec((tile, V), row)
-    start, finish, ready, n_epochs = pl.pallas_call(
+    state_specs = (spec_1, spec_t, spec_t, spec_t, spec_t, spec_t,
+                   spec_1, spec_1)
+    state_shapes = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
+                         for x in state)
+    out = pl.pallas_call(
         functools.partial(_kernel, T=T, V=V, max_pes=max_pes,
-                          epoch_bound=2 * T + 2),
+                          epoch_bound=epoch_limit),
         grid=grid,
         in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
-                  spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t],
-        out_specs=(spec_t, spec_t, spec_t, spec_1),
-        out_shape=(jax.ShapeDtypeStruct((N, T), jnp.float32),
-                   jax.ShapeDtypeStruct((N, T), jnp.float32),
-                   jax.ShapeDtypeStruct((N, T), jnp.float32),
-                   jax.ShapeDtypeStruct((N, 1), jnp.int32)),
+                  spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t,
+                  spec_1, spec_t, spec_t, spec_t, spec_t, spec_1, spec_1],
+        out_specs=state_specs,
+        out_shape=state_shapes,
         interpret=interpret,
-    )(task_len, task_vm, ready0, is_red, valid, shuffle, vm_mips, vm_pes,
-      sched_policy, vm_start, vm_stop, spinup, prio)
-    return start, finish, ready, n_epochs[:, 0]
+    )(task_len, task_vm, state[5], is_red, valid, shuffle, vm_mips, vm_pes,
+      sched_policy, vm_start, vm_stop, spinup, prio,
+      state[0], state[1], state[2], state[3], state[4], state[6], state[7])
+    return out

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import network, storage
-from repro.core.engine import ScenarioArrays, SimOutput
+from repro.core.engine import (ScenarioArrays, SimOutput, _take_lanes,
+                               _put_lanes)
+from repro.core.util import pow2_pad
 
 from .kernel import mr_schedule
-from .megakernel import mr_epoch
+from .megakernel import _BIG, initial_state, mr_epoch
 
 
 def _derived_inputs(batch: ScenarioArrays):
@@ -96,7 +98,7 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         widths = ((0, n_pad),) + ((0, 0),) * (x.ndim - 1)
         return jnp.pad(x, widths)
 
-    start, finish, ready, n_epochs = mr_epoch(
+    st = mr_epoch(
         pad(task_len.astype(jnp.float32)),
         pad(batch.task_vm.astype(jnp.int32)),
         pad(ready0.astype(jnp.float32)),
@@ -113,10 +115,104 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
         pad(batch.task_prio.astype(jnp.float32)),
         tile=tile, max_pes=max_pes, interpret=interpret)
-    start, finish, ready, n_epochs = (x[:N] for x in
-                                      (start, finish, ready, n_epochs))
+    return _sim_output_of_state(batch, st, N)
+
+
+def _sim_output_of_state(batch: ScenarioArrays, st, N: int) -> SimOutput:
+    """Trim a (padded) mr_epoch carry state back to ``N`` lanes and shape
+    it into the engine's :class:`SimOutput` (exact op sequence)."""
+    start, finish, ready = st[3][:N], st[4][:N], st[5][:N]
+    n_epochs = st[7][:N, 0]
     exec_time = jnp.where(batch.task_valid, finish - start, 0.0)
     finish_time = jnp.max(jnp.where(batch.task_valid, finish, 0.0), axis=1)
     return SimOutput(start=start, finish=finish, ready=ready,
                      exec_time=exec_time, n_epochs=n_epochs,
                      finish_time=finish_time)
+
+
+def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
+                           tile: int = 64, max_pes: int | None = None,
+                           interpret: bool | None = None, floor: int = 8,
+                           cost_model=None) -> tuple[SimOutput, jnp.ndarray]:
+    """Sparse active-lane compaction over the ``mr_epoch`` megakernel
+    (DESIGN.md §9) — the Pallas twin of
+    ``engine.simulate_batch_arrays_compact``.
+
+    A host loop steps the batch in ``k``-epoch chunks through the
+    *resumable* kernel (``state`` in/out, static ``epoch_limit``).  After
+    each chunk the still-active lanes are gathered front-first into a
+    pow2-padded compacted batch — re-tiled automatically, since the
+    compacted count is a power of two the kernel's tile divisibility
+    reduction never degrades — and the advanced carry scatters back into
+    the dense lane store.  Dropped lanes are finished, and the epoch body
+    is idempotent for finished lanes, so the result is **bitwise
+    identical** to the dense path, per-lane ``n_epochs`` included.
+
+    ``k="auto"`` derives the chunk size from the measured cost model.
+    Returns ``(SimOutput, realized_epochs)`` with realized the batch max
+    of the per-lane counts (the same reduction the dense pallas sweep
+    path exposes).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if max_pes is None:
+        max_pes = max(int(np.ceil(float(jnp.max(batch.vm_pes)))), 1)
+    N, T = batch.task_vm.shape
+    bound = 2 * T + 2
+    if k == "auto":
+        from repro.core import costmodel as costmodel_mod
+        cm = cost_model or costmodel_mod.default_cost_model()
+        k = cm.compact_interval(N, T)
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"epoch_schedule_compact: k must be >= 1, got {k}")
+    task_len, ready0, shuffle = _derived_inputs(batch)
+    n_pad = (-N) % min(tile, max(N, 1))
+
+    def pad(x):     # pad lanes hold no valid tasks -> inactive from t=0
+        widths = ((0, n_pad),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, widths)
+
+    lanes = (pad(task_len.astype(jnp.float32)),
+             pad(batch.task_vm.astype(jnp.int32)),
+             pad(batch.task_is_reduce.astype(jnp.int32)),
+             pad(batch.task_valid.astype(jnp.int32)),
+             pad(shuffle.astype(jnp.float32)[:, None]),
+             pad(batch.vm_mips.astype(jnp.float32)),
+             pad(batch.vm_pes.astype(jnp.float32)),
+             pad(batch.sched_policy.astype(jnp.int32)[:, None]),
+             pad(batch.vm_start.astype(jnp.float32)),
+             pad(batch.vm_stop.astype(jnp.float32)),
+             pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
+             pad(batch.task_prio.astype(jnp.float32)))
+    store = initial_state(lanes[0], pad(ready0.astype(jnp.float32)),
+                          lanes[2], lanes[3])
+    valid_np = np.asarray(lanes[3]) != 0                 # (N', T) host
+    cur_idx = np.arange(N + n_pad)
+    cur_lanes, cur_state = lanes, store
+    total = 0
+    while total < bound:
+        finish_np = np.asarray(cur_state[4])
+        act = (valid_np[cur_idx] & (finish_np >= _BIG / 2)).any(axis=1)
+        n_act = int(act.sum())
+        if n_act == 0:
+            break
+        pad_n = pow2_pad(n_act, cap=len(cur_idx), floor=floor)
+        if pad_n < len(cur_idx):
+            # active lanes first; the pow2 padding is filled with
+            # finished lanes, which step idempotently
+            store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
+            order = np.concatenate([np.nonzero(act)[0],
+                                    np.nonzero(~act)[0]])[:pad_n]
+            cur_idx = cur_idx[order]
+            take = jnp.asarray(cur_idx)
+            cur_lanes = _take_lanes(lanes, take)
+            cur_state = _take_lanes(store, take)
+        limit = min(k, bound - total)
+        cur_state = mr_epoch(*cur_lanes[:2], cur_state[5], *cur_lanes[2:],
+                             state=cur_state, tile=tile, max_pes=max_pes,
+                             interpret=interpret, epoch_limit=limit)
+        total += limit
+    store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
+    out = _sim_output_of_state(batch, store, N)
+    return out, jnp.max(out.n_epochs)
