@@ -2,7 +2,9 @@
 (interpret-class) path — the plain grid, the storage-subsystem LOCALITY
 grid (skewed placement, DESIGN.md §7) AND the elastic dynamic-fleet grid
 (arrivals + lease windows, DESIGN.md §8) AND the tail-heavy compacted
-grid (sparse active-lane compaction, DESIGN.md §9) — failing on crash or
+grid (sparse active-lane compaction, DESIGN.md §9) AND the closed-loop
+control grid (failure streams + autoscale hook, DESIGN.md §10) —
+failing on crash or
 on a >25% throughput regression against the checked-in
 ``BENCH_sweep.json`` baseline rows.
 
@@ -37,6 +39,10 @@ GATED = (          # (baseline row name, plan kwargs, run kwargs)
     # both the compact host loop and the cost-model calibration path
     ("sweep_throughput_tailheavy_compact_b64", {"tailheavy": True},
      {"compact": "auto"}),
+    # the closed-loop control row (DESIGN.md §10): the elastic grid plus
+    # failure streams + the per-epoch AUTOSCALE hook — gates the control
+    # lowering's epoch-loop additions
+    ("sweep_throughput_control_b64", {"control": True}, {}),
 )
 
 # the tail-heavy grid must actually realize a deep tail, else the row

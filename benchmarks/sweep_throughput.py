@@ -38,6 +38,16 @@ mixes sched policies, its honest comparator is the ``mixedpol`` row
 plain row — the recorded gap is ``elastic_gap_vs_mixedpol``; each row
 records its arrival-rate/process/policy-mix meta.
 
+Control rows: the ``_control_b*`` rows run the elastic workload through
+the closed-loop lowering (DESIGN.md §10 — per-lane seeded VM
+failure/restore streams with failover re-dispatch, plus the AUTOSCALE
+per-epoch hook over a reserve-free fleet, so the hook is evaluated every
+epoch but never strands work on an unopened reserve), timing the fail
+event join + kill/redispatch ops + hook contraction the control loop
+adds.  The workload *is* the elastic grid plus control columns, so the
+honest comparator is the elastic row — timed min-of-alternating-A/B
+(like the compaction pair) and recorded as ``control_gap_vs_elastic``.
+
 ``python -m benchmarks.sweep_throughput`` records the rows plus
 backend/device metadata (and a small calibration figure that lets CI gate
 regressions across machine speeds, see ``benchmarks.bench_smoke``) to
@@ -54,7 +64,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import BindingPolicy, Placement, SchedPolicy, elasticity
+from repro.core import (BindingPolicy, ControlPolicy, Placement,
+                        SchedPolicy, control as ctl, elasticity)
 from repro.core.sweep import axis, product, zip_
 
 EPOCH_BOUND = 2 * 21 + 2   # the pre-adaptive engine's static bound at T=21
@@ -63,10 +74,12 @@ LOC_REPLICATION = "1-3"                 # … and replication-factor range
 ELASTIC_RATE = 0.002                    # elastic rows' Poisson arrival rate
 TAIL_MAPS = 40                          # tailheavy rows' uniform map count
 TAIL_PAD = TAIL_MAPS + 1                # … and their task padding (T=41)
+CONTROL_RATE = 0.0005                   # control rows' per-VM failure rate
+CONTROL_REPAIR = 600.0                  # … and repair delay (seconds)
 
 
 def _random_cols(n, rng, mixed_policies=False, locality=False,
-                 elastic=False, tailheavy=False):
+                 elastic=False, tailheavy=False, control=False):
     cols = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
         n_reduces=np.ones(n, np.int32),
@@ -94,7 +107,7 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
         cols["block_size_mb"] = rng.choice([8192.0, 32768.0], n
                                            ).astype(np.float32)
         cols["storage_seed"] = rng.integers(0, 1000, n).astype(np.int32)
-    if elastic:
+    if elastic or control:
         # the dynamic-fleet workload (DESIGN.md §8): Poisson job arrivals
         # against per-VM lease windows with spinup and mixed priorities —
         # the availability masking + window-gated admission now sit on the
@@ -110,6 +123,25 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
         cols["spinup_delay"] = rng.choice([0.0, 60.0], n).astype(np.float32)
         cols["task_prio"] = rng.integers(0, 3, (n, 21)).astype(np.float32)
         cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
+    if control:
+        # the closed-loop workload (DESIGN.md §10): the elastic grid plus
+        # per-lane seeded failure/restore streams (one flat counter-hash
+        # draw resliced per lane — same idiom, distinct instants) and the
+        # AUTOSCALE hook over a reserve-free fleet: the fail event joins
+        # t_next, kills re-dispatch after a detection delay, and the hook
+        # contraction runs every epoch — without opened-reserve dynamics
+        # that would strand time-shared lanes and benchmark stranding
+        # instead of control cost
+        f, r = ctl.failure_times(9 * n, rate=CONTROL_RATE, seed=n,
+                                 repair_delay=CONTROL_REPAIR)
+        cols["vm_fail"] = np.asarray(f, np.float32).reshape(n, 9)
+        cols["vm_restore"] = np.asarray(r, np.float32).reshape(n, 9)
+        cols["redispatch_delay"] = rng.choice([0.0, 30.0], n
+                                              ).astype(np.float32)
+        cols["control_policy"] = np.full(n, int(ControlPolicy.AUTOSCALE),
+                                         np.int32)
+        cols["ctl_queue"] = rng.choice([2.0, 8.0], n).astype(np.float32)
+        cols["ctl_busy"] = np.full(n, 0.5, np.float32)
     if tailheavy:
         # the sparse-compaction workload (DESIGN.md §9): every lane runs
         # the SAME 40-map space-shared shape — one policy combo, one
@@ -144,9 +176,9 @@ def _plan_of(cols, pad_tasks=21):
 
 
 def _random_plan(n, rng, mixed_policies=False, locality=False,
-                 elastic=False, tailheavy=False):
+                 elastic=False, tailheavy=False, control=False):
     return _plan_of(_random_cols(n, rng, mixed_policies, locality, elastic,
-                                 tailheavy),
+                                 tailheavy, control),
                     pad_tasks=TAIL_PAD if tailheavy else 21)
 
 
@@ -255,6 +287,40 @@ def tailheavy_rows(batch_sizes=(64, 2048), reps=7):
     return rows
 
 
+def control_rows(batch_sizes=(64, 2048), reps=7):
+    """Closed-loop control vs the open-loop elastic grid (DESIGN.md §10).
+
+    The pair per batch size is timed min-of-alternating-A/B
+    (:func:`_time_ab`): A is the elastic plan (same rng(n) base draw), B
+    the same draw with the control columns on — seeded failure/restore
+    streams, redispatch, the AUTOSCALE hook.  Only the control row is
+    recorded; its meta carries ``control_gap_vs_elastic`` (min-vs-min
+    against the alternated A side, so the gap measures the lowering, not
+    machine drift)."""
+    rows = []
+    for n in batch_sizes:
+        plan_a = _random_plan(n, np.random.default_rng(n), elastic=True)
+        plan_b = _random_plan(n, np.random.default_rng(n), control=True)
+        res = [None]
+
+        def run_control(plan_b=plan_b, res=res):
+            res[0] = plan_b.run()
+
+        dt_a, min_a, dt_b, min_b = _time_ab(plan_a.run, run_control, reps)
+        injected = int(np.asarray(res[0]["failures_injected"]).sum())
+        rows.append((f"sweep_throughput_control_b{n}", dt_b * 1e6,
+                     min_b * 1e6, f"{n / dt_b:.0f}_scen/s",
+                     int(res[0]["realized_epochs"].max()),
+                     {"failure_rate": CONTROL_RATE,
+                      "repair_delay": CONTROL_REPAIR,
+                      "policy": "autoscale_hook_no_reserves",
+                      "failures_injected": injected,
+                      "timing": "min_of_alternating_ab",
+                      "control_gap_vs_elastic": round(min_b / min_a - 1.0,
+                                                      4)}))
+    return rows
+
+
 def unifpol_rows(n=2048, reps=7):
     """The mixed grid's workload as six per-policy-combo uniform plans.
 
@@ -324,7 +390,8 @@ def all_rows():
             + unifpol_rows()
             + throughput_rows(batch_sizes=(64, 2048), locality=True)
             + throughput_rows(batch_sizes=(64, 2048), elastic=True)
-            + tailheavy_rows())
+            + tailheavy_rows()
+            + control_rows())
 
 
 def main() -> None:
@@ -342,6 +409,9 @@ def main() -> None:
     # compaction gap: noise-floor min vs min on the alternating-A/B pair
     th_dense = by_name["sweep_throughput_tailheavy_b2048"][2]
     th_comp = by_name["sweep_throughput_tailheavy_compact_b2048"][2]
+    # control gap: already min-vs-min from its own alternating-A/B pair
+    ctl_gap = by_name["sweep_throughput_control_b2048"][5][
+        "control_gap_vs_elastic"]
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
     payload = {
         "benchmark": "sweep_throughput (SweepPlan.run end-to-end, "
@@ -360,6 +430,7 @@ def main() -> None:
             "compaction_gap_vs_dense": round(th_comp / th_dense - 1.0, 4),
             "compaction_speedup_tailheavy_b2048": round(th_dense / th_comp,
                                                         2),
+            "control_gap_vs_elastic": ctl_gap,
         },
         "rows": [{"name": n, "us_per_call": round(us, 1),
                   "us_per_call_min": round(us_min, 1), "derived": d,
@@ -379,6 +450,8 @@ def main() -> None:
           f"{payload['meta']['elastic_gap_vs_mixedpol']:+.1%}")
     print(f"compaction vs dense tailheavy b2048 (min-of-A/B): "
           f"{payload['meta']['compaction_speedup_tailheavy_b2048']:.2f}x")
+    print(f"control (closed-loop) vs elastic b2048 gap (min-of-A/B): "
+          f"{payload['meta']['control_gap_vs_elastic']:+.1%}")
     print(f"wrote {out}")
 
 

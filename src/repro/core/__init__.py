@@ -10,11 +10,13 @@ Public API:
 * :mod:`~repro.core.workload` — LM-training-step → scenario bridge
   (stragglers, failures, checkpoint goodput).
 """
-from . import elasticity, engine, network, refsim, storage, sweep, workload
+from . import (control, elasticity, engine, network, refsim, storage, sweep,
+               workload)
 from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
                      SchedPolicy, VMSpec, paper_scenario)
+from .control import ControlPolicy, ControlSpec
 from .elasticity import ArrivalProcess, ElasticitySpec
 from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
 from .storage import Placement, StorageSpec
@@ -22,11 +24,11 @@ from .sweep import Axis, StreamedSweep, SweepPlan, SweepResult
 from .workload import ChipSpec, StepCost
 
 __all__ = [
-    "elasticity", "engine", "network", "refsim", "storage", "sweep",
-    "workload",
+    "control", "elasticity", "engine", "network", "refsim", "storage",
+    "sweep", "workload",
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
     "StorageSpec", "Placement", "SchedPolicy", "BindingPolicy",
-    "ElasticitySpec", "ArrivalProcess",
+    "ElasticitySpec", "ArrivalProcess", "ControlSpec", "ControlPolicy",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",

@@ -19,6 +19,9 @@ from .storage import Placement, StorageSpec, as_placement  # noqa: F401
 from .elasticity import (ArrivalProcess, ElasticitySpec,  # noqa: F401
                          as_arrival_process)
 #   (re-exported: Scenario carries an ElasticitySpec; DESIGN.md §8)
+from .control import (ControlPolicy, ControlSpec,  # noqa: F401
+                      as_control_policy)
+#   (re-exported: Scenario carries a ControlSpec; DESIGN.md §10)
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +119,11 @@ class VMSpec:
     realized lease rounded up to the scenario's billing granularity.  The
     defaults — leased at 0, never torn down — reproduce the pre-elastic
     static fleet bit for bit.
+
+    ``autoscale=True`` marks the VM as a *reserve* (DESIGN.md §10): its
+    lease only materializes when the scenario's control policy opens it
+    (it admits nothing and bills nothing until then), and an opened
+    reserve is closed again once it has no unfinished bound tasks.
     """
     name: str = "small"
     mips: float = 250.0
@@ -126,6 +134,7 @@ class VMSpec:
     cost_per_sec: float = 1.0
     lease_start: float = 0.0
     lease_stop: float = math.inf
+    autoscale: bool = False
 
 
 @dataclass(frozen=True)
@@ -188,6 +197,7 @@ class Scenario:
     network: NetworkSpec = field(default_factory=NetworkSpec)
     storage: StorageSpec = field(default_factory=StorageSpec)
     elasticity: ElasticitySpec = field(default_factory=ElasticitySpec)
+    control: ControlSpec = field(default_factory=ControlSpec)
     sched_policy: SchedPolicy = SchedPolicy.TIME_SHARED
     binding_policy: BindingPolicy = BindingPolicy.ROUND_ROBIN
 

@@ -1,0 +1,182 @@
+"""Closed-loop control subsystem: seeded faults + reactive autoscaling.
+
+Everything before this module is *open-loop*: schedules, leases and block
+placements are fully decided before ``while_loop`` step zero.  IOTSim's
+cloud tier exists precisely because IoT big-data workloads are bursty and
+failure-prone (paper §3) — the infrastructure must *react*.  This module
+closes the loop with two mechanisms, both encoded as device-side data so
+they stay sweepable and branch-free (DESIGN.md §10):
+
+* **Seeded VM failure/restore injection** — each VM ``v`` draws one
+  failure instant ``F_v`` from a counter-hash exponential stream (the
+  same lowbias32 idiom as block placement and arrivals) and restores at
+  ``R_v = F_v + repair_delay``.  At ``F_v`` every unfinished task whose
+  *current* VM is ``v`` is killed and re-dispatched: the first hit moves
+  the task to its precomputed failover VM (replica holders of its input
+  block preferred — re-replication rides the PR-4 block store via the
+  shared remote-fetch delay), a second hit restarts it in place after the
+  restore.  Failure times are drawn host-side in f64 and cast to f32
+  once, exactly like ``elasticity.arrival_times`` (``np.log`` and XLA's
+  f32 log differ in ULPs — the stream must be one artifact every layer
+  consumes).
+
+* **A per-epoch control hook** — :class:`ControlPolicy` rides in
+  :class:`~repro.core.engine.ScenarioArrays` as an i32 policy id (like
+  Sched/Binding policies).  ``AUTOSCALE`` observes the queue depth (ready
+  but unstarted tasks) and the busy fraction of the open fleet at the top
+  of every epoch and opens reserve VMs (``VMSpec.autoscale=True`` — their
+  lease materializes only when the controller opens it) one per epoch
+  while both thresholds are exceeded, closing any opened reserve that has
+  no unfinished bound tasks left.  Thresholds are f32 scalars in the
+  arrays — sweepable data, not trace constants.
+
+The degenerate configuration (no failures, ``ControlPolicy.NONE``, no
+reserve VMs) is a *bitwise identity*: every control op reduces to a
+``where`` over an all-false mask, and the engine skips the control code
+entirely (a static flag) when the encoded arrays show no control inputs.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .storage import _C1, _C3, _INV24, _mix32
+
+_BIG = 1e30       # must match engine._BIG (control cannot import engine)
+
+
+class ControlPolicy(enum.IntEnum):
+    """Per-epoch control rule (stable wire constants — i32 sweep data).
+
+    NONE      — open-loop: the encoded lease windows are final.
+    AUTOSCALE — reactive scaling: while the observed queue depth exceeds
+        ``queue_threshold`` AND the open fleet's busy fraction is at
+        least ``busy_threshold``, open one reserve VM per epoch (lowest
+        index first); close opened reserves with no unfinished bound
+        tasks.
+    """
+    NONE = 0
+    AUTOSCALE = 1
+
+
+def as_control_policy(v) -> ControlPolicy:
+    """Coerce a name (``"none"``/``"autoscale"``), int, or member."""
+    if isinstance(v, str):
+        try:
+            return ControlPolicy[v.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown control policy {v!r}; known: "
+                f"{[p.name.lower() for p in ControlPolicy]}") from None
+    return ControlPolicy(v)
+
+
+@dataclass(frozen=True)
+class ControlSpec:
+    """Scenario-level closed-loop control model (disabled by default:
+    zero failure rate and ``NONE`` policy reproduce the open-loop
+    schedules bit for bit).
+
+    ``failure_rate`` is per-VM failures per simulated second (exponential
+    first-failure time; 0 disables injection).  ``repair_delay`` is the
+    downtime until the VM admits work again (``inf`` = never restores).
+    ``redispatch_delay`` models the broker's failure-detection + re-queue
+    latency added to a killed task's ready time.  The autoscale
+    thresholds gate the reactive rule: scale up while
+    ``queue_depth > queue_threshold`` and
+    ``busy_fraction >= busy_threshold``.
+    """
+    policy: ControlPolicy = ControlPolicy.NONE
+    failure_rate: float = 0.0
+    failure_seed: int = 0
+    repair_delay: float = math.inf
+    redispatch_delay: float = 0.0
+    queue_threshold: float = 0.0
+    busy_threshold: float = 0.0
+
+
+def failure_times(n_vms: int, *, rate: float, seed: int = 0,
+                  repair_delay: float = math.inf
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-VM failure/restore instants ``(F, R)`` (f32 arrays, host-side).
+
+    Seeded and counter-based: VM ``v`` hashes ``(seed, v)`` through the
+    storage layer's lowbias32 avalanche and inverts an exponential —
+    ``F_v = -log1p(-u_v) / rate`` — so the stream is reproducible pure
+    arithmetic (same idiom as block placement and arrivals) and rate
+    scales it exactly: doubling ``rate`` exactly halves every failure
+    time before the single f64→f32 cast.  ``rate <= 0`` yields the _BIG
+    never-fires sentinel everywhere; so does an infinite repair for R.
+    """
+    if n_vms < 1:
+        raise ValueError(f"failure_times: need n_vms >= 1, got {n_vms}")
+    v = np.arange(int(n_vms), dtype=np.uint32)
+    seed_mix = np.uint32((int(seed) % (1 << 32)) * int(_C3) % (1 << 32))
+    h = _mix32(v * _C1 + seed_mix)
+    u = (h >> np.uint32(8)).astype(np.float64) * float(_INV24)  # [0, 1)
+    if not rate > 0.0:
+        fail = np.full(n_vms, _BIG, np.float64)
+    else:
+        fail = -np.log1p(-u) / float(rate)
+    rest = np.where(fail >= _BIG / 2, _BIG,
+                    np.minimum(fail + float(repair_delay), _BIG))
+    return fail.astype(np.float32), rest.astype(np.float32)
+
+
+def failover_targets(task_vm, vm_valid, vm_auto, block_vm, xp=np):
+    """Per-task failover VM (i32[T]) — the second binding slot.
+
+    A killed task re-dispatches to the first VM cyclically after its
+    bound VM that is (in preference order) a valid non-reserve replica
+    holder of its input block, else any valid non-reserve VM, else any
+    valid VM, else the bound VM itself.  Pure function of the encoded
+    scenario (xp-generic: numpy for the oracle, jnp under trace), so the
+    oracle and every engine layer resolve identical targets bit for bit.
+    """
+    task_vm = xp.asarray(task_vm)
+    vm_valid = xp.asarray(vm_valid, bool)
+    vm_auto = xp.asarray(vm_auto, bool)
+    V = vm_valid.shape[0]
+    vmr = xp.arange(V, dtype=xp.int32)[None, :]                   # [1, V]
+    # cyclic preference: distance from bound-VM+1 (the bound VM is last)
+    order = (vmr - task_vm[:, None].astype(xp.int32) - 1) % V     # [T, V]
+    holds = xp.any(block_vm[:, :, None] == vmr[:, None, :], axis=1)
+    valid = vm_valid[None, :]
+    reserve = vm_auto[None, :]
+
+    def pick(mask):
+        key = xp.where(mask, order, V + 1)
+        best = xp.argmin(key, axis=1).astype(xp.int32)
+        ok = xp.min(key, axis=1) <= V
+        return best, ok
+
+    t1, ok1 = pick(valid & ~reserve & holds)
+    t2, ok2 = pick(valid & ~reserve)
+    t3, ok3 = pick(valid)
+    out = xp.where(ok1, t1, xp.where(ok2, t2,
+                   xp.where(ok3, t3, task_vm.astype(xp.int32))))
+    return out.astype(xp.int32)
+
+
+def scenario_control(scenario, pad_vms: int):
+    """Realize one scenario's control model as padded per-VM arrays —
+    ``(vm_fail, vm_restore, vm_auto)`` — the exact artifact both the
+    oracle and the array encoders consume (one shared helper: the layers
+    cannot drift).  Padding VMs never fail and are never reserves.
+    """
+    spec = scenario.control
+    n = len(scenario.vms)
+    vm_fail = np.full(pad_vms, _BIG, np.float32)
+    vm_restore = np.full(pad_vms, _BIG, np.float32)
+    vm_auto = np.zeros(pad_vms, bool)
+    if spec.failure_rate > 0.0:
+        f, r = failure_times(n, rate=spec.failure_rate,
+                             seed=spec.failure_seed,
+                             repair_delay=spec.repair_delay)
+        vm_fail[:n], vm_restore[:n] = f, r
+    vm_auto[:n] = [bool(getattr(v, "autoscale", False))
+                   for v in scenario.vms]
+    return vm_fail, vm_restore, vm_auto

@@ -40,6 +40,14 @@ ENV_PATH = "REPRO_COSTMODEL_PATH"
 _DEFAULT_PATH = pathlib.Path.home() / ".cache" / "repro-iotsim" / \
     "costmodel.json"
 
+# Persisted-cache schema version.  The cache file is
+# ``{"schema": N, "models": {device: {coefficients...}}}``; bump this
+# whenever the coefficient semantics change (e.g. a new measurement
+# protocol) so stale caches are invalidated instead of silently feeding
+# garbage coefficients into the schedulers.  Pre-schema files (a bare
+# ``{device: {...}}`` mapping) fail the check and are re-measured.
+SCHEMA_VERSION = 1
+
 # Conservative CPU-ish coefficients used when measurement is disabled or
 # fails (e.g. a sandboxed FS): chosen to reproduce the retired static
 # heuristic's behaviour on the benchmark grids within a few percent.
@@ -202,38 +210,60 @@ def measure(reps: int = 5) -> CostModel:
 # Persistence
 # ---------------------------------------------------------------------------
 
+def _parse_cache(data) -> dict:
+    """Validate the cache schema and return the device→entry mapping.
+    Raises ``ValueError`` on any stale/foreign format (missing or
+    mismatched ``schema``, pre-schema bare mappings) so callers
+    re-measure instead of consuming drifted coefficients."""
+    if not isinstance(data, dict) or data.get("schema") != SCHEMA_VERSION:
+        raise ValueError(
+            "costmodel cache: stale or unknown schema "
+            f"(found {data.get('schema') if isinstance(data, dict) else data!r}, "
+            f"expected {SCHEMA_VERSION}) — cache will be re-measured")
+    models = data.get("models")
+    if not isinstance(models, dict):
+        raise ValueError("costmodel cache: missing 'models' mapping")
+    return models
+
+
 def load_cost_model(path, device: str | None = None) -> CostModel:
     """Load one device's calibration from a JSON cache file.  With
     ``device=None`` and a single-entry file, that entry is returned —
-    the pinned-calibration form the determinism tests use."""
-    data = json.loads(pathlib.Path(path).read_text())
+    the pinned-calibration form the determinism tests use.  A cache
+    whose ``schema`` field is missing or mismatched raises ``ValueError``
+    (stale-cache invalidation; ``default_cost_model`` then re-measures)."""
+    models = _parse_cache(json.loads(pathlib.Path(path).read_text()))
     if device is None:
-        if len(data) != 1:
+        if len(models) != 1:
             raise ValueError(
                 f"load_cost_model: {path} holds calibrations for "
-                f"{sorted(data)}; pass device= to pick one")
-        device = next(iter(data))
-    if device not in data:
+                f"{sorted(models)}; pass device= to pick one")
+        device = next(iter(models))
+    if device not in models:
         raise KeyError(
             f"load_cost_model: no calibration for device {device!r} in "
-            f"{path} (have {sorted(data)})")
-    entry = data[device]
+            f"{path} (have {sorted(models)})")
+    entry = models[device]
     return CostModel(dispatch_us=float(entry["dispatch_us"]),
                      epoch_lane_us=float(entry["epoch_lane_us"]),
                      device=device)
 
 
 def save_cost_model(model: CostModel, path) -> None:
+    """Merge one device's calibration into the cache file, stamping the
+    current :data:`SCHEMA_VERSION`.  Entries from an unreadable or
+    stale-schema file are discarded — never carried forward."""
     path = pathlib.Path(path)
-    data = {}
+    models = {}
     if path.exists():
         try:
-            data = json.loads(path.read_text())
+            models = _parse_cache(json.loads(path.read_text()))
         except (OSError, ValueError):
-            data = {}
-    data[model.device] = model.to_json()
+            models = {}
+    models[model.device] = model.to_json()
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(data, indent=2) + "\n")
+    path.write_text(json.dumps({"schema": SCHEMA_VERSION, "models": models},
+                               indent=2) + "\n")
 
 
 def default_cost_model(path=None, *, allow_measure: bool = True) -> CostModel:

@@ -29,6 +29,7 @@ import numpy as np
 from . import elasticity, network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
+from .control import ControlPolicy, failover_targets, scenario_control
 from .util import pow2_pad
 
 _BIG = 1e30          # stand-in for +inf that survives arithmetic
@@ -95,6 +96,22 @@ class ScenarioArrays(NamedTuple):
     bill_gran: jax.Array       # f32 scalar — billing granularity (seconds)
     task_prio: jax.Array       # f32[T] space-shared admission priority
     #                            (higher admitted first; 0 = legacy rank)
+    # closed-loop control (DESIGN.md §10): seeded failure streams realized
+    # as per-VM instants (control.failure_times — host f64, cast once) and
+    # the autoscale rule's inputs, all device-side sweepable data.  The
+    # degenerate fill (_BIG fails, no reserves, NONE policy) is detected
+    # host-side (_control_active) and skips the control code entirely.
+    vm_fail: jax.Array         # f32[V] failure instant; _BIG = never fails
+    vm_restore: jax.Array      # f32[V] restore instant; _BIG = never
+    vm_auto: jax.Array         # bool[V] autoscale reserve (lease
+    #                            materializes only when control opens it)
+    control_policy: jax.Array  # i32 (0 NONE | 1 AUTOSCALE)
+    ctl_queue: jax.Array       # f32 scalar — scale up while queue depth
+    #                            (ready, unstarted tasks) exceeds this
+    ctl_busy: jax.Array        # f32 scalar — … and the open fleet's busy
+    #                            fraction is at least this
+    redispatch_delay: jax.Array  # f32 scalar — failure-detection +
+    #                              re-queue latency added on task kill
 
 
 class SimOutput(NamedTuple):
@@ -105,6 +122,15 @@ class SimOutput(NamedTuple):
     exec_time: jax.Array  # f32[T]
     n_epochs: jax.Array  # i32 — event epochs executed (bench metric)
     finish_time: jax.Array  # f32 — last completion
+    # closed-loop control results (degenerate fills reproduce the encoded
+    # scenario: hit all-false, vm_open/vm_close the static lease window)
+    hit: jax.Array       # bool[T] task was killed by a VM failure at
+    #                      least once (now bound to its failover VM)
+    task_vm2: jax.Array  # i32[T] failover binding (== task_vm when
+    #                      control is off; current VM = hit ? vm2 : vm)
+    vm_open: jax.Array   # f32[V] realized lease open (_BIG = never)
+    vm_close: jax.Array  # f32[V] realized lease close (_BIG = never)
+    n_scale: jax.Array   # i32 — autoscale open+close events executed
 
 
 class JobMetrics(NamedTuple):
@@ -138,6 +164,13 @@ class ScenarioMetrics(NamedTuple):
     #                              fleet's realized leases)
     queue_wait: jax.Array    # f32 — mean start − ready over started tasks
     #                          (slot + lease-availability + spinup waits)
+    # closed-loop control metrics (DESIGN.md §10; 0 in open-loop runs)
+    failures_injected: jax.Array   # f32 — valid-VM failures fired within
+    #                                the scenario's wall-clock span
+    tasks_redispatched: jax.Array  # f32 — tasks killed + re-dispatched
+    scale_events: jax.Array        # f32 — autoscale lease opens + closes
+    recovered_fraction: jax.Array  # f32 — re-dispatched tasks that still
+    #                                completed / re-dispatched (0 if none)
 
 
 def task_lengths(sc: ScenarioArrays) -> jax.Array:
@@ -292,6 +325,10 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     block_vm[:len(bvm)] = bvm
     block_mb[:len(bmb)] = bmb
 
+    # Closed-loop control (DESIGN.md §10): realized failure/restore
+    # streams + reserve flags via the one shared helper the oracle uses.
+    vm_fail, vm_restore, vm_auto = scenario_control(sc, V)
+
     if sc.binding_policy in (BindingPolicy.LEAST_LOADED,
                              BindingPolicy.LOCALITY):
         # f32-sensitive: go through the one shared jnp implementation
@@ -342,6 +379,13 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
         spinup_delay=f32(sc.elasticity.spinup_delay),
         bill_gran=f32(sc.elasticity.billing_granularity),
         task_prio=t_prio,
+        vm_fail=vm_fail,
+        vm_restore=vm_restore,
+        vm_auto=vm_auto,
+        control_policy=np.int32(sc.control.policy),
+        ctl_queue=f32(sc.control.queue_threshold),
+        ctl_busy=f32(sc.control.busy_threshold),
+        redispatch_delay=f32(sc.control.redispatch_delay),
     )
 
 
@@ -362,7 +406,12 @@ def _padi(xs, n):
 # ---------------------------------------------------------------------------
 
 class _Carry(NamedTuple):
-    """Per-scenario event-loop state advanced one epoch at a time."""
+    """Per-scenario event-loop state advanced one epoch at a time.
+
+    The trailing control leaves are ``None`` (empty pytree — zero cost)
+    whenever the static ``control`` flag is off; the open-loop carry is
+    unchanged byte for byte.
+    """
     time: jax.Array
     rem: jax.Array        # f32[T] remaining MI
     running: jax.Array    # bool[T]
@@ -371,10 +420,19 @@ class _Carry(NamedTuple):
     ready: jax.Array      # f32[T]
     maps_left: jax.Array  # i32[J]
     epoch: jax.Array      # i32 — realized event epochs for *this* lane
+    hit: jax.Array | None = None       # bool[T] killed at least once
+    vm_open: jax.Array | None = None   # f32[V] realized lease open
+    vm_close: jax.Array | None = None  # f32[V] realized lease close
+    n_scale: jax.Array | None = None   # i32 autoscale events so far
 
 
 class _EpochInv(NamedTuple):
-    """Loop-invariant derived arrays shared by every epoch of one lane."""
+    """Loop-invariant derived arrays shared by every epoch of one lane.
+
+    Control leaves (``None`` unless the static ``control`` flag is on):
+    the failover binding slot and its derived gathers, plus the per-task
+    failure/restore instants of both binding slots.
+    """
     shuffle: jax.Array     # f32[J]
     task_pes: jax.Array    # f32[T]
     vm_onehot: jax.Array   # f32[T, V]
@@ -385,9 +443,21 @@ class _EpochInv(NamedTuple):
     avail_t: jax.Array     # f32[T] bound VM's admission-open time
     #                        (lease start + spinup; 0 for a static fleet)
     close_t: jax.Array     # f32[T] bound VM's lease stop (_BIG = never)
+    task_len: jax.Array | None = None    # f32[T] full length (kill reset)
+    task_vm2: jax.Array | None = None    # i32[T] failover binding
+    vm_onehot2: jax.Array | None = None  # f32[T, V]
+    task_pes2: jax.Array | None = None   # f32[T]
+    refetch: jax.Array | None = None     # f32[T] re-replication fetch to
+    #                                      the failover VM (0 if it holds
+    #                                      a replica / no block)
+    fail1: jax.Array | None = None       # f32[T] vm_fail[task_vm]
+    rest1: jax.Array | None = None       # f32[T] vm_restore[task_vm]
+    fail2: jax.Array | None = None       # f32[T] vm_fail[task_vm2]
+    rest2: jax.Array | None = None       # f32[T] vm_restore[task_vm2]
 
 
-def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
+def _epoch_setup(sc: ScenarioArrays, *,
+                 control: bool = False) -> tuple[_EpochInv, _Carry]:
     """Derived quantities + initial carry for one encoded scenario."""
     T = sc.task_job.shape[0]
     J = sc.job_length.shape[0]
@@ -451,6 +521,35 @@ def _epoch_setup(sc: ScenarioArrays) -> tuple[_EpochInv, _Carry]:
                 finish=jnp.full(T, _BIG, jnp.float32),
                 ready=ready0, maps_left=maps_left0,
                 epoch=jnp.int32(0))
+    if control:
+        # Failover binding slot (DESIGN.md §10): a killed task's second —
+        # and final — VM, precomputed so the epoch body stays a fixed
+        # dataflow: the only dynamic binding state is the bool ``hit``
+        # switch between the two slots.  Re-replication rides the PR-4
+        # block store: moving off the replica set pays the shared
+        # remote-fetch delay toward the new VM.
+        task_vm2 = failover_targets(sc.task_vm, sc.vm_valid, sc.vm_auto,
+                                    sc.block_vm, xp=jnp)
+        refetch = storage.remote_fetch_delay(sc.block_vm, sc.block_size,
+                                             task_vm2, sc.kappa_in,
+                                             sc.net_bw, sc.net_enabled,
+                                             xp=jnp)
+        inv = inv._replace(
+            task_len=task_len,
+            task_vm2=task_vm2,
+            vm_onehot2=(task_vm2[:, None] == jnp.arange(V)[None, :]
+                        ).astype(jnp.float32),
+            task_pes2=sc.vm_pes[task_vm2],
+            refetch=refetch,
+            fail1=sc.vm_fail[sc.task_vm], rest1=sc.vm_restore[sc.task_vm],
+            fail2=sc.vm_fail[task_vm2], rest2=sc.vm_restore[task_vm2])
+        # Reserve VMs have no lease until the control rule opens one; the
+        # non-reserve fleet's realized open is just its encoded start.
+        c0 = c0._replace(
+            hit=jnp.zeros(T, bool),
+            vm_open=jnp.where(sc.vm_auto, jnp.float32(_BIG), sc.vm_start),
+            vm_close=jnp.asarray(sc.vm_stop, jnp.float32),
+            n_scale=jnp.int32(0))
     return inv, c0
 
 
@@ -458,21 +557,116 @@ def _has_unfinished(sc: ScenarioArrays, c: _Carry) -> jax.Array:
     return jnp.any(sc.task_valid & (c.finish >= _BIG / 2))
 
 
-def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
+def _lane_bound(sc: ScenarioArrays) -> jax.Array:
+    """Per-lane epoch bound (i32, data-dependent under control).
+
+    Open-loop, every live epoch fires a start or a completion: ``2T + 2``.
+    With failures a task restarts at most twice (its bound VM and its
+    failover VM each fail at most once), so live epochs fire at most
+    ``3T`` starts + ``T`` completions + ``V`` failure instants — the
+    failure term is paid only by lanes that actually encode a failing VM,
+    so degenerate lanes keep the exact open-loop bound (and stranded
+    lanes' realized ``n_epochs`` stay bit-identical)."""
+    T = sc.task_job.shape[0]
+    V = sc.vm_mips.shape[0]
+    any_fail = jnp.any(sc.vm_valid & (sc.vm_fail < _BIG / 2))
+    return jnp.where(any_fail, jnp.int32(4 * T + V + 2),
+                     jnp.int32(2 * T + 2))
+
+
+def _lane_active(sc: ScenarioArrays, c: _Carry, *,
+                 control: bool = False) -> jax.Array:
+    """A lane still takes epochs: unfinished work below its epoch bound.
+    Open-loop drivers bound epochs globally (the per-lane bound is the
+    static ``2T + 2``), so the extra term is control-only."""
+    act = _has_unfinished(sc, c)
+    if control:
+        act &= c.epoch < _lane_bound(sc)
+    return act
+
+
+def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
+                control: bool = False) -> _Carry:
     """Advance one event epoch.  Idempotent for finished lanes (every
     update is gated on ``live``/``running``), so a vmapped batch may keep
     stepping a lane past its last event without changing its state — the
     property the batched early-exit driver relies on.  Leaves ``epoch``
-    untouched; the drivers count realized epochs."""
+    untouched; the drivers count realized epochs.
+
+    ``control=True`` (a static flag — open-loop lowerings carry zero
+    control code) threads the closed loop through the same dataflow:
+
+    * the *control hook* runs first, at the epoch's opening clock
+      ``c.time`` (i.e. observing the state all previous events left
+      behind): AUTOSCALE compares the observed queue depth and open-fleet
+      busy fraction against the encoded thresholds, opens one reserve VM
+      per epoch while both exceed, and closes idle opened reserves;
+    * every per-task gather switches between the two binding slots on the
+      ``hit`` mask (one-hot matmuls stay exact 0/1 sums);
+    * failure instants of valid VMs join the next-event min; at a firing
+      instant every unfinished task on the failing VM is killed and
+      re-dispatched (first hit: to the failover slot + re-replication
+      fetch; second: restart in place after restore), and eligibility is
+      gated around each VM's ``[fail, restore)`` down window.
+
+    With degenerate control data (no failures, no reserves, NONE policy)
+    every control op is a ``where`` over an all-false mask or a gate that
+    never matches — the open-loop schedule is reproduced bit for bit
+    (pinned in tests/test_control.py)."""
+    # --- binding-slot switch + control hook (clock = c.time) --------------
+    if control:
+        cur_oh = jnp.where(c.hit[:, None], inv.vm_onehot2, inv.vm_onehot)
+        task_pes = jnp.where(c.hit, inv.task_pes2, inv.task_pes)
+        f_t = jnp.where(c.hit, inv.fail2, inv.fail1)
+        r_t = jnp.where(c.hit, inv.rest2, inv.rest1)
+        cur_vm = jnp.where(c.hit, inv.task_vm2, sc.task_vm)
+        same_vm = cur_vm[:, None] == cur_vm[None, :]
+
+        V = sc.vm_mips.shape[0]
+        pol_on = sc.control_policy == jnp.int32(ControlPolicy.AUTOSCALE)
+        unfinished = sc.task_valid & (c.finish >= _BIG / 2)
+        # queue depth over *raw* ready times: tasks bound to unopened
+        # reserves must count toward the backlog or the rule that would
+        # open their VM could never trigger
+        qdepth = jnp.sum((unfinished & (c.start >= _BIG / 2)
+                          & (c.ready <= c.time)).astype(jnp.float32))
+        busy_v = (c.running.astype(jnp.float32) @ cur_oh) > 0.5
+        open_v = sc.vm_valid & (c.vm_open + sc.spinup_delay <= c.time) \
+            & (c.time < c.vm_close)
+        n_open = jnp.sum(open_v.astype(jnp.float32))
+        busy_frac = (jnp.sum((open_v & busy_v).astype(jnp.float32))
+                     / jnp.maximum(n_open, 1.0))
+        trigger = pol_on & (qdepth > sc.ctl_queue) \
+            & (busy_frac >= sc.ctl_busy)
+        reserve = sc.vm_valid & sc.vm_auto
+        unopened = reserve & (c.vm_open >= _BIG / 2)
+        vidx = jnp.arange(V, dtype=jnp.int32)
+        first = jnp.argmin(jnp.where(unopened, vidx, jnp.int32(V + 1)))
+        open_mask = trigger & unopened & (vidx == first)
+        bound_unfin = unfinished.astype(jnp.float32) @ cur_oh
+        close_mask = pol_on & reserve & (c.vm_open < _BIG / 2) \
+            & (c.time < c.vm_close) & (bound_unfin < 0.5)
+        vm_open = jnp.where(open_mask, c.time, c.vm_open)
+        vm_close = jnp.where(close_mask, c.time, c.vm_close)
+        n_scale = c.n_scale + jnp.sum(open_mask.astype(jnp.int32)) \
+            + jnp.sum(close_mask.astype(jnp.int32))
+        # lease windows re-derived from carry: exactly the setup gathers
+        # when no reserve ever opens (one-hot sums are exact)
+        avail_t = cur_oh @ (vm_open + sc.spinup_delay)
+        close_t = cur_oh @ vm_close
+    else:
+        cur_oh, task_pes, same_vm = inv.vm_onehot, inv.task_pes, inv.same_vm
+        avail_t, close_t = inv.avail_t, inv.close_t
+
     # single rates evaluation per epoch (space-shared keeps n <= pes, so
     # the min() clamp makes this formula serve both policies)
     def vm_counts(running):
-        return running.astype(jnp.float32) @ inv.vm_onehot
+        return running.astype(jnp.float32) @ cur_oh
 
     n_on_vm = vm_counts(c.running)
     share = sc.vm_mips * jnp.minimum(1.0, sc.vm_pes
                                      / jnp.maximum(n_on_vm, 1.0))
-    r = jnp.where(c.running, inv.vm_onehot @ share, 0.0)
+    r = jnp.where(c.running, cur_oh @ share, 0.0)
 
     eta = jnp.where(c.running, c.time + c.rem / jnp.maximum(r, 1e-30),
                     _BIG)
@@ -484,14 +678,30 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
     # while its event time lands strictly before the VM's lease stop.  A
     # candidate whose time falls at/past the close never defines an event
     # again (stranded); the static fleet reproduces the old ops bitwise.
-    elig = jnp.maximum(c.ready, inv.avail_t)
+    elig = jnp.maximum(c.ready, avail_t)
+    if control:
+        # failure-window gating: any admission instant landing inside the
+        # current VM's [fail, restore) down window slides to the restore
+        # edge — which is how restore instants join the event min (no
+        # separate restore event stream is needed)
+        def gate(x):
+            return jnp.where((x >= f_t) & (x < r_t), r_t, x)
+
+        elig = gate(elig)
+        cand_t = gate(jnp.maximum(elig, c.time))
+    else:
+        cand_t = jnp.maximum(elig, c.time)
     # Space-shared: a pending task only defines an arrival event while
     # its VM has a free PE slot; otherwise a completion epoch admits it.
-    has_slot = (inv.task_pes - inv.vm_onehot @ n_on_vm) > 0.5
-    cand_t = jnp.maximum(elig, c.time)
+    has_slot = (task_pes - cur_oh @ n_on_vm) > 0.5
     arr = jnp.where(not_started & (~inv.is_space | has_slot)
-                    & (cand_t < inv.close_t), cand_t, _BIG)
+                    & (cand_t < close_t), cand_t, _BIG)
     t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
+    if control:
+        # pending failure instants of valid VMs are calendar events too
+        fail_ev = jnp.where(sc.vm_valid & (sc.vm_fail > c.time),
+                            sc.vm_fail, _BIG)
+        t_next = jnp.minimum(t_next, jnp.min(fail_ev))
     live = t_next < _BIG / 2
     tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
 
@@ -514,6 +724,27 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
         sc.task_is_reduce & phase_done[sc.task_job],
         red_ready[sc.task_job], c.ready)
 
+    # failure kills — after completions (a task finishing exactly at the
+    # failure instant completes: the oracle's completions-first tie
+    # order), before admissions
+    start_base = c.start
+    if control:
+        fired = live & (f_t > c.time) & (f_t <= t_next)
+        affected = sc.task_valid & fired & (finish >= _BIG / 2)
+        first_hit = affected & ~c.hit
+        rem = jnp.where(affected, inv.task_len, rem)
+        running = running & ~affected
+        start_base = jnp.where(affected, jnp.float32(_BIG), start_base)
+        # re-dispatch: detection/re-queue latency from the failure
+        # instant; the first hit moves to the failover slot and pays the
+        # re-replication fetch, a second hit restarts in place (its
+        # eligibility then slides to the failover VM's restore edge)
+        ready = jnp.where(affected,
+                          jnp.maximum(ready, f_t + sc.redispatch_delay),
+                          ready)
+        ready = jnp.where(first_hit, ready + inv.refetch, ready)
+        hit = c.hit | first_hit
+
     # arrivals: time-shared starts every admissible task immediately;
     # space-shared admits the (priority desc, eligible time, index)-first
     # waiting tasks into the PE slots left free after this epoch's
@@ -522,12 +753,16 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
     # lease still being open at t_next; all-zero priorities and a static
     # fleet reduce every term to the classic (ready, index) rank bitwise.
     eligible = live & not_started & (elig <= t_next + tie) \
-        & (t_next < inv.close_t)
-    free_after = inv.task_pes - inv.vm_onehot @ (n_on_vm
-                                                 - vm_counts(done_now))
+        & (t_next < close_t)
+    if control:
+        # never admit onto a VM that is down at (or fails exactly at)
+        # this epoch's instant — the killed set was computed above and a
+        # same-instant admission would dodge it
+        eligible &= ~((t_next >= f_t) & (t_next < r_t))
+    free_after = task_pes - cur_oh @ (n_on_vm - vm_counts(done_now))
     key = elig
     prio = sc.task_prio
-    higher_prio = inv.same_vm & (
+    higher_prio = same_vm & (
         (prio[None, :] > prio[:, None])
         | ((prio[None, :] == prio[:, None])
            & ((key[None, :] < key[:, None])
@@ -535,23 +770,60 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry) -> _Carry:
     rank = jnp.sum((higher_prio & eligible[None, :])
                    .astype(jnp.float32), axis=1)
     start_now = eligible & (~inv.is_space | (rank < free_after))
-    start = jnp.where(start_now, t_next, c.start)
+    start = jnp.where(start_now, t_next, start_base)
     running = running | start_now
 
     time = jnp.where(live, t_next, c.time)
+    if control:
+        return _Carry(time, rem, running, start, finish, ready,
+                      maps_left, c.epoch, hit=hit, vm_open=vm_open,
+                      vm_close=vm_close, n_scale=n_scale)
     return _Carry(time, rem, running, start, finish, ready,
                   maps_left, c.epoch)
 
 
 def _sim_output(sc: ScenarioArrays, cf: _Carry) -> SimOutput:
     exec_time = jnp.where(sc.task_valid, cf.finish - cf.start, 0.0)
+    # both lowerings report the failover binding control *would* use, so
+    # the field is bitwise-comparable across open-loop and control runs
+    task_vm2 = failover_targets(sc.task_vm, sc.vm_valid, sc.vm_auto,
+                                sc.block_vm, xp=jnp)
+    if cf.hit is None:
+        # open-loop: the realized control outputs are the encoded scenario
+        hit = jnp.zeros_like(sc.task_valid)
+        vm_open = jnp.asarray(sc.vm_start, jnp.float32)
+        vm_close = jnp.asarray(sc.vm_stop, jnp.float32)
+        n_scale = jnp.int32(0)
+    else:
+        hit, vm_open, vm_close = cf.hit, cf.vm_open, cf.vm_close
+        n_scale = cf.n_scale
     return SimOutput(start=cf.start, finish=cf.finish, ready=cf.ready,
                      exec_time=exec_time, n_epochs=cf.epoch,
                      finish_time=jnp.max(jnp.where(sc.task_valid, cf.finish,
-                                                   0.0)))
+                                                   0.0)),
+                     hit=hit, task_vm2=task_vm2, vm_open=vm_open,
+                     vm_close=vm_close, n_scale=n_scale)
 
 
-def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
+def _control_active(sc: ScenarioArrays) -> bool:
+    """Host-side detection of control inputs in an encoded scenario (or
+    stacked batch).  Under a trace the data is unreadable — report active
+    (the control path with degenerate data is a bitwise identity, just
+    not free); batch drivers that know better pass ``control=`` instead.
+    """
+    try:
+        vf = np.asarray(sc.vm_fail)
+        vv = np.asarray(sc.vm_valid)
+        va = np.asarray(sc.vm_auto)
+        cp = np.asarray(sc.control_policy)
+    except Exception:                     # traced values
+        return True
+    return bool((vv & (vf < _BIG / 2)).any() or (vv & va).any()
+                or (cp != 0).any())
+
+
+def simulate_arrays(sc: ScenarioArrays, *,
+                    control: bool | None = None) -> SimOutput:
     """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly.
 
     Both scheduling policies run branch-free inside the one while_loop body:
@@ -565,25 +837,31 @@ def simulate_arrays(sc: ScenarioArrays) -> SimOutput:
 
     Every live epoch fires at least one start or completion (arrival events
     are only scheduled when a PE slot is free), so ``2T + 2`` epochs bound
-    the loop; rates are evaluated exactly once per epoch.  Batches should
+    the loop (``_lane_bound`` widens this only for lanes that encode VM
+    failures); rates are evaluated exactly once per epoch.  Batches should
     prefer :func:`simulate_batch_arrays`, which shares one epoch loop across
     all lanes and stops at the batch's realized epoch count.
     """
-    T = sc.task_job.shape[0]
-    inv, c0 = _epoch_setup(sc)
+    if control is None:
+        control = _control_active(sc)
+    inv, c0 = _epoch_setup(sc, control=control)
+    bound = _lane_bound(sc) if control \
+        else jnp.int32(2 * sc.task_job.shape[0] + 2)
 
     def cond(c: _Carry):
-        return _has_unfinished(sc, c) & (c.epoch < 2 * T + 2)
+        return _has_unfinished(sc, c) & (c.epoch < bound)
 
     def body(c: _Carry):
-        return _epoch_step(sc, inv, c)._replace(epoch=c.epoch + 1)
+        return _epoch_step(sc, inv, c,
+                           control=control)._replace(epoch=c.epoch + 1)
 
     cf = jax.lax.while_loop(cond, body, c0)
     return _sim_output(sc, cf)
 
 
 def simulate_batch_arrays(
-        batch: ScenarioArrays) -> tuple[SimOutput, jax.Array]:
+        batch: ScenarioArrays, *,
+        control: bool | None = None) -> tuple[SimOutput, jax.Array]:
     """Run a stacked batch with one shared epoch loop (batch early exit).
 
     Instead of vmapping the per-lane ``while_loop`` (whose batching rule
@@ -599,12 +877,18 @@ def simulate_batch_arrays(
     the i32 scalar number of epoch iterations the batch actually executed
     (== the max per-lane ``n_epochs``).
     """
+    if control is None:
+        control = _control_active(batch)
     T = batch.task_job.shape[1]
-    bound = jnp.int32(2 * T + 2)
-    inv, c0 = jax.vmap(_epoch_setup)(batch)
+    V = batch.vm_mips.shape[1]
+    # under control the per-lane bound is data-dependent (_lane_bound,
+    # folded into each lane's activity); the global count only needs the
+    # static worst case
+    bound = jnp.int32(4 * T + V + 2 if control else 2 * T + 2)
+    inv, c0 = jax.vmap(partial(_epoch_setup, control=control))(batch)
 
     def lanes_active(c: _Carry) -> jax.Array:
-        return jax.vmap(_has_unfinished)(batch, c)
+        return jax.vmap(partial(_lane_active, control=control))(batch, c)
 
     # per-lane activity rides in the carry, so each epoch pays exactly one
     # O(N·T) activity scan (cond and body are separate XLA computations and
@@ -615,7 +899,7 @@ def simulate_batch_arrays(
 
     def body(state):
         c, active, n = state
-        c2 = jax.vmap(_epoch_step)(batch, inv, c)
+        c2 = jax.vmap(partial(_epoch_step, control=control))(batch, inv, c)
         # per-lane realized epochs: only lanes that still had work count
         # this iteration (matches the per-lane while_loop's count exactly)
         c2 = c2._replace(epoch=c.epoch + active.astype(jnp.int32))
@@ -630,14 +914,23 @@ def simulate_batch_arrays(
 # Sparse/compacted epoch stepping (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
-_setup_batch = jax.jit(jax.vmap(_epoch_setup))
-_active_batch = jax.jit(jax.vmap(_has_unfinished))
+@partial(jax.jit, static_argnames="control")
+def _setup_batch(batch: ScenarioArrays, control: bool = False):
+    return jax.vmap(partial(_epoch_setup, control=control))(batch)
+
+
+@partial(jax.jit, static_argnames="control")
+def _active_batch(batch: ScenarioArrays, c: _Carry, control: bool = False):
+    return jax.vmap(partial(_lane_active, control=control))(batch, c)
+
+
 _output_batch = jax.jit(jax.vmap(_sim_output))
 
 
-@partial(jax.jit, static_argnames="k")
+@partial(jax.jit, static_argnames=("k", "control"))
 def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
-                      active: jax.Array, remaining: jax.Array, k: int):
+                      active: jax.Array, remaining: jax.Array, k: int,
+                      control: bool = False):
     """Advance the batch up to ``k`` epochs (early-exiting on
     ``any(active)`` and the dynamic ``remaining`` budget) — the one
     compiled stepper both the dense-resume and compacted shapes share.
@@ -650,9 +943,11 @@ def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
 
     def body(state):
         c, act, i = state
-        c2 = jax.vmap(_epoch_step)(batch, inv, c)
+        c2 = jax.vmap(partial(_epoch_step, control=control))(batch, inv, c)
         c2 = c2._replace(epoch=c.epoch + act.astype(jnp.int32))
-        return c2, jax.vmap(_has_unfinished)(batch, c2), i + 1
+        return (c2,
+                jax.vmap(partial(_lane_active, control=control))(batch, c2),
+                i + 1)
 
     return jax.lax.while_loop(cond, body, (carry, active, jnp.int32(0)))
 
@@ -672,7 +967,8 @@ def _put_lanes(store, idx: jax.Array, sub):
 
 def simulate_batch_arrays_compact(
         batch: ScenarioArrays, *, k: int | str = "auto",
-        floor: int = 8, cost_model=None) -> tuple[SimOutput, jax.Array]:
+        floor: int = 8, cost_model=None,
+        control: bool | None = None) -> tuple[SimOutput, jax.Array]:
     """:func:`simulate_batch_arrays` with sparse active-lane compaction.
 
     Tail-heavy batches (mixed-policy / elastic grids) realize 20+ epochs
@@ -701,8 +997,16 @@ def simulate_batch_arrays_compact(
     NOT jit-able — it *contains* jitted chunks; callers inside jit use
     the dense driver.
     """
+    if control is None:
+        control = _control_active(batch)
     N, T = batch.task_job.shape[:2]
     bound = 2 * T + 2
+    if control and bool(np.any(np.asarray(batch.vm_valid)
+                               & (np.asarray(batch.vm_fail) < _BIG / 2))):
+        # failing lanes widen their own epoch bound (_lane_bound); the
+        # host budget only needs the batch-wide worst case — per-lane
+        # counts stay exact through the activity mask
+        bound = 4 * T + batch.vm_mips.shape[1] + 2
     if k == "auto":
         from . import costmodel as costmodel_mod
         cm = cost_model or costmodel_mod.default_cost_model()
@@ -711,10 +1015,10 @@ def simulate_batch_arrays_compact(
     if k < 1:
         raise ValueError(f"simulate_batch_arrays_compact: k must be >= 1 "
                          f"or 'auto', got {k}")
-    inv, c0 = _setup_batch(batch)
+    inv, c0 = _setup_batch(batch, control=control)
     carry_store = c0
     cur_batch, cur_inv, cur_carry = batch, inv, c0
-    cur_active = _active_batch(batch, c0)
+    cur_active = _active_batch(batch, c0, control=control)
     cur_idx = np.arange(N)
     realized = 0
     while realized < bound:
@@ -736,10 +1040,11 @@ def simulate_batch_arrays_compact(
             cur_batch = _take_lanes(batch, take)
             cur_inv = _take_lanes(inv, take)
             cur_carry = _take_lanes(carry_store, take)
-            cur_active = _active_batch(cur_batch, cur_carry)
+            cur_active = _active_batch(cur_batch, cur_carry,
+                                       control=control)
         cur_carry, cur_active, n_step = _step_epoch_chunk(
             cur_batch, cur_inv, cur_carry, cur_active,
-            jnp.int32(bound - realized), k)
+            jnp.int32(bound - realized), k, control=control)
         realized += int(n_step)
     carry_store = _put_lanes(carry_store, jnp.asarray(cur_idx), cur_carry)
     return _output_batch(batch, carry_store), jnp.int32(realized)
@@ -791,7 +1096,10 @@ def job_metrics(sc: ScenarioArrays, out: SimOutput) -> JobMetrics:
     last_red_st = seg_max(out.start, is_red)
     delay = last_map_st + last_red_st - last_map_fin
 
-    cost_rate = sc.vm_cost[sc.task_vm]
+    # cost accrues on the task's *current* VM (the failover slot once a
+    # failure re-dispatched it; == task_vm bitwise in open-loop runs)
+    cur_vm = jnp.where(out.hit, out.task_vm2, sc.task_vm)
+    cost_rate = sc.vm_cost[cur_vm]
     vm_cost = seg_sum(out.exec_time * cost_rate, is_map | is_red)
 
     return JobMetrics(
@@ -836,17 +1144,24 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
     # statically open-ended fleet XLA folds ``sc.vm_stop`` to the _BIG
     # constant and DCEs the whole busy_end chain.
     V = sc.vm_mips.shape[0]
-    vm_onehot_b = sc.task_vm[:, None] == jnp.arange(V)[None, :]
+    # Billing runs over the *realized* windows the control loop left
+    # behind (SimOutput.vm_open/vm_close == the encoded vm_start/vm_stop
+    # in open-loop runs, so the pre-control op sequence is bitwise): a
+    # never-opened reserve (open at _BIG) clamps to zero billed seconds,
+    # an opened-never-closed lease ends with the workload.  Task→VM
+    # attribution uses the current binding slot (failover once hit).
+    cur_vm = jnp.where(out.hit, out.task_vm2, sc.task_vm)
+    vm_onehot_b = cur_vm[:, None] == jnp.arange(V)[None, :]
     ran = sc.task_valid & (out.finish < _BIG / 2)
     fin_ran = jnp.where(ran, out.finish, 0.0)
     busy_end = jnp.max(jnp.where(vm_onehot_b, fin_ran[:, None], 0.0),
                        axis=0)
-    billed_t = elasticity.billed_lease(sc.vm_start, sc.vm_stop, busy_end,
+    billed_t = elasticity.billed_lease(out.vm_open, out.vm_close, busy_end,
                                        out.finish_time, sc.bill_gran, xp=jnp)
     billed = jnp.sum(jnp.where(sc.vm_valid, billed_t * sc.vm_cost, 0.0))
-    lease_end = jnp.where(sc.vm_stop >= _BIG / 2, out.finish_time,
-                          jnp.maximum(sc.vm_stop, busy_end))
-    lease_dur = jnp.maximum(lease_end - sc.vm_start, 0.0)
+    lease_end = jnp.where(out.vm_close >= _BIG / 2, out.finish_time,
+                          jnp.maximum(out.vm_close, busy_end))
+    lease_dur = jnp.maximum(lease_end - out.vm_open, 0.0)
     delivered = jnp.sum(jnp.where(ran, task_lengths(sc), 0.0))
     leased_cap = jnp.sum(jnp.where(sc.vm_valid,
                                    sc.vm_mips * sc.vm_pes * lease_dur, 0.0))
@@ -854,18 +1169,31 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
     started = sc.task_valid & (out.start < _BIG / 2)
     q_wait = jnp.sum(jnp.where(started, out.start - out.ready, 0.0)) \
         / jnp.maximum(jnp.sum(started.astype(jnp.float32)), 1.0)
+    # closed-loop control metrics (DESIGN.md §10; exact zeros open-loop)
+    fail_fired = sc.vm_valid & (sc.vm_fail < _BIG / 2) \
+        & (sc.vm_fail <= out.finish_time)
+    n_failures = jnp.sum(fail_fired.astype(jnp.float32))
+    hit_tasks = sc.task_valid & out.hit
+    n_hit = jnp.sum(hit_tasks.astype(jnp.float32))
+    n_recovered = jnp.sum((hit_tasks & ran).astype(jnp.float32))
+    recovered = n_recovered / jnp.maximum(n_hit, 1.0)
     return ScenarioMetrics(finish_time=out.finish_time, utilization=util,
                            n_epochs=out.n_epochs,
                            locality_fraction=loc_frac, transfer_bytes=xfer,
                            billed_cost=billed, vm_busy_fraction=busy_frac,
-                           queue_wait=q_wait)
+                           queue_wait=q_wait,
+                           failures_injected=n_failures,
+                           tasks_redispatched=n_hit,
+                           scale_events=out.n_scale.astype(jnp.float32),
+                           recovered_fraction=recovered)
 
 
-@jax.jit
-def _simulate_jit(arrs: ScenarioArrays) -> JobMetrics:
-    return job_metrics(arrs, simulate_arrays(arrs))
+@partial(jax.jit, static_argnames="control")
+def _simulate_jit(arrs: ScenarioArrays, control: bool = False) -> JobMetrics:
+    return job_metrics(arrs, simulate_arrays(arrs, control=control))
 
 
 def simulate(sc: Scenario) -> JobMetrics:
     """Convenience single-scenario entry point (returns device arrays)."""
-    return _simulate_jit(from_scenario(sc))
+    arrs = from_scenario(sc)
+    return _simulate_jit(arrs, control=_control_active(arrs))

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import elasticity, network, storage
+from . import control, elasticity, network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 # the engine's masked-argmin fill: LOCALITY's candidate masking must use
@@ -95,6 +95,11 @@ class SimResult:
     jobs: list[JobResult]
     finish_time: float
     n_events: int = 0
+    # closed-loop control counters (DESIGN.md §10; zero open-loop)
+    failures_injected: int = 0
+    tasks_redispatched: int = 0
+    scale_events: int = 0
+    recovered_fraction: float = 0.0
 
     def job(self, j: int = 0) -> JobResult:
         return self.jobs[j]
@@ -269,6 +274,30 @@ class IoTSimBroker:
             assert len(length_multipliers) == len(self.jt.tasks)
             for t, m in zip(self.jt.tasks, length_multipliers):
                 t.length_mi *= m
+        # Closed-loop control (DESIGN.md §10): the same realized failure
+        # streams / reserve markers the array encoders consume, plus the
+        # shared failover-target resolution against the block store and
+        # the shared remote-fetch delay a moved task pays on its new VM.
+        self._ctl = scenario.control
+        self._policy = control.ControlPolicy(self._ctl.policy)
+        vm_fail, vm_restore, vm_auto = control.scenario_control(
+            scenario, n_vms)
+        self._vm_fail = vm_fail.astype(np.float64)
+        self._vm_restore = vm_restore.astype(np.float64)
+        self._vm_auto = vm_auto
+        task_vm = np.asarray([t.vm for t in self.jt.tasks], np.int32)
+        self._task_vm2 = control.failover_targets(
+            task_vm, np.ones(n_vms, bool), vm_auto, bvm, xp=np)
+        self._refetch2 = np.asarray(storage.remote_fetch_delay(
+            bvm, self._block_mb, self._task_vm2,
+            np.float32(scenario.network.kappa_in),
+            np.float32(scenario.network.bw_mbps),
+            np.float32(1.0 if scenario.network.enabled else 0.0),
+            xp=np), np.float64)
+        # reserve VMs admit nothing until the control hook opens them
+        self.tt.avail = np.where(vm_auto, math.inf, self.tt.avail)
+        self._opened: set[int] = set()
+        self._n_scale = 0
 
     # ---- event-driven run ------------------------------------------------
 
@@ -276,8 +305,26 @@ class IoTSimBroker:
         sc = self.scenario
         tasks = self.jt.tasks
         vms = sc.vms
-        calendar: list[tuple[float, int, int]] = []   # (time, seq, task_id)
+        # (time, seq, task_id, generation): the generation stamp makes
+        # events *revocable* — a control action (failure re-dispatch,
+        # reserve open) bumps the task's generation and re-pushes, so the
+        # superseded calendar entry is skipped at pop time
+        calendar: list[tuple[float, int, int, int]] = []
         seq = itertools.count()
+        gen = [0] * len(tasks)
+        hit = [False] * len(tasks)
+
+        def gate(x: float, vm: int) -> float:
+            """The engine's failure-window gate: an instant inside the
+            VM's down window [F, R) is deferred to the restore edge."""
+            f, r = self._vm_fail[vm], self._vm_restore[vm]
+            return r if f <= x < r else x
+
+        def push_arrival(tid: int) -> None:
+            task = tasks[tid]
+            elig = gate(self.tt.eligible_at(task), task.vm)
+            if self.tt.is_open(task.vm, elig):
+                heapq.heappush(calendar, (elig, next(seq), tid, gen[tid]))
 
         # Map tasks become ready at submit + stage-in delay (+ the storage
         # remote-fetch delay when bound off the input block's replica set).
@@ -296,9 +343,7 @@ class IoTSimBroker:
                         0.0, sc.network.bw_mbps,
                         1.0 if sc.network.enabled else 0.0)
                 tasks[tid].ready = ready + fetch
-                elig = self.tt.eligible_at(tasks[tid])
-                if self.tt.is_open(tasks[tid].vm, elig):
-                    heapq.heappush(calendar, (elig, next(seq), tid))
+                push_arrival(tid)
 
         for t in tasks:
             t.remaining = t.length_mi
@@ -307,6 +352,8 @@ class IoTSimBroker:
         now = 0.0
         n_events = 0
         space = self.tt.sched == SchedPolicy.SPACE_SHARED
+        fail_pending = [v for v in range(self.tt.n_vms)
+                        if self._vm_fail[v] < _BIG / 2]
 
         def rates() -> dict[int, float]:
             """Per-running-task rates — computed once per event epoch.
@@ -329,8 +376,75 @@ class IoTSimBroker:
             self.tt.launch(tid, task)
             running.add(tid)
 
+        def control_hook() -> None:
+            """The engine's per-epoch control rule, event-wise: evaluated
+            at the top of every loop iteration at the current clock (the
+            engine evaluates at ``c.time`` before stepping to the next
+            event), opening one reserve per evaluation while both
+            thresholds are exceeded and closing drained opened reserves.
+            ``NONE`` makes this a no-op — the open-loop path is
+            untouched."""
+            if self._policy != control.ControlPolicy.AUTOSCALE:
+                return
+            # close opened reserves with no unfinished bound tasks
+            for v in sorted(self._opened):
+                if now < self.tt.close[v] and not any(
+                        t.finish == math.inf and t.vm == v for t in tasks):
+                    self.tt.close[v] = now
+                    self._n_scale += 1
+            qdepth = sum(1 for t in tasks
+                         if t.finish == math.inf and t.start == math.inf
+                         and t.ready <= now)
+            open_vms = [v for v in range(self.tt.n_vms)
+                        if self.tt.avail[v] <= now < self.tt.close[v]]
+            busy = sum(1 for v in open_vms if self.tt.active[v])
+            busy_frac = busy / max(len(open_vms), 1)
+            if qdepth > self._ctl.queue_threshold \
+                    and busy_frac >= self._ctl.busy_threshold:
+                unopened = [v for v in range(self.tt.n_vms)
+                            if self._vm_auto[v] and v not in self._opened]
+                if unopened:
+                    v = unopened[0]        # lowest index first, one/epoch
+                    self._opened.add(v)
+                    self.tt.avail[v] = now + sc.elasticity.spinup_delay
+                    self._n_scale += 1
+                    # the lease edge re-arms pending arrivals bound here
+                    for tid, t in enumerate(tasks):
+                        if t.finish == math.inf and t.start == math.inf \
+                                and t.vm == v and t.ready < math.inf:
+                            gen[tid] += 1
+                            push_arrival(tid)
+
+        def fire_failure(v: int) -> None:
+            """Kill + re-dispatch every unfinished task whose *current*
+            VM is ``v`` (running, queued, or still pending — the engine's
+            ``affected`` mask): work restarts from scratch, readiness is
+            pushed past the broker's detection latency, and the first hit
+            moves the task to its precomputed failover VM, paying the
+            shared remote-fetch delay to re-replicate its input block."""
+            tf = self._vm_fail[v]
+            rd = self._ctl.redispatch_delay
+            self.tt.queue[v].clear()
+            for tid, task in enumerate(tasks):
+                if task.finish < math.inf or task.vm != v:
+                    continue
+                if tid in running:
+                    running.discard(tid)
+                    self.tt.complete(tid, task)
+                task.remaining = task.length_mi
+                task.start = math.inf
+                task.ready = max(task.ready, tf + rd)
+                if not hit[tid]:
+                    hit[tid] = True
+                    task.vm = int(self._task_vm2[tid])
+                    task.ready += float(self._refetch2[tid])
+                gen[tid] += 1
+                if task.ready < math.inf:
+                    push_arrival(tid)
+
         while calendar or running:
             n_events += 1
+            control_hook()
             r = rates()
             # Next completion under current processor-sharing rates.
             t_comp, comp_ids = math.inf, []
@@ -341,14 +455,16 @@ class IoTSimBroker:
                 elif eta <= t_comp + _EPS:
                     comp_ids.append(tid)
             t_evt = calendar[0][0] if calendar else math.inf
-            t_next = min(t_comp, t_evt)
+            t_fail = min((self._vm_fail[v] for v in fail_pending),
+                         default=math.inf)
+            t_next = min(t_comp, t_evt, t_fail)
 
             # Advance fluid state.
             for tid in running:
                 tasks[tid].remaining -= (t_next - now) * r[tid]
             now = t_next
 
-            if t_comp <= t_evt:            # completions fire first
+            if t_comp <= min(t_evt, t_fail):   # completions win all ties
                 for tid in comp_ids:
                     task = tasks[tid]
                     task.remaining = 0.0
@@ -360,16 +476,18 @@ class IoTSimBroker:
                         if r_ready is not None:
                             for rid in self.jt.reduce_ids[task.job]:
                                 tasks[rid].ready = r_ready
-                                elig = self.tt.eligible_at(tasks[rid])
-                                if self.tt.is_open(tasks[rid].vm, elig):
-                                    heapq.heappush(calendar,
-                                                   (elig, next(seq), rid))
+                                push_arrival(rid)
                     # freed PE slot -> admit the next queued task (only
                     # while the VM's lease is still open)
                     if space:
                         qid = self.tt.admit(task.vm, now)
                         if qid is not None:
                             start_task(qid)
+            elif t_fail <= t_evt:          # failures next: kills beat
+                for v in [v for v in fail_pending    # same-instant starts
+                          if self._vm_fail[v] <= now + _EPS]:
+                    fail_pending.remove(v)
+                    fire_failure(v)
             else:                          # arrivals: task(s) become ready
                 # Space-shared arrivals pool through the per-VM wait queue
                 # even when a slot is free: simultaneous arrivals must be
@@ -378,8 +496,11 @@ class IoTSimBroker:
                 # in calendar pop order.
                 arrived_vms = set()
                 while calendar and calendar[0][0] <= now + _EPS:
-                    _, _, tid = heapq.heappop(calendar)
+                    _, _, tid, g = heapq.heappop(calendar)
                     task = tasks[tid]
+                    if g != gen[tid] or task.start < math.inf \
+                            or task.finish < math.inf:
+                        continue           # superseded by a control action
                     if space:
                         self.tt.enqueue(tid, task)
                         arrived_vms.add(task.vm)
@@ -389,8 +510,17 @@ class IoTSimBroker:
                     while (qid := self.tt.admit(vm, now)) is not None:
                         start_task(qid)
 
+        n_hit = sum(hit)
+        n_rec = sum(1 for tid, h in enumerate(hit)
+                    if h and tasks[tid].finish < math.inf)
+        injected = int(np.sum((self._vm_fail < _BIG / 2)
+                              & (self._vm_fail <= now)))
         return SimResult(tasks=tasks, jobs=self._job_metrics(tasks),
-                         finish_time=now, n_events=n_events)
+                         finish_time=now, n_events=n_events,
+                         failures_injected=injected,
+                         tasks_redispatched=n_hit,
+                         scale_events=self._n_scale,
+                         recovered_fraction=n_rec / max(n_hit, 1))
 
     # ---- dependent variables (paper §5.3) ---------------------------------
 

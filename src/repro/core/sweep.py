@@ -54,6 +54,8 @@ from . import storage as storage_mod
 from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
+from .control import ControlPolicy, as_control_policy
+from .control import failure_times as _failure_times
 from .elasticity import ElasticitySpec, as_arrival_process
 from .engine import (_BIG, JobMetrics, ScenarioArrays, ScenarioMetrics,
                      bind_tasks, from_scenario, job_metrics,
@@ -99,7 +101,9 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 job_submit=0.0, vm_start=0.0, vm_stop=_BIG,
                 spinup_delay=_DEFAULT_ELASTICITY.spinup_delay,
                 billing_granularity=_DEFAULT_ELASTICITY.billing_granularity,
-                task_prio=None) -> ScenarioArrays:
+                task_prio=None, vm_fail=_BIG, vm_restore=_BIG, vm_auto=0.0,
+                control_policy=0, ctl_queue=0.0, ctl_busy=0.0,
+                redispatch_delay=0.0) -> ScenarioArrays:
     """One paper cell as traced arrays — homogeneous or per-VM heterogeneous.
 
     ``vm_mips`` / ``vm_pes`` / ``vm_cost`` are **per-VM vectors** of length
@@ -127,6 +131,18 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     vector (``pad_tasks`` wide, like ``task_mult``).  The defaults — lease
     ``[0, inf)``, no spinup, zero priorities — reproduce the static-fleet
     encoding bit for bit.
+
+    Closed-loop control (DESIGN.md §10): ``vm_fail``/``vm_restore`` are
+    per-VM failure/restore instants (scalars broadcast; ``_BIG`` = never —
+    draw them host-side with :func:`repro.core.control.failure_times` or
+    the :func:`failures` axis so every layer shares one f32 stream),
+    ``vm_auto`` marks reserve VMs (0/1 per VM), ``control_policy`` is the
+    i32 :class:`~repro.core.control.ControlPolicy` id, and
+    ``ctl_queue``/``ctl_busy``/``redispatch_delay`` are the f32 autoscale
+    thresholds and broker re-dispatch latency.  The defaults encode the
+    open-loop scenario bit for bit — and the sweep runners only take the
+    control-enabled engine path when one of these columns is present in
+    the plan at all.
 
     All parameters may be traced — ``vmap`` this over parameter grids;
     ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
@@ -157,6 +173,16 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         vm_valid,
         jnp.minimum(jnp.broadcast_to(f32(vm_stop), (pad_vms,)),
                     jnp.float32(_BIG)), jnp.float32(_BIG))
+    # control arrays: padding / invalid VMs never fail and are not reserves
+    vm_fail_a = jnp.where(
+        vm_valid,
+        jnp.minimum(jnp.broadcast_to(f32(vm_fail), (pad_vms,)),
+                    jnp.float32(_BIG)), jnp.float32(_BIG))
+    vm_restore_a = jnp.where(
+        vm_valid,
+        jnp.minimum(jnp.broadcast_to(f32(vm_restore), (pad_vms,)),
+                    jnp.float32(_BIG)), jnp.float32(_BIG))
+    vm_auto_a = vm_valid & (jnp.broadcast_to(f32(vm_auto), (pad_vms,)) > 0.5)
     map_len, red_len = base_task_lengths_f32(
         f32(job_length), n_maps.astype(jnp.float32),
         n_reduces.astype(jnp.float32), f32(reduce_factor))
@@ -213,6 +239,13 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         spinup_delay=f32(spinup_delay),
         bill_gran=f32(billing_granularity),
         task_prio=jnp.asarray(task_prio, jnp.float32),
+        vm_fail=vm_fail_a,
+        vm_restore=vm_restore_a,
+        vm_auto=vm_auto_a,
+        control_policy=i32(control_policy),
+        ctl_queue=f32(ctl_queue),
+        ctl_busy=f32(ctl_busy),
+        redispatch_delay=f32(redispatch_delay),
     )
 
 
@@ -221,12 +254,21 @@ _CELL_PARAMS = tuple(p for p in inspect.signature(encode_cell).parameters
                      if p not in ("pad_tasks", "pad_vms"))
 _INT_PARAMS = frozenset(
     {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy",
-     "replication", "placement", "storage_seed"})
-_PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost", "vm_start", "vm_stop"})
+     "replication", "placement", "storage_seed", "control_policy"})
+_PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost", "vm_start", "vm_stop",
+                     "vm_fail", "vm_restore", "vm_auto"})
 _PER_TASK = frozenset({"task_mult", "task_prio"})
 # storage knobs that are dead weight unless storage_enabled is set
 _STORAGE_KNOBS = frozenset(
     {"block_size_mb", "replication", "placement", "storage_seed"})
+# columns that switch the engines onto the closed-loop control path
+# (DESIGN.md §10) — a plan without any of them never pays for control
+_CONTROL_PARAMS = frozenset(
+    {"vm_fail", "vm_restore", "vm_auto", "control_policy", "ctl_queue",
+     "ctl_busy", "redispatch_delay"})
+# per-VM pad fill: "no event" sentinels, not zero (a zero-filled failure
+# column would fail every padding VM at t=0 before vm_valid masks it)
+_PER_VM_FILL = {"vm_fail": _BIG, "vm_restore": _BIG}
 
 
 def _validate_cell_columns(cols: Mapping[str, Any]) -> None:
@@ -272,6 +314,21 @@ def _validate_cell_columns(cols: Mapping[str, Any]) -> None:
         raise ValueError(
             "grid_arrays: job_submit must be >= 0 in every cell (arrival "
             "instants are absolute simulation times)")
+    if "control_policy" in conc:
+        bad = np.setdiff1d(conc["control_policy"],
+                           [int(p) for p in ControlPolicy])
+        if bad.size:
+            raise ValueError(
+                f"grid_arrays: control_policy values {bad.tolist()} are not "
+                f"ControlPolicy members "
+                f"{[f'{int(p)}={p.name}' for p in ControlPolicy]}")
+    if "redispatch_delay" in conc and (conc["redispatch_delay"] < 0).any():
+        raise ValueError(
+            "grid_arrays: redispatch_delay must be >= 0 in every cell")
+    for n in ("ctl_queue", "ctl_busy"):
+        if n in conc and (conc[n] < 0).any():
+            raise ValueError(
+                f"grid_arrays: {n} must be >= 0 in every cell")
     knobs = sorted(_STORAGE_KNOBS & set(cols))
     if knobs and "storage_enabled" not in cols:
         raise ValueError(
@@ -409,7 +466,12 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
       store, DESIGN.md §7; combine with the raw ``replication`` /
       ``block_size_mb`` / ``storage_seed`` parameters);
     * ``"placement"`` — :class:`~repro.core.storage.Placement` members,
-      ints, or the names ``"uniform"`` / ``"skewed"``.
+      ints, or the names ``"uniform"`` / ``"skewed"``;
+    * ``"control_policy"`` — :class:`~repro.core.control.ControlPolicy`
+      members, ints, or the names ``"none"`` / ``"autoscale"`` (the
+      closed-loop control hook, DESIGN.md §10; combine with the raw
+      ``ctl_queue``/``ctl_busy`` threshold parameters and per-VM
+      ``vm_auto`` reserve markers, and with :func:`failures` streams).
     """
     values = list(values)
     if not values:
@@ -468,11 +530,16 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
         members = [BindingPolicy(v) for v in values]
         return Axis((name,), tuple((m,) for m in members),
                     {name: np.asarray(members, np.int32)})
+    if name == "control_policy":
+        members = [as_control_policy(v) for v in values]
+        return Axis((name,), tuple((m,) for m in members),
+                    {name: np.asarray(members, np.int32)})
     if name not in _CELL_PARAMS:
         raise ValueError(
             f"axis {name!r}: not an encode_cell parameter or spec axis; "
             f"valid: {list(_CELL_PARAMS)} + ['vm', 'vm_type', 'vms', 'job', "
-            "'job_type', 'network_delay', 'storage', 'placement']")
+            "'job_type', 'network_delay', 'storage', 'placement', "
+            "'control_policy']")
     if any(np.ndim(v) > 0 for v in values):        # per-VM / per-task vectors
         if name not in _PER_VM and name not in _PER_TASK:
             raise ValueError(
@@ -551,6 +618,42 @@ def arrivals(n: int, *, rate, process="poisson", seed: int = 0,
                 {"job_submit": col})
 
 
+def failures(n: int, *, rate, n_vms: int, seed: int = 0,
+             repair_delay: float = np.inf) -> Axis:
+    """A failure-stream dimension (DESIGN.md §10): ``n`` seeded draws of
+    per-VM failure/restore instants become ``vm_fail``/``vm_restore``
+    columns — each grid point injects one realization of the VM fault
+    process, so fault exposure is a grid axis like any other parameter.
+
+    ``rate`` is per-VM failures per simulated second; pass a *sequence*
+    of rates to sweep fault intensity (the axis flattens rates × draws
+    into one labeled dimension, ``select(failure_rate=...)`` filters it).
+    Draw ``k`` of the stream uses seed ``seed + k`` of
+    :func:`repro.core.control.failure_times` — the counter-hash idiom the
+    host encoder shares, so a sweep cell and the equivalent
+    ``Scenario(control=ControlSpec(...))`` encode bit-identical streams.
+    ``n_vms`` fixes the stream width (pin the grid's ``n_vms`` to match).
+    """
+    rates = list(rate) if np.ndim(rate) > 0 else [rate]
+    if not rates:
+        raise ValueError("failures: empty rate list")
+    cols_f, cols_r = [], []
+    for r in rates:
+        for k in range(n):
+            f, rr = _failure_times(n_vms, rate=float(r), seed=seed + k,
+                                   repair_delay=float(repair_delay))
+            cols_f.append(f)
+            cols_r.append(rr)
+    col_f = np.stack(cols_f).astype(np.float32)
+    col_r = np.stack(cols_r).astype(np.float32)
+    if np.ndim(rate) > 0:
+        labels = tuple((float(r), k) for r in rates for k in range(n))
+        return Axis(("failure_rate", "failure"), labels,
+                    {"vm_fail": col_f, "vm_restore": col_r})
+    return Axis(("failure",), tuple((k,) for k in range(n)),
+                {"vm_fail": col_f, "vm_restore": col_r})
+
+
 def product(*dims: Axis, **base: Any) -> "SweepPlan":
     """Cartesian :class:`SweepPlan` over ``dims`` (row-major: the last axis
     varies fastest).  ``base`` pins non-swept parameters for every cell —
@@ -602,6 +705,17 @@ class SweepPlan:
         existing grid point against 64 seeded Poisson arrival instants,
         with ``job_submit`` populated per cell."""
         dim = arrivals(n, rate=rate, process=process, seed=seed, burst=burst)
+        return self.replace(dims=self.dims + (dim,))
+
+    def failures(self, n: int, *, rate, n_vms: int, seed: int = 0,
+                 repair_delay: float = np.inf) -> "SweepPlan":
+        """Append a failure-stream dimension (see module-level
+        :func:`failures`): ``plan.failures(16, rate=1e-3, n_vms=4)``
+        simulates each existing grid point against 16 seeded realizations
+        of the VM fault process, with ``vm_fail``/``vm_restore`` populated
+        per cell."""
+        dim = failures(n, rate=rate, n_vms=n_vms, seed=seed,
+                       repair_delay=repair_delay)
         return self.replace(dims=self.dims + (dim,))
 
     def _compiled(self) -> tuple[dict[str, np.ndarray], int, int]:
@@ -657,7 +771,9 @@ class SweepPlan:
                     "give every VM vector >= n_vms entries (or use the "
                     "'vms' axis, which sets n_vms itself)")
             if c.shape[1] < pad_vms:
-                cols[cname] = np.pad(c, ((0, 0), (0, pad_vms - c.shape[1])))
+                cols[cname] = np.pad(
+                    c, ((0, 0), (0, pad_vms - c.shape[1])),
+                    constant_values=_PER_VM_FILL.get(cname, 0.0))
         for cname, fill in (("task_mult", 1.0), ("task_prio", 0.0)):
             if cname in cols and cols[cname].ndim == 2 \
                     and cols[cname].shape[1] != pad_tasks:
@@ -1017,7 +1133,7 @@ def _bucket_groups(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
 @lru_cache(maxsize=None)
 def _fused_runner(names: tuple[str, ...], pad_tasks: int, pad_vms: int,
                   statics: tuple[tuple[str, int], ...], backend: str,
-                  max_pes: int = 0):
+                  max_pes: int = 0, control: bool = False):
     """encode + simulate + metrics as ONE jitted callable per bucket
     signature.  A single dispatch per bucket (the bucketed schedule's fixed
     cost is dominated by per-call overhead on small hosts), and — the key
@@ -1036,10 +1152,10 @@ def _fused_runner(names: tuple[str, ...], pad_tasks: int, pad_vms: int,
         if backend == "pallas":
             from repro.kernels.mr_sched import \
                 epoch_schedule  # lazy: ref.py cycle
-            out = epoch_schedule(batch, max_pes=max_pes)
+            out = epoch_schedule(batch, max_pes=max_pes, control=control)
             realized = jnp.max(out.n_epochs)
         else:
-            out, realized = simulate_batch_arrays(batch)
+            out, realized = simulate_batch_arrays(batch, control=control)
         return (jax.vmap(job_metrics)(batch, out),
                 jax.vmap(scenario_metrics)(batch, out), realized)
 
@@ -1056,7 +1172,7 @@ def _metrics_batch(batch, out):
 
 def _run_compact(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
                  statics: dict[str, int] | None, backend: str, k, cost,
-                 max_pes: int):
+                 max_pes: int, control: bool = False):
     """One compacted-stepping execution of a cell slice (DESIGN.md §9):
     jitted encode -> host-driven compacted epoch stepping -> jitted
     metrics.  Encode and metrics stay fused and signature-cached exactly
@@ -1069,10 +1185,12 @@ def _run_compact(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
         from repro.kernels.mr_sched import \
             epoch_schedule_compact  # lazy: ref.py cycle
         out, realized = epoch_schedule_compact(batch, k=k, max_pes=max_pes,
-                                               cost_model=cost)
+                                               cost_model=cost,
+                                               control=control)
     else:
         out, realized = simulate_batch_arrays_compact(batch, k=k,
-                                                      cost_model=cost)
+                                                      cost_model=cost,
+                                                      control=control)
     jm, sm = _metrics_batch(batch, out)
     return jm, sm, int(realized)
 
@@ -1083,6 +1201,10 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                    JobMetrics, ScenarioMetrics, np.ndarray]:
     """Encode + simulate one bucket's cells; returns host-side
     ``(JobMetrics, ScenarioMetrics, realized_epochs[n])``."""
+    # the control path is keyed on column *presence* (host-decidable even
+    # for traced columns — engine._control_active is not, under trace):
+    # a plan that never names a control parameter pays zero control cost
+    control = bool(_CONTROL_PARAMS & (set(cols) | set(statics or {})))
     if mesh is not None:
         # pod path: per-lane epoch loops (no per-epoch any() collective,
         # hence no dense tail for `compact` to trim — it is ignored here)
@@ -1090,7 +1212,7 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
         full = -(-n // n_dev) * n_dev
         batch = grid_arrays(_pad_cells(cols, full), pad_tasks=pad_tasks,
                             pad_vms=pad_vms, static_params=statics)
-        jm, sm = _simulate_full_sharded(batch, mesh)
+        jm, sm = _simulate_full_sharded(batch, mesh, control)
         jm = jax.tree.map(lambda x: np.asarray(x)[:n], jm)
         sm = jax.tree.map(lambda x: np.asarray(x)[:n], sm)
         realized = np.full(n, int(np.max(sm.n_epochs)), np.int32)
@@ -1106,21 +1228,22 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                     min(chunk, n))
                 take = min(chunk, n - lo)
                 jm, sm, rz = _run_compact(part, pad_tasks, pad_vms, statics,
-                                          backend, compact, cost, max_pes)
+                                          backend, compact, cost, max_pes,
+                                          control)
                 parts.append(jax.tree.map(lambda x: np.asarray(x)[:take],
                                           (jm, sm)))
                 realized[lo:lo + take] = rz
             jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
             return jm, sm, realized
         jm, sm, rz = _run_compact(cols, pad_tasks, pad_vms, statics,
-                                  backend, compact, cost, max_pes)
+                                  backend, compact, cost, max_pes, control)
         jm = jax.tree.map(np.asarray, jm)
         sm = jax.tree.map(np.asarray, sm)
         return jm, sm, np.full(n, rz, np.int32)
     names = tuple(sorted(cols))
     runner = _fused_runner(names, pad_tasks, pad_vms,
                            tuple(sorted((statics or {}).items())),
-                           backend, max_pes)
+                           backend, max_pes, control)
     if chunk is not None:
         parts, realized = [], np.empty(n, np.int32)
         for lo in range(0, n, chunk):
@@ -1314,31 +1437,39 @@ class SweepResult:
 # Batched simulation entry points
 # ---------------------------------------------------------------------------
 
-def _one_full(sc: ScenarioArrays) -> tuple[JobMetrics, ScenarioMetrics]:
-    out = simulate_arrays(sc)
+def _one_full(sc: ScenarioArrays,
+              control: bool = False) -> tuple[JobMetrics, ScenarioMetrics]:
+    out = simulate_arrays(sc, control=control)
     return job_metrics(sc, out), scenario_metrics(sc, out)
 
 
 @lru_cache(maxsize=None)
-def _sharded_runner(mesh: jax.sharding.Mesh):
+def _sharded_runner(mesh: jax.sharding.Mesh, control: bool = False):
     """One jitted sharded simulate per mesh — repeated ``run(mesh=…)`` calls
     reuse the compilation instead of retracing through a fresh lambda."""
     sharding = jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec(mesh.axis_names))
-    return jax.jit(jax.vmap(_one_full), in_shardings=sharding,
-                   out_shardings=sharding)
+    return jax.jit(jax.vmap(partial(_one_full, control=control)),
+                   in_shardings=sharding, out_shardings=sharding)
 
 
-def _simulate_full_sharded(batch: ScenarioArrays, mesh: jax.sharding.Mesh):
-    return _sharded_runner(mesh)(batch)
+def _simulate_full_sharded(batch: ScenarioArrays, mesh: jax.sharding.Mesh,
+                           control: bool = False):
+    return _sharded_runner(mesh, control)(batch)
 
 
-@jax.jit
+@partial(jax.jit, static_argnames="control")
+def _simulate_batch_jit(batch: ScenarioArrays,
+                        control: bool = False) -> JobMetrics:
+    def one(sc):
+        return job_metrics(sc, simulate_arrays(sc, control=control))
+    return jax.vmap(one)(batch)
+
+
 def simulate_batch(batch: ScenarioArrays) -> JobMetrics:
     """vmap the engine + metrics over a leading scenario dim."""
-    def one(sc):
-        return job_metrics(sc, simulate_arrays(sc))
-    return jax.vmap(one)(batch)
+    from .engine import _control_active
+    return _simulate_batch_jit(batch, control=_control_active(batch))
 
 
 def simulate_batch_sharded(batch: ScenarioArrays,
@@ -1350,10 +1481,13 @@ def simulate_batch_sharded(batch: ScenarioArrays,
     in the dry-run — this workload is the compute-roofline end of the
     simulator story).
     """
+    from .engine import _control_active
+    control = _control_active(batch)
     spec = jax.sharding.PartitionSpec(mesh.axis_names)
     sharding = jax.sharding.NamedSharding(mesh, spec)
     fn = jax.jit(
-        lambda b: jax.vmap(lambda s: job_metrics(s, simulate_arrays(s)))(b),
+        lambda b: jax.vmap(lambda s: job_metrics(
+            s, simulate_arrays(s, control=control)))(b),
         in_shardings=(jax.tree.map(lambda _: sharding, batch),),
         out_shardings=sharding)
     return fn(batch)

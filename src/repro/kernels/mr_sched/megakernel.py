@@ -50,6 +50,23 @@ space-shared admission scan extracts per-VM minima of the lexicographic
 ``prio`` input generalizes the classic ``(ready, index)`` rank; zero
 priorities and the static-fleet window ``[0, 1e30)`` reproduce the
 pre-elastic schedule bit for bit (``tests/test_elasticity.py``).
+
+Closed-loop control (DESIGN.md §10): a static ``control`` flag threads
+the engine's control dataflow through the same kernel — open-loop
+lowerings carry **zero** control code.  When on, ten extra lane-data refs
+(failure/restore instants, reserve flags, policy id + thresholds, the
+precomputed failover binding ``task_vm2`` and its re-replication fetch)
+and four extra carry leaves (``hit``, realized ``vm_open``/``vm_close``,
+``n_scale``) join the loop; every epoch runs the control hook at its
+opening clock, switches each task's one-hot row between its two binding
+slots on ``hit``, joins pending failure instants into the next-event
+min, kills + re-dispatches tasks on fired VMs, and gates admission
+around each VM's ``[fail, restore)`` down window — the exact engine op
+sequence, so seeded-failure and autoscale grids stay bit-identical to
+``engine.simulate_arrays`` (``tests/test_control.py``).  The per-lane
+epoch bound becomes data (``4T + V + 2`` only for lanes that encode a
+failing VM), so degenerate lanes keep the exact open-loop ``2T + 2``
+realized counts.
 """
 from __future__ import annotations
 
@@ -63,14 +80,21 @@ _BIG = 1e30
 _TIME_EPS = 1e-6
 
 
-def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
-            shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
-            vm_start_ref, vm_stop_ref, spinup_ref, prio_ref,
-            time0_ref, rem0_ref, running0_ref, start0_ref, finish0_ref,
-            maps0_ref, lane_ep0_ref,
-            time_ref, rem_ref, running_ref, start_ref, finish_ref,
-            ready_ref, maps_ref, n_epochs_ref,
-            *, T: int, V: int, max_pes: int, epoch_bound: int):
+def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
+            control: bool):
+    (task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
+     shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
+     vm_start_ref, vm_stop_ref, spinup_ref, prio_ref) = refs[:13]
+    n_data = 13
+    if control:
+        (vm_valid_ref, vm_fail_ref, vm_restore_ref, vm_auto_ref,
+         ctl_policy_ref, ctl_queue_ref, ctl_busy_ref, redispatch_ref,
+         task_vm2_ref, refetch_ref) = refs[13:23]
+        n_data = 23
+    n_state = 11 if control else 7
+    state_in = refs[n_data:n_data + n_state]
+    out_refs = refs[n_data + n_state:]
+
     task_len = task_len_ref[...]                 # (tile, T) f32
     task_vm = task_vm_ref[...]                   # (tile, T) i32
     is_red = is_red_ref[...] != 0                # (tile, T)
@@ -83,58 +107,140 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
     vm_stop = vm_stop_ref[...]                   # (tile, V) lease close
     spinup = spinup_ref[...]                     # (tile, 1) boot delay
     prio = prio_ref[...]                         # (tile, T) admission prio
-    tile = task_len.shape[0]
 
     vm_onehot = (task_vm[..., None]
                  == jax.lax.broadcasted_iota(jnp.int32,
                                              (1, 1, V), 2))  # (tile,T,V)
     onehot_b = vm_onehot
     vm_onehot = vm_onehot.astype(jnp.float32)
-    task_pes = jnp.einsum("stv,sv->st", vm_onehot, vm_pes)
     idx = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)     # (1, T)
+    vidx = jax.lax.broadcasted_iota(jnp.int32, (1, V), 1)    # (1, V)
+    task_pes0 = jnp.einsum("stv,sv->st", vm_onehot, vm_pes)
 
-    def to_task(per_vm):
-        """Gather a per-VM quantity to each task's VM (exact: one-hot)."""
-        return jnp.einsum("stv,sv->st", vm_onehot, per_vm)
-
-    def per_vm_sum(per_task):
-        return jnp.einsum("stv,st->sv", vm_onehot, per_task)
+    if control:
+        vm_valid = vm_valid_ref[...] != 0        # (tile, V)
+        vm_fail = vm_fail_ref[...]               # (tile, V) f32
+        vm_restore = vm_restore_ref[...]         # (tile, V) f32
+        vm_auto = vm_auto_ref[...] != 0          # (tile, V) reserve flag
+        pol_on = ctl_policy_ref[...][:, 0] == 1  # (tile,) AUTOSCALE
+        ctl_queue = ctl_queue_ref[...][:, 0]     # (tile,)
+        ctl_busy = ctl_busy_ref[...][:, 0]       # (tile,)
+        redispatch = redispatch_ref[...]         # (tile, 1)
+        task_vm2 = task_vm2_ref[...]             # (tile, T) failover slot
+        refetch = refetch_ref[...]               # (tile, T) re-repl fetch
+        onehot2_b = (task_vm2[..., None]
+                     == jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2))
+        # per-lane epoch bound (engine._lane_bound): only lanes encoding
+        # a failing VM pay the restart/failure-event terms — degenerate
+        # lanes keep the exact open-loop bound (and stranded lanes'
+        # realized n_epochs stay bit-identical)
+        lane_bound = jnp.where(
+            jnp.any(vm_valid & (vm_fail < _BIG / 2), axis=1),
+            jnp.int32(4 * T + V + 2), jnp.int32(2 * T + 2))
 
     # Lease admission windows (DESIGN.md §8), gathered per task with the
     # exact f32 ops the engine's _epoch_setup uses (one-hot gathers are
     # exact; vm_stop carries the _BIG stand-in, never inf — 0 * inf would
     # NaN these einsums).  Static fleets make every use below a bitwise
-    # identity with the pre-elastic kernel.
-    avail_t = to_task(vm_start + spinup)         # (tile, T)
-    close_t = to_task(vm_stop)                   # (tile, T)
+    # identity with the pre-elastic kernel.  Under control these are
+    # re-derived every epoch from the carried realized windows instead.
+    avail_t0 = jnp.einsum("stv,sv->st", vm_onehot, vm_start + spinup)
+    close_t0 = jnp.einsum("stv,sv->st", vm_onehot, vm_stop)
 
     # carry state arrives as refs (the wrapper builds the canonical
     # initial state with the exact constants this kernel used to
     # initialize in VMEM — compacted/chunked drivers resume mid-history
     # by feeding a previous call's state back in)
     state = (
-        time0_ref[...][:, 0],                            # time
-        rem0_ref[...],                                   # rem
-        running0_ref[...] != 0,                          # running
-        start0_ref[...],                                 # start
-        finish0_ref[...],                                # finish
+        state_in[0][...][:, 0],                          # time
+        state_in[1][...],                                # rem
+        state_in[2][...] != 0,                           # running
+        state_in[3][...],                                # start
+        state_in[4][...],                                # finish
         ready0_ref[...],                                 # ready
-        maps0_ref[...][:, 0],                            # maps_left
-        lane_ep0_ref[...][:, 0],                         # lane epochs
+        state_in[5][...][:, 0],                          # maps_left
+        state_in[6][...][:, 0],                          # lane epochs
         jnp.int32(0),                                    # epochs this call
     )
+    if control:
+        state = state + (
+            state_in[7][...] != 0,                       # hit
+            state_in[8][...],                            # vm_open
+            state_in[9][...],                            # vm_close
+            state_in[10][...][:, 0],                     # n_scale
+        )
 
-    def lanes_active(finish):
-        return jnp.any(valid & (finish >= _BIG / 2), axis=1)   # (tile,)
+    def lanes_active(finish, lane_ep):
+        act = jnp.any(valid & (finish >= _BIG / 2), axis=1)    # (tile,)
+        if control:
+            act &= lane_ep < lane_bound
+        return act
 
     def cond(st):
-        return jnp.any(lanes_active(st[4])) & (st[8] < epoch_bound)
+        return jnp.any(lanes_active(st[4], st[7])) & (st[8] < epoch_bound)
 
     def epoch(st):
         (time, rem, running, start, finish, ready, maps_left, lane_ep,
-         n) = st
-        active = lanes_active(finish)
+         n) = st[:9]
+        active = lanes_active(finish, lane_ep)
         runf = running.astype(jnp.float32)
+
+        # --- binding-slot switch + control hook (clock = time) ------------
+        if control:
+            hit, vm_open, vm_close, n_scale = st[9:]
+            cur_oh_b = jnp.where(hit[..., None], onehot2_b, onehot_b)
+            cur_oh = cur_oh_b.astype(jnp.float32)
+        else:
+            cur_oh_b, cur_oh = onehot_b, vm_onehot
+
+        def to_task(per_vm):
+            """Gather a per-VM quantity to each task's current VM
+            (exact: one-hot)."""
+            return jnp.einsum("stv,sv->st", cur_oh, per_vm)
+
+        def per_vm_sum(per_task):
+            return jnp.einsum("stv,st->sv", cur_oh, per_task)
+
+        if control:
+            task_pes = to_task(vm_pes)
+            f_t = to_task(vm_fail)
+            r_t = to_task(vm_restore)
+            unfinished = valid & (finish >= _BIG / 2)
+            # queue depth over *raw* ready times: tasks bound to unopened
+            # reserves must count toward the backlog or the rule that
+            # would open their VM could never trigger
+            qdepth = jnp.sum((unfinished & (start >= _BIG / 2)
+                              & (ready <= time[:, None]))
+                             .astype(jnp.float32), axis=1)
+            busy_v = per_vm_sum(runf) > 0.5
+            open_v = vm_valid & (vm_open + spinup <= time[:, None]) \
+                & (time[:, None] < vm_close)
+            n_open = jnp.sum(open_v.astype(jnp.float32), axis=1)
+            busy_frac = (jnp.sum((open_v & busy_v).astype(jnp.float32),
+                                 axis=1) / jnp.maximum(n_open, 1.0))
+            trigger = pol_on & (qdepth > ctl_queue) & (busy_frac >= ctl_busy)
+            reserve = vm_valid & vm_auto
+            unopened = reserve & (vm_open >= _BIG / 2)
+            # lowest-index unopened reserve: the min of the masked index
+            # key IS the argmin index (keys are the indices themselves)
+            first = jnp.min(jnp.where(unopened, vidx, jnp.int32(V + 1)),
+                            axis=1)
+            open_mask = trigger[:, None] & unopened & (vidx == first[:, None])
+            bound_unfin = per_vm_sum(unfinished.astype(jnp.float32))
+            close_mask = pol_on[:, None] & reserve & (vm_open < _BIG / 2) \
+                & (time[:, None] < vm_close) & (bound_unfin < 0.5)
+            vm_open = jnp.where(open_mask, time[:, None], vm_open)
+            vm_close = jnp.where(close_mask, time[:, None], vm_close)
+            n_scale = n_scale + jnp.sum(open_mask.astype(jnp.int32), axis=1) \
+                + jnp.sum(close_mask.astype(jnp.int32), axis=1)
+            # lease windows re-derived from carry: exactly the hoisted
+            # gathers when no reserve ever opens (one-hot sums are exact)
+            avail_t = to_task(vm_open + spinup)
+            close_t = to_task(vm_close)
+        else:
+            task_pes = task_pes0
+            avail_t, close_t = avail_t0, close_t0
+
         # single rates evaluation per epoch (space-shared keeps n <= pes,
         # so the min() clamp makes this formula serve both policies)
         n_on_vm = per_vm_sum(runf)
@@ -150,13 +256,29 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         # and only while the event time lands before the lease close
         # (candidates at/past it are stranded and define no event).
         elig = jnp.maximum(ready, avail_t)
+        if control:
+            # failure-window gating: any admission instant landing inside
+            # the current VM's [fail, restore) down window slides to the
+            # restore edge — which is how restore instants join the event
+            # min (no separate restore event stream is needed)
+            def gate(x):
+                return jnp.where((x >= f_t) & (x < r_t), r_t, x)
+
+            elig = gate(elig)
+            cand_t = gate(jnp.maximum(elig, time[:, None]))
+        else:
+            cand_t = jnp.maximum(elig, time[:, None])
         # space-shared: pending tasks only define arrival events while a
         # PE slot is free; otherwise a completion epoch admits them.
         has_slot = (task_pes - to_task(n_on_vm)) > 0.5
-        cand_t = jnp.maximum(elig, time[:, None])
         arr = jnp.where(not_started & (~is_space | has_slot)
                         & (cand_t < close_t), cand_t, _BIG)
         t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
+        if control:
+            # pending failure instants of valid VMs are calendar events too
+            fail_ev = jnp.where(vm_valid & (vm_fail > time[:, None]),
+                                vm_fail, _BIG)
+            t_next = jnp.minimum(t_next, jnp.min(fail_ev, axis=1))
         live = t_next < _BIG / 2
         tie = _TIME_EPS * jnp.maximum(t_next, 1.0)
 
@@ -178,6 +300,26 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         ready = jnp.where(is_red & phase_done[:, None],
                           (t_next + shuffle[:, 0])[:, None], ready)
 
+        # failure kills — after completions (a task finishing exactly at
+        # the failure instant completes: the oracle's completions-first
+        # tie order), before admissions
+        start_base = start
+        if control:
+            fired = live[:, None] & (f_t > time[:, None]) \
+                & (f_t <= t_next[:, None])
+            affected = valid & fired & (finish >= _BIG / 2)
+            first_hit = affected & ~hit
+            rem = jnp.where(affected, task_len, rem)
+            running = running & ~affected
+            start_base = jnp.where(affected, jnp.float32(_BIG), start_base)
+            # re-dispatch: detection/re-queue latency from the failure
+            # instant; the first hit moves to the failover slot and pays
+            # the re-replication fetch, a second hit restarts in place
+            ready = jnp.where(affected,
+                              jnp.maximum(ready, f_t + redispatch), ready)
+            ready = jnp.where(first_hit, ready + refetch, ready)
+            hit = hit | first_hit
+
         # arrivals: time-shared starts every admissible task; space-shared
         # admits the (priority desc, eligible time, index)-first waiting
         # tasks into the PE slots left free after this epoch's
@@ -191,6 +333,12 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         eligible = live[:, None] & not_started \
             & (elig <= (t_next + tie)[:, None]) \
             & (t_next[:, None] < close_t)
+        if control:
+            # never admit onto a VM that is down at (or fails exactly at)
+            # this epoch's instant — the killed set was computed above
+            # and a same-instant admission would dodge it
+            eligible &= ~((t_next[:, None] >= f_t)
+                          & (t_next[:, None] < r_t))
         free_v = vm_pes - (n_on_vm - per_vm_sum(done_now.astype(jnp.float32)))
         free_after = to_task(free_v)
         admit = jnp.zeros_like(eligible)
@@ -198,47 +346,62 @@ def _kernel(task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
         for s in range(max_pes):
             prio_m = jnp.where(remaining, prio, -_BIG)
             max_prio_v = jnp.max(
-                jnp.where(onehot_b, prio_m[..., None], -_BIG), axis=1)
+                jnp.where(cur_oh_b, prio_m[..., None], -_BIG), axis=1)
             top = remaining & (prio_m == to_task(max_prio_v))
             elig_m = jnp.where(top, elig, _BIG)
             min_elig_v = jnp.min(
-                jnp.where(onehot_b, elig_m[..., None], _BIG), axis=1)
+                jnp.where(cur_oh_b, elig_m[..., None], _BIG), axis=1)
             cand = top & (elig_m == to_task(min_elig_v))
             idx_m = jnp.where(cand, idx, T)
             min_idx_v = jnp.min(
-                jnp.where(onehot_b, idx_m[..., None], T), axis=1)
+                jnp.where(cur_oh_b, idx_m[..., None], T), axis=1)
             pick = cand & (idx == jnp.einsum(
-                "stv,sv->st", vm_onehot,
+                "stv,sv->st", cur_oh,
                 min_idx_v.astype(jnp.float32)).astype(jnp.int32))
             admit = admit | (pick & (jnp.float32(s) < free_after))
             remaining = remaining & ~pick
         start_now = eligible & (~is_space | admit)
-        start = jnp.where(start_now, t_next[:, None], start)
+        start = jnp.where(start_now, t_next[:, None], start_base)
         running = running | start_now
         time = jnp.where(live, t_next, time)
-        return (time, rem, running, start, finish, ready, maps_left_new,
-                lane_ep + active.astype(jnp.int32), n + 1)
+        new = (time, rem, running, start, finish, ready, maps_left_new,
+               lane_ep + active.astype(jnp.int32), n + 1)
+        if control:
+            new = new + (hit, vm_open, vm_close, n_scale)
+        return new
 
     st = jax.lax.while_loop(cond, epoch, state)
-    time_ref[...] = st[0][:, None]
-    rem_ref[...] = st[1]
-    running_ref[...] = st[2].astype(jnp.int32)
-    start_ref[...] = st[3]
-    finish_ref[...] = st[4]
-    ready_ref[...] = st[5]
-    maps_ref[...] = st[6][:, None]
-    n_epochs_ref[...] = st[7][:, None]
+    out_refs[0][...] = st[0][:, None]
+    out_refs[1][...] = st[1]
+    out_refs[2][...] = st[2].astype(jnp.int32)
+    out_refs[3][...] = st[3]
+    out_refs[4][...] = st[4]
+    out_refs[5][...] = st[5]
+    out_refs[6][...] = st[6][:, None]
+    out_refs[7][...] = st[7][:, None]
+    if control:
+        out_refs[8][...] = st[9].astype(jnp.int32)
+        out_refs[9][...] = st[10]
+        out_refs[10][...] = st[11]
+        out_refs[11][...] = st[12][:, None]
 
 
-def initial_state(task_len, ready0, is_red, valid):
+def initial_state(task_len, ready0, is_red, valid, vm_start=None,
+                  vm_stop=None, vm_auto=None):
     """The canonical t=0 carry state, built with the exact constants the
     kernel used to initialize in VMEM (so feeding it through the state
     inputs is a bitwise no-op vs the pre-carry kernel).  Layout — every
     leaf 2-D for the BlockSpecs: ``(time (N,1) f32, rem (N,T) f32,
     running (N,T) i32, start (N,T) f32, finish (N,T) f32, ready (N,T)
-    f32, maps_left (N,1) i32, n_epochs (N,1) i32)``."""
+    f32, maps_left (N,1) i32, n_epochs (N,1) i32)``.
+
+    Passing ``vm_auto`` (with ``vm_start``/``vm_stop``) appends the four
+    control leaves (DESIGN.md §10): ``hit (N,T) i32, vm_open (N,V) f32,
+    vm_close (N,V) f32, n_scale (N,1) i32`` — reserve VMs start with no
+    realized lease (``vm_open = _BIG``) until the control rule opens one,
+    exactly the engine's ``_epoch_setup`` initialization."""
     N, T = task_len.shape
-    return (jnp.zeros((N, 1), jnp.float32),
+    base = (jnp.zeros((N, 1), jnp.float32),
             task_len,
             jnp.zeros((N, T), jnp.int32),
             jnp.full((N, T), _BIG, jnp.float32),
@@ -247,16 +410,27 @@ def initial_state(task_len, ready0, is_red, valid):
             jnp.sum(((valid != 0) & ~(is_red != 0)).astype(jnp.int32),
                     axis=1, keepdims=True),
             jnp.zeros((N, 1), jnp.int32))
+    if vm_auto is None:
+        return base
+    return base + (
+        jnp.zeros((N, T), jnp.int32),
+        jnp.where(vm_auto != 0, jnp.float32(_BIG),
+                  vm_start.astype(jnp.float32)),
+        vm_stop.astype(jnp.float32),
+        jnp.zeros((N, 1), jnp.int32))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("tile", "interpret", "max_pes",
-                                    "epoch_limit"))
+                                    "epoch_limit", "control"))
 def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
              vm_mips, vm_pes, sched_policy=None, vm_start=None,
-             vm_stop=None, spinup=None, prio=None, state=None, *,
+             vm_stop=None, spinup=None, prio=None, vm_valid=None,
+             vm_fail=None, vm_restore=None, vm_auto=None, ctl_policy=None,
+             ctl_queue=None, ctl_busy=None, redispatch=None, task_vm2=None,
+             refetch=None, state=None, *,
              tile: int = 64, max_pes: int = 8, interpret: bool = True,
-             epoch_limit: int | None = None):
+             epoch_limit: int | None = None, control: bool = False):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
@@ -268,17 +442,28 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     defaults (static fleet, zero priorities) reproduce the pre-elastic
     schedule bit for bit.
 
+    Control lane data (DESIGN.md §10, required iff the static ``control``
+    flag is on): vm_valid/vm_auto: (N,V) i32; vm_fail/vm_restore: (N,V)
+    f32 seeded failure/restore instants (_BIG = never); ctl_policy: (N,1)
+    i32 policy id; ctl_queue/ctl_busy/redispatch: (N,1) f32 thresholds +
+    re-dispatch latency; task_vm2: (N,T) i32 failover binding; refetch:
+    (N,T) f32 re-replication fetch toward it.  ``control=False``
+    lowerings carry none of this — the open-loop kernel is byte-for-byte
+    the pre-control one.
+
     ``state``/``epoch_limit`` make the kernel *resumable* (DESIGN.md §9):
     ``state`` is a full carry in :func:`initial_state` layout (default —
     the t=0 state; when given, the ``ready0`` argument is superseded by
     ``state[5]``) and ``epoch_limit`` caps how many event epochs this
-    call advances (default — the ``2T + 2`` engine bound, i.e. run to
-    completion).  The compacted driver (``ops.epoch_schedule_compact``)
-    steps K-epoch chunks over gathered active lanes this way.
+    call advances (default — the engine bound: ``2T + 2`` open-loop,
+    ``4T + V + 2`` under control, i.e. run to completion).  The compacted
+    driver (``ops.epoch_schedule_compact``) steps K-epoch chunks over
+    gathered active lanes this way.
 
     ``max_pes`` must be >= the largest per-VM PE count in the batch (it
     bounds the static admission scan); ``tile`` lanes share one early-exit
-    epoch loop.  Returns the advanced carry state (same 8-leaf layout).
+    epoch loop.  Returns the advanced carry state (same 8-leaf layout;
+    12 leaves under control).
     """
     N, T = task_len.shape
     V = vm_mips.shape[1]
@@ -292,10 +477,17 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         spinup = jnp.zeros((N, 1), jnp.float32)
     if prio is None:
         prio = jnp.zeros((N, T), jnp.float32)
+    ctl = (vm_valid, vm_fail, vm_restore, vm_auto, ctl_policy, ctl_queue,
+           ctl_busy, redispatch, task_vm2, refetch)
+    if control and any(x is None for x in ctl):
+        raise ValueError("mr_epoch: control=True requires all ten control "
+                         "lane-data arrays (vm_valid .. refetch)")
     if state is None:
-        state = initial_state(task_len, ready0, is_red, valid)
+        state = initial_state(task_len, ready0, is_red, valid,
+                              vm_start=vm_start, vm_stop=vm_stop,
+                              vm_auto=vm_auto if control else None)
     if epoch_limit is None:
-        epoch_limit = 2 * T + 2
+        epoch_limit = 4 * T + V + 2 if control else 2 * T + 2
     tile = min(tile, N)
     while N % tile:
         tile //= 2
@@ -307,21 +499,34 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     spec_t = pl.BlockSpec((tile, T), row)
     spec_1 = pl.BlockSpec((tile, 1), row)
     spec_v = pl.BlockSpec((tile, V), row)
+    data = [task_len, task_vm, state[5], is_red, valid, shuffle,
+            vm_mips, vm_pes, sched_policy, vm_start, vm_stop, spinup, prio]
+    data_specs = [spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
+                  spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t]
+    if control:
+        data += [vm_valid, vm_fail, vm_restore, vm_auto, ctl_policy,
+                 ctl_queue, ctl_busy, redispatch, task_vm2, refetch]
+        data_specs += [spec_v, spec_v, spec_v, spec_v, spec_1, spec_1,
+                       spec_1, spec_1, spec_t, spec_t]
+    state_in = [state[0], state[1], state[2], state[3], state[4],
+                state[6], state[7]]
+    state_in_specs = [spec_1, spec_t, spec_t, spec_t, spec_t, spec_1,
+                      spec_1]
     state_specs = (spec_1, spec_t, spec_t, spec_t, spec_t, spec_t,
                    spec_1, spec_1)
+    if control:
+        state_in += [state[8], state[9], state[10], state[11]]
+        state_in_specs += [spec_t, spec_v, spec_v, spec_1]
+        state_specs = state_specs + (spec_t, spec_v, spec_v, spec_1)
     state_shapes = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
                          for x in state)
     out = pl.pallas_call(
         functools.partial(_kernel, T=T, V=V, max_pes=max_pes,
-                          epoch_bound=epoch_limit),
+                          epoch_bound=epoch_limit, control=control),
         grid=grid,
-        in_specs=[spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
-                  spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t,
-                  spec_1, spec_t, spec_t, spec_t, spec_t, spec_1, spec_1],
+        in_specs=data_specs + state_in_specs,
         out_specs=state_specs,
         out_shape=state_shapes,
         interpret=interpret,
-    )(task_len, task_vm, state[5], is_red, valid, shuffle, vm_mips, vm_pes,
-      sched_policy, vm_start, vm_stop, spinup, prio,
-      state[0], state[1], state[2], state[3], state[4], state[6], state[7])
+    )(*data, *state_in)
     return out

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import network, storage
+from repro.core.control import failover_targets
 from repro.core.engine import (ScenarioArrays, SimOutput, _take_lanes,
                                _put_lanes)
 from repro.core.util import pow2_pad
@@ -53,6 +54,22 @@ def _derived_inputs(batch: ScenarioArrays):
     return task_len, ready0, shuffle
 
 
+def _control_derived(batch: ScenarioArrays):
+    """The engine's control-mode derived inputs (DESIGN.md §10): each
+    task's precomputed failover binding slot and the re-replication fetch
+    it pays toward that VM — the exact op sequences ``_epoch_setup`` runs
+    per scenario, vmapped over the batch (integer logic + the shared
+    broadcastable f32 fetch, so the results are bit-identical)."""
+    task_vm2 = jax.vmap(
+        lambda tv, vv, va, bv: failover_targets(tv, vv, va, bv, xp=jnp)
+    )(batch.task_vm, batch.vm_valid, batch.vm_auto, batch.block_vm)
+    refetch = storage.remote_fetch_delay(
+        batch.block_vm, batch.block_size, task_vm2,
+        batch.kappa_in[:, None], batch.net_bw[:, None],
+        batch.net_enabled[:, None], xp=jnp)
+    return task_vm2, refetch
+
+
 def schedule(batch: ScenarioArrays, *, tile: int = 64,
              interpret: bool | None = None):
     """batch: stacked single-job scenarios (leading dim N)."""
@@ -71,9 +88,27 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
         tile=tile, interpret=interpret)
 
 
+def _control_lane_data(batch: ScenarioArrays, pad, task_vm2, refetch):
+    """The ten control lane-data arrays, padded, in ``mr_epoch``'s
+    positional order.  Pad lanes zero-fill — their ``vm_valid`` is all
+    zero, so they encode no failure events, a NONE policy, and the
+    open-loop 2T+2 lane bound."""
+    return (pad(batch.vm_valid.astype(jnp.int32)),
+            pad(batch.vm_fail.astype(jnp.float32)),
+            pad(batch.vm_restore.astype(jnp.float32)),
+            pad(batch.vm_auto.astype(jnp.int32)),
+            pad(batch.control_policy.astype(jnp.int32)[:, None]),
+            pad(batch.ctl_queue.astype(jnp.float32)[:, None]),
+            pad(batch.ctl_busy.astype(jnp.float32)[:, None]),
+            pad(batch.redispatch_delay.astype(jnp.float32)[:, None]),
+            pad(task_vm2.astype(jnp.int32)),
+            pad(refetch.astype(jnp.float32)))
+
+
 def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
                    max_pes: int | None = None,
-                   interpret: bool | None = None) -> SimOutput:
+                   interpret: bool | None = None,
+                   control: bool = False) -> SimOutput:
     """Run the fused ``mr_epoch`` megakernel over a stacked J=1 batch.
 
     ``max_pes`` bounds the static per-VM admission scan and must cover the
@@ -82,6 +117,11 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
     explicitly for bigger VMs — ``SweepPlan.run`` does).  The batch is
     padded up to a ``tile`` multiple with empty lanes (zero valid tasks,
     so they exit immediately) and trimmed back.
+
+    ``control=True`` (static — host-decided from column presence, see
+    ``sweep._CONTROL_PARAMS``) threads the closed-loop lane data through
+    the kernel (DESIGN.md §10); degenerate control data reproduces the
+    open-loop schedule bit for bit.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -98,6 +138,9 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         widths = ((0, n_pad),) + ((0, 0),) * (x.ndim - 1)
         return jnp.pad(x, widths)
 
+    ctl = ()
+    if control:
+        ctl = _control_lane_data(batch, pad, *_control_derived(batch))
     st = mr_epoch(
         pad(task_len.astype(jnp.float32)),
         pad(batch.task_vm.astype(jnp.int32)),
@@ -114,26 +157,44 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         pad(batch.vm_stop.astype(jnp.float32)),
         pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
         pad(batch.task_prio.astype(jnp.float32)),
-        tile=tile, max_pes=max_pes, interpret=interpret)
-    return _sim_output_of_state(batch, st, N)
+        *ctl,
+        tile=tile, max_pes=max_pes, interpret=interpret, control=control)
+    return _sim_output_of_state(batch, st, N, control=control)
 
 
-def _sim_output_of_state(batch: ScenarioArrays, st, N: int) -> SimOutput:
+def _sim_output_of_state(batch: ScenarioArrays, st, N: int, *,
+                         control: bool = False) -> SimOutput:
     """Trim a (padded) mr_epoch carry state back to ``N`` lanes and shape
-    it into the engine's :class:`SimOutput` (exact op sequence)."""
+    it into the engine's :class:`SimOutput` (exact op sequence —
+    including the engine's ``_sim_output`` control fields: open-loop
+    states report the encoded scenario as the realized control outputs,
+    control states read the four extra carry leaves; ``task_vm2`` is the
+    failover binding control *would* use in either lowering)."""
     start, finish, ready = st[3][:N], st[4][:N], st[5][:N]
     n_epochs = st[7][:N, 0]
     exec_time = jnp.where(batch.task_valid, finish - start, 0.0)
     finish_time = jnp.max(jnp.where(batch.task_valid, finish, 0.0), axis=1)
+    task_vm2, _ = _control_derived(batch)
+    if control:
+        hit = st[8][:N] != 0
+        vm_open, vm_close = st[9][:N], st[10][:N]
+        n_scale = st[11][:N, 0]
+    else:
+        hit = jnp.zeros_like(batch.task_valid)
+        vm_open = jnp.asarray(batch.vm_start, jnp.float32)
+        vm_close = jnp.asarray(batch.vm_stop, jnp.float32)
+        n_scale = jnp.zeros(N, jnp.int32)
     return SimOutput(start=start, finish=finish, ready=ready,
                      exec_time=exec_time, n_epochs=n_epochs,
-                     finish_time=finish_time)
+                     finish_time=finish_time, hit=hit, task_vm2=task_vm2,
+                     vm_open=vm_open, vm_close=vm_close, n_scale=n_scale)
 
 
 def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
                            tile: int = 64, max_pes: int | None = None,
                            interpret: bool | None = None, floor: int = 8,
-                           cost_model=None) -> tuple[SimOutput, jnp.ndarray]:
+                           cost_model=None, control: bool = False
+                           ) -> tuple[SimOutput, jnp.ndarray]:
     """Sparse active-lane compaction over the ``mr_epoch`` megakernel
     (DESIGN.md §9) — the Pallas twin of
     ``engine.simulate_batch_arrays_compact``.
@@ -152,13 +213,23 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
     Returns ``(SimOutput, realized_epochs)`` with realized the batch max
     of the per-lane counts (the same reduction the dense pallas sweep
     path exposes).
+
+    ``control=True`` composes the closed loop with compaction
+    (DESIGN.md §10): killed-then-restored lanes stay in the host-side
+    active set (their tasks are unfinished), so a failure that re-opens
+    work after a lane looked nearly done simply keeps the lane in the
+    gather — the epoch body stays idempotent for finished lanes and the
+    result stays bitwise identical to the dense control path.  The host
+    bound widens to the control epoch bound; the kernel's per-lane bound
+    keeps degenerate lanes' realized counts at the open-loop ``2T + 2``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if max_pes is None:
         max_pes = max(int(np.ceil(float(jnp.max(batch.vm_pes)))), 1)
     N, T = batch.task_vm.shape
-    bound = 2 * T + 2
+    V = batch.vm_mips.shape[1]
+    bound = 4 * T + V + 2 if control else 2 * T + 2
     if k == "auto":
         from repro.core import costmodel as costmodel_mod
         cm = cost_model or costmodel_mod.default_cost_model()
@@ -185,8 +256,13 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
              pad(batch.vm_stop.astype(jnp.float32)),
              pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
              pad(batch.task_prio.astype(jnp.float32)))
+    if control:
+        lanes = lanes + _control_lane_data(batch, pad,
+                                           *_control_derived(batch))
     store = initial_state(lanes[0], pad(ready0.astype(jnp.float32)),
-                          lanes[2], lanes[3])
+                          lanes[2], lanes[3],
+                          vm_start=lanes[8], vm_stop=lanes[9],
+                          vm_auto=lanes[15] if control else None)
     valid_np = np.asarray(lanes[3]) != 0                 # (N', T) host
     cur_idx = np.arange(N + n_pad)
     cur_lanes, cur_state = lanes, store
@@ -211,8 +287,9 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
         limit = min(k, bound - total)
         cur_state = mr_epoch(*cur_lanes[:2], cur_state[5], *cur_lanes[2:],
                              state=cur_state, tile=tile, max_pes=max_pes,
-                             interpret=interpret, epoch_limit=limit)
+                             interpret=interpret, epoch_limit=limit,
+                             control=control)
         total += limit
     store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
-    out = _sim_output_of_state(batch, store, N)
+    out = _sim_output_of_state(batch, store, N, control=control)
     return out, jnp.max(out.n_epochs)

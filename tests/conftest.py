@@ -1,0 +1,23 @@
+"""Shared pytest fixtures.
+
+The suite compiles hundreds of distinct XLA executables (four engine
+layers × policy/storage/elastic/control variants × compaction shapes).
+On the CPU backend those live executables accumulate JIT code mappings
+for the whole process lifetime, and past a threshold a later
+``backend_compile`` dies with a hard SIGSEGV inside XLA — deterministic
+at whichever test happens to push it over (observed at
+``test_sweep_api`` once the control suite ran first).  Dropping the
+compilation caches between modules bounds the live-executable set; each
+module recompiles what it actually uses.
+"""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -279,10 +279,33 @@ def test_cost_model_roundtrip_and_determinism(tmp_path):
     m1 = costmodel.load_cost_model(path, device="pinned")
     m2 = costmodel.load_cost_model(path)        # single-entry form
     assert m1 == m2 == PINNED
-    # file contents are plain JSON with exactly the two coefficients
+    # file contents are plain JSON: schema version + the two coefficients
     data = json.loads(path.read_text())
-    assert data == {"pinned": {"dispatch_us": 800.0,
-                               "epoch_lane_us": 0.05}}
+    assert data == {"schema": costmodel.SCHEMA_VERSION,
+                    "models": {"pinned": {"dispatch_us": 800.0,
+                                          "epoch_lane_us": 0.05}}}
+
+
+def test_cost_model_stale_schema_invalidated(tmp_path):
+    """Pre-schema / mismatched caches raise on load and are discarded on
+    save instead of feeding drifted coefficients to the schedulers."""
+    path = tmp_path / "costmodel.json"
+    # the pre-schema format: a bare device -> coefficients mapping
+    path.write_text(json.dumps(
+        {"old-dev": {"dispatch_us": 1.0, "epoch_lane_us": 9.9}}))
+    with pytest.raises(ValueError, match="schema"):
+        costmodel.load_cost_model(path, device="old-dev")
+    # a future schema version is equally stale
+    path.write_text(json.dumps(
+        {"schema": costmodel.SCHEMA_VERSION + 1,
+         "models": {"d": {"dispatch_us": 1.0, "epoch_lane_us": 1.0}}}))
+    with pytest.raises(ValueError, match="schema"):
+        costmodel.load_cost_model(path)
+    # saving over a stale cache drops its entries entirely
+    costmodel.save_cost_model(PINNED, path)
+    data = json.loads(path.read_text())
+    assert data["schema"] == costmodel.SCHEMA_VERSION
+    assert list(data["models"]) == ["pinned"]
 
 
 def test_cost_model_scoring_is_deterministic():

@@ -1,0 +1,398 @@
+"""Closed-loop control subsystem (DESIGN.md §10): seeded fault injection,
+reactive autoscaling, re-replication — cross-layer parity in the repo's
+usual pattern:
+
+* **failure-stream determinism** — the counter-hash exponential stream is
+  seeded pure arithmetic: reproducible, seed-sensitive, and *exactly*
+  rate-scaled (doubling the rate halves every instant bit for bit, the
+  division happening in f64 before the single f32 cast);
+* **degenerate bitwise parity** — a scenario that never mentions control
+  must come out bit-identical whether the static ``control`` flag is off
+  or on (every control op is a ``where`` over an all-false mask), across
+  engine ↔ batched ↔ batched-compact (K ∈ {1, 4, "auto"}) ↔ pallas
+  ``mr_epoch`` dense + compact — including lanes with stranded tasks,
+  whose realized ``n_epochs`` must keep the exact open-loop ``2T + 2``
+  count under the widened control epoch bound;
+* **seeded failure grids** — injected VM failures with re-dispatch and
+  re-replication: oracle event-wise model to the f32-engine tolerance
+  (rtol 2e-4) with *exactly* equal event counts, and engine ↔ batched ↔
+  pallas **bitwise** (the acceptance grid: ``failures_injected > 0``,
+  ``recovered_fraction >= 0.9``);
+* **autoscale acceptance** — reactive reserve VMs under the AUTOSCALE
+  policy: scale events match the oracle exactly, and shrinking the queue
+  threshold strictly reduces ``queue_wait`` on an overloaded
+  space-shared grid;
+* export: the four control metrics ride ``to_table()`` and the streaming
+  parquet writer through the shared ``_long_form_columns`` encoding.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (ControlPolicy, ControlSpec, Scenario, SchedPolicy,
+                        VMSpec, control, engine, refsim, sweep)
+from repro.core.config import JobSpec, paper_scenario
+from repro.core.sweep import axis, failures, product
+from repro.kernels.mr_sched import epoch_schedule, epoch_schedule_compact
+
+_BIG = engine._BIG
+REF_FIELDS = ("avg_exec", "max_exec", "min_exec", "makespan", "delay_time",
+              "vm_cost", "network_cost")
+CONTROL_METRICS = ("failures_injected", "tasks_redispatched",
+                   "scale_events", "recovered_fraction")
+
+
+# ---------------------------------------------------------------------------
+# Failure streams: seeded counter-hash exponentials
+# ---------------------------------------------------------------------------
+
+def test_failure_times_deterministic_and_seeded():
+    f1, r1 = control.failure_times(32, rate=0.001, seed=5, repair_delay=60.0)
+    f2, r2 = control.failure_times(32, rate=0.001, seed=5, repair_delay=60.0)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(r1, r2)
+    f3, _ = control.failure_times(32, rate=0.001, seed=6)
+    assert (f1 != f3).any(), "seed must matter"
+    # counter-based: a wider fleet extends the same per-VM draws
+    np.testing.assert_array_equal(
+        f1, control.failure_times(48, rate=0.001, seed=5)[0][:32])
+    assert (f1 > 0).all() and (r1 > f1).all()
+    np.testing.assert_allclose(r1, np.minimum(f1 + np.float32(60.0), _BIG))
+
+
+def test_failure_rate_scales_exactly():
+    slow, _ = control.failure_times(64, rate=0.0005, seed=3)
+    fast, _ = control.failure_times(64, rate=0.001, seed=3)
+    # the exponential inversion divides by the rate in f64 before the one
+    # f32 cast, and halving is exact in binary floating point
+    np.testing.assert_array_equal(fast, slow / 2.0)
+
+
+def test_failure_times_disabled_and_unrepaired():
+    f, r = control.failure_times(8, rate=0.0)
+    assert (f == _BIG).all() and (r == _BIG).all()
+    f, r = control.failure_times(8, rate=0.01)        # repair defaults inf
+    assert (f < _BIG / 2).all() and (r == _BIG).all()
+    with pytest.raises(ValueError, match="n_vms"):
+        control.failure_times(0, rate=0.01)
+
+
+def test_failover_targets_preference_order():
+    vm_valid = np.array([True, True, True, True])
+    no_blocks = np.full((3, 2), -1, np.int32)
+    # cyclic from bound+1, skipping nothing: 0->1, 1->2, 3->0
+    out = control.failover_targets(np.array([0, 1, 3]), vm_valid,
+                                   np.zeros(4, bool), no_blocks)
+    np.testing.assert_array_equal(out, [1, 2, 0])
+    # replica holders win over closer non-holders
+    blocks = np.array([[2, 3], [2, 3], [2, 3]], np.int32)
+    out = control.failover_targets(np.array([0, 1, 3]), vm_valid,
+                                   np.zeros(4, bool), blocks)
+    np.testing.assert_array_equal(out, [2, 2, 2])
+    # reserves are skipped unless nothing else exists; lone VM falls back
+    # to itself
+    out = control.failover_targets(np.array([0]), np.array([True, True]),
+                                   np.array([False, True]), no_blocks[:1])
+    np.testing.assert_array_equal(out, [0])
+    out = control.failover_targets(np.array([0]), np.array([True, False]),
+                                   np.zeros(2, bool), no_blocks[:1])
+    np.testing.assert_array_equal(out, [0])
+
+
+# ---------------------------------------------------------------------------
+# Degenerate parity: the control lowering is a bitwise identity
+# ---------------------------------------------------------------------------
+
+def _stranding_batch():
+    """Open-loop scenarios incl. a lane whose lease closes before some
+    tasks can start (stranded: finish stays _BIG, n_epochs hits 2T+2)."""
+    scs = [paper_scenario(n_maps=6, n_reduces=2, n_vms=3),
+           paper_scenario(n_maps=8, n_reduces=2, n_vms=4,
+                          sched_policy=SchedPolicy.SPACE_SHARED)]
+    from repro.core.elasticity import ElasticitySpec
+    strand = scs[1].replace(
+        vms=tuple(dataclasses.replace(v, lease_stop=500.0)
+                  for v in scs[1].vms),
+        elasticity=ElasticitySpec())
+    return sweep.stack_scenarios(scs + [strand])
+
+
+# every SimOutput field is bitwise-comparable across lowerings: both the
+# open-loop and control paths report the failover binding control *would*
+# use in ``task_vm2``, so the flag only changes the dynamics, never the
+# reported metadata
+SCHED_FIELDS = engine.SimOutput._fields
+
+
+def _assert_same(a, b, fields, msg):
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}: {f}")
+
+
+def test_degenerate_control_bitwise_every_mode():
+    batch = _stranding_batch()
+    assert not engine._control_active(batch)
+    ref, _ = engine.simulate_batch_arrays(batch, control=False)
+    assert (np.asarray(ref.finish[2]) >= _BIG / 2).any(), "no stranded lane"
+    on, _ = engine.simulate_batch_arrays(batch, control=True)
+    _assert_same(ref, on, SCHED_FIELDS, "engine control=True")
+    lane = jax.vmap(lambda sc: engine.simulate_arrays(sc, control=True)
+                    )(batch)
+    _assert_same(ref, lane, SCHED_FIELDS, "vmapped simulate_arrays")
+    for K in (1, 4, "auto"):
+        comp, _ = engine.simulate_batch_arrays_compact(batch, k=K,
+                                                       control=True)
+        _assert_same(ref, comp, SCHED_FIELDS, f"engine compact k={K}")
+        pal, _ = epoch_schedule_compact(batch, k=K, control=True)
+        _assert_same(ref, pal, SCHED_FIELDS, f"pallas compact k={K}")
+    dense = epoch_schedule(batch, control=True)
+    _assert_same(ref, dense, SCHED_FIELDS, "pallas dense")
+    # and the control-off pallas path matches the control-on one fully
+    _assert_same(epoch_schedule(batch), dense, SCHED_FIELDS, "pallas off/on")
+
+
+def test_degenerate_control_columns_bitwise_noop_in_sweep():
+    """Explicit zeroed/disabled control columns == a plan that never
+    mentions control, through the sweep (which routes the first through
+    the control lowering and the second through the open-loop one)."""
+    plain = product(axis("n_maps", range(2, 8)), n_reduces=2, n_vms=4)
+    ctl = product(axis("n_maps", range(2, 8)), n_reduces=2, n_vms=4,
+                  control_policy="none", ctl_queue=0.0, ctl_busy=0.0,
+                  redispatch_delay=0.0)
+    a, b = plain.run(), ctl.run()
+    for f in a.metric_names:
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f)
+    c = ctl.run(backend="pallas")
+    for f in a.metric_names:
+        np.testing.assert_array_equal(a[f], c[f], err_msg=f"pallas {f}")
+    assert (a["failures_injected"] == 0).all()
+    assert (a["scale_events"] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Seeded failure grids: oracle event parity + three-way bitwise
+# ---------------------------------------------------------------------------
+
+def _failure_scenario(seed, sp=SchedPolicy.TIME_SHARED):
+    sc = paper_scenario(n_maps=6, n_reduces=2, n_vms=4, sched_policy=sp)
+    return sc.replace(control=ControlSpec(
+        failure_rate=0.002, failure_seed=seed, repair_delay=300.0,
+        redispatch_delay=5.0))
+
+
+@pytest.mark.parametrize("sp", list(SchedPolicy))
+@pytest.mark.parametrize("seed", [7, 11, 23])
+def test_failure_refsim_matches_engine(seed, sp):
+    sc = _failure_scenario(seed, sp)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs, control=True)
+    sm = engine.scenario_metrics(arrs, out)
+    # event counts are integers: exactly equal, and failures really fired
+    assert int(sm.failures_injected) == ref.failures_injected > 0
+    assert int(sm.tasks_redispatched) == ref.tasks_redispatched
+    assert int(sm.scale_events) == ref.scale_events == 0
+    np.testing.assert_allclose(float(sm.recovered_fraction),
+                               ref.recovered_fraction, rtol=1e-6)
+    assert ref.recovered_fraction >= 0.9
+    # per-task schedule: oracle f64 vs engine f32
+    n = sc.total_tasks()
+    np.testing.assert_allclose(
+        np.asarray(out.finish[:n]), [t.finish for t in ref.tasks],
+        rtol=2e-4, atol=1e-2, err_msg=f"finish (seed {seed})")
+    np.testing.assert_allclose(
+        np.asarray(out.start[:n]), [t.start for t in ref.tasks],
+        rtol=2e-4, atol=1e-2, err_msg=f"start (seed {seed})")
+    for f in REF_FIELDS:
+        got = engine._simulate_jit(engine.from_scenario(sc), control=True)
+        np.testing.assert_allclose(
+            float(getattr(got, f)[0]), getattr(ref.jobs[0], f),
+            rtol=2e-4, atol=1e-2, err_msg=f"{f} (seed {seed})")
+
+
+def test_failure_grid_three_way_bitwise():
+    plan = (product(axis("vm_mips", [250.0, 500.0]),
+                    axis("sched_policy", list(SchedPolicy)),
+                    n_maps=6, n_reduces=2, n_vms=4, redispatch_delay=5.0)
+            .failures(4, rate=0.002, n_vms=4, seed=7, repair_delay=300.0))
+    te = plan.run()
+    tp = plan.run(backend="pallas")
+    tc = plan.run(compact=4)
+    tpc = plan.run(backend="pallas", compact=4)
+    for f in te.metric_names:
+        for name, other in (("pallas", tp), ("compact", tc),
+                            ("pallas-compact", tpc)):
+            np.testing.assert_array_equal(te[f], other[f],
+                                          err_msg=f"{name}: {f}")
+    # the acceptance grid really exercises the machinery
+    assert (np.asarray(te["failures_injected"]) > 0).all()
+    assert (np.asarray(te["recovered_fraction"]) >= 0.9).all()
+    assert (np.asarray(te["tasks_redispatched"]) > 0).any()
+
+
+def test_failures_axis_shapes_and_rate_labels():
+    dim = failures(6, rate=[0.001, 0.002], n_vms=3, seed=1,
+                   repair_delay=100.0)
+    assert dim.names == ("failure_rate", "failure")
+    assert len(dim) == 12
+    assert dim.columns["vm_fail"].shape == (12, 3)
+    assert dim.columns["vm_restore"].shape == (12, 3)
+    single = failures(4, rate=0.001, n_vms=3)
+    assert single.names == ("failure",)
+    assert (failures(2, rate=0.0, n_vms=3).columns["vm_fail"] == _BIG).all()
+    with pytest.raises(ValueError, match="rate"):
+        failures(4, rate=[], n_vms=3)
+
+
+def test_failure_masks_compose_with_compaction_stranded_mix():
+    """A grid mixing failing lanes with a stranded open-loop lane: the
+    compacted drivers must re-activate killed lanes correctly AND keep
+    the stranded lane's open-loop 2T+2 realized count."""
+    from repro.core.elasticity import ElasticitySpec
+    scs = [_failure_scenario(seed, sp)
+           for seed, sp in zip([7, 11, 23, 5], list(SchedPolicy) * 2)]
+    plain = paper_scenario(n_maps=8, n_reduces=2, n_vms=4,
+                           sched_policy=SchedPolicy.SPACE_SHARED)
+    strand = plain.replace(
+        vms=tuple(dataclasses.replace(v, lease_stop=500.0)
+                  for v in plain.vms),
+        elasticity=ElasticitySpec())
+    batch = sweep.stack_scenarios(scs + [plain, strand])
+    assert engine._control_active(batch)
+    T = batch.task_job.shape[1]
+    ref, re = engine.simulate_batch_arrays(batch, control=True)
+    assert (np.asarray(ref.finish[5]) >= _BIG / 2).any(), "lane 5 not "\
+        "stranded"
+    assert int(ref.n_epochs[5]) == 2 * T + 2    # open-loop bound exactly
+    for K in (1, 4, "auto"):
+        ce, ree = engine.simulate_batch_arrays_compact(batch, k=K,
+                                                       control=True)
+        cp, rep = epoch_schedule_compact(batch, k=K, control=True)
+        _assert_same(ref, ce, engine.SimOutput._fields, f"engine k={K}")
+        _assert_same(ref, cp, engine.SimOutput._fields, f"pallas k={K}")
+        assert int(re) == int(ree) == int(rep)
+    dense = epoch_schedule(batch, control=True)
+    _assert_same(ref, dense, engine.SimOutput._fields, "pallas dense")
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling: oracle parity + acceptance
+# ---------------------------------------------------------------------------
+
+def _autoscale_scenario(sp=SchedPolicy.SPACE_SHARED, queue=2.0, busy=0.5):
+    vms = (VMSpec("base", mips=250.0), VMSpec("base", mips=250.0),
+           VMSpec("res", mips=250.0, autoscale=True),
+           VMSpec("res", mips=250.0, autoscale=True))
+    job = JobSpec("j", length_mi=362_880.0, data_mb=200_000.0,
+                  n_maps=12, n_reduces=2)
+    return Scenario(vms=vms, jobs=(job,), sched_policy=sp,
+                    control=ControlSpec(policy=ControlPolicy.AUTOSCALE,
+                                        queue_threshold=queue,
+                                        busy_threshold=busy))
+
+
+@pytest.mark.parametrize("sp", list(SchedPolicy))
+def test_autoscale_refsim_matches_engine(sp):
+    sc = _autoscale_scenario(sp)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs, control=True)
+    sm = engine.scenario_metrics(arrs, out)
+    assert int(sm.scale_events) == ref.scale_events > 0
+    assert int(sm.failures_injected) == ref.failures_injected == 0
+    n = sc.total_tasks()
+    np.testing.assert_allclose(
+        np.asarray(out.finish[:n]), [t.finish for t in ref.tasks],
+        rtol=2e-4, atol=1e-2)
+
+
+def test_autoscale_engine_batched_pallas_bitwise():
+    scs = [_autoscale_scenario(sp) for sp in SchedPolicy]
+    batch = sweep.stack_scenarios(scs)
+    lane = jax.vmap(lambda sc: engine.simulate_arrays(sc, control=True)
+                    )(batch)
+    both, _ = engine.simulate_batch_arrays(batch, control=True)
+    kern = epoch_schedule(batch, tile=2, control=True)
+    _assert_same(lane, both, engine.SimOutput._fields, "batched")
+    _assert_same(lane, kern, engine.SimOutput._fields, "pallas")
+    comp, _ = epoch_schedule_compact(batch, k=1, control=True)
+    _assert_same(lane, comp, engine.SimOutput._fields, "pallas compact")
+    # reserves really open and close again once drained
+    assert (np.asarray(lane.n_scale) >= 2).all()
+    vm_open = np.asarray(lane.vm_open)
+    assert (vm_open[:, 2:4] < _BIG / 2).any(), "no reserve ever opened"
+
+
+def _staggered_autoscale_scenario(queue):
+    """Overloaded fleet whose queue depth *ramps* (three jobs whose input
+    fetch delays stagger their ready times) — so the reactive threshold
+    controls *when* the reserves open, not just whether."""
+    vms = (VMSpec("base", mips=250.0), VMSpec("base", mips=250.0),
+           VMSpec("res", mips=250.0, autoscale=True),
+           VMSpec("res", mips=250.0, autoscale=True))
+    jobs = tuple(JobSpec(f"j{i}", length_mi=362_880.0, data_mb=d,
+                         n_maps=4, n_reduces=1)
+                 for i, d in enumerate([50_000.0, 200_000.0, 400_000.0]))
+    return Scenario(vms=vms, jobs=jobs,
+                    sched_policy=SchedPolicy.SPACE_SHARED,
+                    control=ControlSpec(policy=ControlPolicy.AUTOSCALE,
+                                        queue_threshold=queue,
+                                        busy_threshold=0.5))
+
+
+def test_shrinking_queue_threshold_strictly_reduces_queue_wait():
+    thresholds = [0.0, 1.0, 2.0, 3.0, 4.0]
+    batch = sweep.stack_scenarios(
+        [_staggered_autoscale_scenario(q) for q in thresholds])
+    out, _ = engine.simulate_batch_arrays(batch, control=True)
+    sm = jax.vmap(engine.scenario_metrics)(batch, out)
+    qw = np.asarray(sm.queue_wait)
+    assert (np.diff(qw) > 0).all(), qw          # lower threshold -> less wait
+    assert (np.asarray(sm.scale_events) > 0).all()
+    assert (np.asarray(out.finish) < _BIG / 2).all()  # nobody stranded
+
+
+def test_autoscale_sweep_columns_engine_pallas_bitwise():
+    """The sweep-encoded autoscale columns (``vm_auto`` base arg +
+    ``control_policy``/threshold columns) drive the same lowering on every
+    backend."""
+    plan = product(axis("ctl_queue", [0.0, 4.0, 10.0]),
+                   n_maps=16, n_reduces=2, n_vms=4,
+                   vm_auto=np.array([0.0, 0.0, 1.0, 1.0], np.float32),
+                   control_policy="autoscale", ctl_busy=0.5,
+                   sched_policy=SchedPolicy.SPACE_SHARED)
+    res = plan.run()
+    pal = plan.run(backend="pallas")
+    for f in res.metric_names:
+        np.testing.assert_array_equal(res[f], pal[f], err_msg=f)
+    assert (np.asarray(res["scale_events"]) > 0).all()
+    assert (np.asarray(res["queue_wait"]) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Export path: the four metrics ride every export encoding
+# ---------------------------------------------------------------------------
+
+def test_control_metrics_in_table_and_stream(tmp_path):
+    plan = (product(axis("vm_mips", [250.0, 500.0]), n_maps=5, n_reduces=2,
+                    n_vms=4, redispatch_delay=5.0)
+            .failures(2, rate=0.002, n_vms=4, seed=7, repair_delay=300.0))
+    res = plan.run()
+    tab = res.to_table()
+    for m in CONTROL_METRICS:
+        assert m in tab, sorted(tab)
+    assert (np.asarray(tab["failures_injected"]) > 0).all()
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    path = tmp_path / "ctl.parquet"
+    plan.run(chunk=2, stream_to=path)
+    disk = pq.read_table(path)
+    for m in CONTROL_METRICS:
+        np.testing.assert_array_equal(np.asarray(disk[m]),
+                                      np.asarray(tab[m]), err_msg=m)
+    del pa
