@@ -3,7 +3,8 @@
 grid (skewed placement, DESIGN.md §7) AND the elastic dynamic-fleet grid
 (arrivals + lease windows, DESIGN.md §8) AND the tail-heavy compacted
 grid (sparse active-lane compaction, DESIGN.md §9) AND the closed-loop
-control grid (failure streams + autoscale hook, DESIGN.md §10) —
+control grid (failure streams + autoscale hook, DESIGN.md §10) AND the
+graceful-degradation grid (deadlines + preemption, DESIGN.md §11) —
 failing on crash or
 on a >25% throughput regression against the checked-in
 ``BENCH_sweep.json`` baseline rows.
@@ -43,6 +44,13 @@ GATED = (          # (baseline row name, plan kwargs, run kwargs)
     # failure streams + the per-epoch AUTOSCALE hook — gates the control
     # lowering's epoch-loop additions
     ("sweep_throughput_control_b64", {"control": True}, {}),
+    # the graceful-degradation row (DESIGN.md §11): the control grid plus
+    # deadlines, SHED/BOOST and priority preemption — gates the deadline
+    # lowering's epoch-loop additions.  The plain b64 row above doubles as
+    # the <10% plain-path guard: with the deadline columns off the
+    # lowering is a static flag (None pytree leaves), so any overhead it
+    # leaks into the plain path shows up against that row's budget.
+    ("sweep_throughput_deadline_b64", {"deadline": True}, {}),
 )
 
 # the tail-heavy grid must actually realize a deep tail, else the row

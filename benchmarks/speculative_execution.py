@@ -30,6 +30,34 @@ def study(sigmas=(0.0, 0.2, 0.4, 0.6, 0.8), n_seeds=20):
     return rows
 
 
+def bench_rows(sigmas=(0.0, 0.4, 0.8), n_seeds=20):
+    """Rows in the ``BENCH_sweep.json`` schema (name, us, us_min, derived,
+    realized_epochs, meta) so ``sweep_throughput.main`` can record the
+    study next to the engine rows.  The fluid model is event-driven, not
+    epoch-stepped, so ``realized_epochs`` is 0 and the meta names the
+    model; ``us_min`` is the per-seed noise floor."""
+    rows = []
+    for sigma in sigmas:
+        sc = paper_scenario(n_maps=16, n_vms=16)
+        times, sp, work, nb = [], [], [], []
+        for seed in range(n_seeds):
+            mult = ([1.0] * sc.total_tasks() if sigma == 0.0 else
+                    speculative.straggler_multipliers(sc, sigma, seed))
+            t0 = time.perf_counter()
+            r = speculative.simulate_speculative(sc, mult, threshold=1.5)
+            times.append(time.perf_counter() - t0)
+            sp.append(r["speedup"])
+            work.append(r["extra_work_frac"])
+            nb.append(r["n_backups"])
+        rows.append((f"spec_exec_sigma{sigma}", np.mean(times) * 1e6,
+                     min(times) * 1e6,
+                     f"{np.mean(sp):.3f}x(+{np.mean(work):.1%}work)", 0,
+                     {"model": "fluid_speculation", "sigma": sigma,
+                      "n_seeds": n_seeds, "threshold": 1.5,
+                      "mean_backups": round(float(np.mean(nb)), 2)}))
+    return rows
+
+
 def all_rows():
     return study()
 

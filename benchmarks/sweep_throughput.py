@@ -79,7 +79,8 @@ CONTROL_REPAIR = 600.0                  # … and repair delay (seconds)
 
 
 def _random_cols(n, rng, mixed_policies=False, locality=False,
-                 elastic=False, tailheavy=False, control=False):
+                 elastic=False, tailheavy=False, control=False,
+                 deadline=False):
     cols = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
         n_reduces=np.ones(n, np.int32),
@@ -107,7 +108,7 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
         cols["block_size_mb"] = rng.choice([8192.0, 32768.0], n
                                            ).astype(np.float32)
         cols["storage_seed"] = rng.integers(0, 1000, n).astype(np.int32)
-    if elastic or control:
+    if elastic or control or deadline:
         # the dynamic-fleet workload (DESIGN.md §8): Poisson job arrivals
         # against per-VM lease windows with spinup and mixed priorities —
         # the availability masking + window-gated admission now sit on the
@@ -123,7 +124,7 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
         cols["spinup_delay"] = rng.choice([0.0, 60.0], n).astype(np.float32)
         cols["task_prio"] = rng.integers(0, 3, (n, 21)).astype(np.float32)
         cols["sched_policy"] = rng.integers(0, 2, n).astype(np.int32)
-    if control:
+    if control or deadline:
         # the closed-loop workload (DESIGN.md §10): the elastic grid plus
         # per-lane seeded failure/restore streams (one flat counter-hash
         # draw resliced per lane — same idiom, distinct instants) and the
@@ -142,6 +143,25 @@ def _random_cols(n, rng, mixed_policies=False, locality=False,
                                          np.int32)
         cols["ctl_queue"] = rng.choice([2.0, 8.0], n).astype(np.float32)
         cols["ctl_busy"] = np.full(n, 0.5, np.float32)
+    if deadline:
+        # the graceful-degradation workload (DESIGN.md §11): the control
+        # grid plus per-task deadlines with SHED/BOOST lanes and priority
+        # preemption armed — the earliest-finish admission predicate, the
+        # urgency tier and the per-VM eviction scan now sit on the epoch
+        # loop this row times.  Half the deadlines are the _BIG sentinel
+        # (absent), the rest clear the job's submit time by construction
+        # so the plan validates; slack varies so BOOST lanes fire at
+        # different urgencies.
+        dl = (cols["job_submit"][:, None]
+              + rng.choice([3000.0, 12000.0, 48000.0], (n, 21))
+              ).astype(np.float32)
+        cols["task_deadline"] = np.where(rng.random((n, 21)) < 0.5,
+                                         1e30, dl).astype(np.float32)
+        cols["deadline_policy"] = rng.integers(1, 3, n).astype(np.int32)
+        cols["deadline_slack"] = rng.choice([0.0, 120.0], n
+                                            ).astype(np.float32)
+        cols["preempt"] = np.ones(n, np.int32)
+        cols["preempt_resume"] = rng.integers(0, 2, n).astype(np.int32)
     if tailheavy:
         # the sparse-compaction workload (DESIGN.md §9): every lane runs
         # the SAME 40-map space-shared shape — one policy combo, one
@@ -176,9 +196,10 @@ def _plan_of(cols, pad_tasks=21):
 
 
 def _random_plan(n, rng, mixed_policies=False, locality=False,
-                 elastic=False, tailheavy=False, control=False):
+                 elastic=False, tailheavy=False, control=False,
+                 deadline=False):
     return _plan_of(_random_cols(n, rng, mixed_policies, locality, elastic,
-                                 tailheavy, control),
+                                 tailheavy, control, deadline),
                     pad_tasks=TAIL_PAD if tailheavy else 21)
 
 
@@ -321,6 +342,40 @@ def control_rows(batch_sizes=(64, 2048), reps=7):
     return rows
 
 
+def deadline_rows(batch_sizes=(64, 2048), reps=7):
+    """Graceful degradation vs the closed-loop control grid (DESIGN.md §11).
+
+    The pair per batch size is timed min-of-alternating-A/B
+    (:func:`_time_ab`): A is the control plan (same rng(n) base draw), B
+    the same draw with the deadline columns on — per-task deadlines,
+    SHED/BOOST policies, priority preemption with and without
+    partial-progress resume.  Only the deadline row is recorded; its meta
+    carries ``deadline_gap_vs_control`` (min-vs-min against the alternated
+    A side), plus the realized shed/preemption census so the row proves
+    the degradation machinery actually fired."""
+    rows = []
+    for n in batch_sizes:
+        plan_a = _random_plan(n, np.random.default_rng(n), control=True)
+        plan_b = _random_plan(n, np.random.default_rng(n), deadline=True)
+        res = [None]
+
+        def run_deadline(plan_b=plan_b, res=res):
+            res[0] = plan_b.run()
+
+        dt_a, min_a, dt_b, min_b = _time_ab(plan_a.run, run_deadline, reps)
+        shed = int(np.asarray(res[0]["shed_tasks"]).sum())
+        pre = int(np.asarray(res[0]["preemptions"]).sum())
+        rows.append((f"sweep_throughput_deadline_b{n}", dt_b * 1e6,
+                     min_b * 1e6, f"{n / dt_b:.0f}_scen/s",
+                     int(res[0]["realized_epochs"].max()),
+                     {"policy_mix": "shed|boost", "preempt": True,
+                      "shed_tasks": shed, "preemptions": pre,
+                      "timing": "min_of_alternating_ab",
+                      "deadline_gap_vs_control": round(min_b / min_a - 1.0,
+                                                       4)}))
+    return rows
+
+
 def unifpol_rows(n=2048, reps=7):
     """The mixed grid's workload as six per-policy-combo uniform plans.
 
@@ -391,7 +446,8 @@ def all_rows():
             + throughput_rows(batch_sizes=(64, 2048), locality=True)
             + throughput_rows(batch_sizes=(64, 2048), elastic=True)
             + tailheavy_rows()
-            + control_rows())
+            + control_rows()
+            + deadline_rows())
 
 
 def main() -> None:
@@ -412,6 +468,12 @@ def main() -> None:
     # control gap: already min-vs-min from its own alternating-A/B pair
     ctl_gap = by_name["sweep_throughput_control_b2048"][5][
         "control_gap_vs_elastic"]
+    # deadline gap: ditto, against the control comparator (DESIGN.md §11)
+    dl_gap = by_name["sweep_throughput_deadline_b2048"][5][
+        "deadline_gap_vs_control"]
+    # the fluid speculative-execution study rides along in the same schema
+    from . import speculative_execution
+    rows = rows + speculative_execution.bench_rows()
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
     payload = {
         "benchmark": "sweep_throughput (SweepPlan.run end-to-end, "
@@ -431,6 +493,7 @@ def main() -> None:
             "compaction_speedup_tailheavy_b2048": round(th_dense / th_comp,
                                                         2),
             "control_gap_vs_elastic": ctl_gap,
+            "deadline_gap_vs_control": dl_gap,
         },
         "rows": [{"name": n, "us_per_call": round(us, 1),
                   "us_per_call_min": round(us_min, 1), "derived": d,
@@ -452,6 +515,8 @@ def main() -> None:
           f"{payload['meta']['compaction_speedup_tailheavy_b2048']:.2f}x")
     print(f"control (closed-loop) vs elastic b2048 gap (min-of-A/B): "
           f"{payload['meta']['control_gap_vs_elastic']:+.1%}")
+    print(f"deadline (graceful degradation) vs control b2048 gap "
+          f"(min-of-A/B): {payload['meta']['deadline_gap_vs_control']:+.1%}")
     print(f"wrote {out}")
 
 

@@ -16,7 +16,7 @@ from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
                      SchedPolicy, VMSpec, paper_scenario)
-from .control import ControlPolicy, ControlSpec
+from .control import ControlPolicy, ControlSpec, DeadlinePolicy
 from .elasticity import ArrivalProcess, ElasticitySpec
 from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
 from .storage import Placement, StorageSpec
@@ -29,6 +29,7 @@ __all__ = [
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
     "StorageSpec", "Placement", "SchedPolicy", "BindingPolicy",
     "ElasticitySpec", "ArrivalProcess", "ControlSpec", "ControlPolicy",
+    "DeadlinePolicy",
     "VM_SMALL", "VM_MEDIUM", "VM_LARGE", "VM_TYPES",
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",

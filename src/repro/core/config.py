@@ -20,7 +20,8 @@ from .elasticity import (ArrivalProcess, ElasticitySpec,  # noqa: F401
                          as_arrival_process)
 #   (re-exported: Scenario carries an ElasticitySpec; DESIGN.md §8)
 from .control import (ControlPolicy, ControlSpec,  # noqa: F401
-                      as_control_policy)
+                      DeadlinePolicy, as_control_policy,
+                      as_deadline_policy)
 #   (re-exported: Scenario carries a ControlSpec; DESIGN.md §10)
 
 
@@ -170,6 +171,11 @@ class JobSpec:
     # classic (ready time, task index) order.  0.0 everywhere reproduces the
     # pre-priority rank bit for bit.
     priority: float = 0.0
+    # Completion deadline in simulated seconds (DESIGN.md §11): every task
+    # of the job inherits it.  ``inf`` (the default, encoded as the engine's
+    # _BIG sentinel) means no decision window — deadline machinery is a
+    # bitwise no-op and only the miss metrics see it.
+    deadline: float = math.inf
 
 
 @dataclass(frozen=True)

@@ -74,6 +74,54 @@ def as_control_policy(v) -> ControlPolicy:
     return ControlPolicy(v)
 
 
+class DeadlinePolicy(enum.IntEnum):
+    """Per-task deadline rule (stable wire constants — i32 sweep data;
+    DESIGN.md §11).
+
+    NONE  — deadlines are recorded but never acted on (miss metrics still
+        accumulate).
+    SHED  — admission control: a pending task whose *earliest possible*
+        finish (now + remaining work at the bound VM's full per-PE rate)
+        already exceeds its deadline is shed — never started, marked
+        missed — instead of occupying capacity on work that cannot meet
+        its decision window.
+    BOOST — priority escalation: a pending task whose earliest possible
+        finish is within ``deadline_slack`` of its deadline becomes
+        *urgent* and outranks every non-urgent task in the space-shared
+        admission order (ties inside a tier keep the §8
+        (priority, eligible, index) key).  Nothing is shed.
+    """
+    NONE = 0
+    SHED = 1
+    BOOST = 2
+
+
+def as_deadline_policy(v) -> DeadlinePolicy:
+    """Coerce a name (``"none"``/``"shed"``/``"boost"``), int, or member."""
+    if isinstance(v, str):
+        try:
+            return DeadlinePolicy[v.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown deadline policy {v!r}; known: "
+                f"{[p.name.lower() for p in DeadlinePolicy]}") from None
+    return DeadlinePolicy(v)
+
+
+def earliest_finish(now, rem, mips, xp=np):
+    """The shared f32 earliest-finish estimate (DESIGN.md §11).
+
+    ``earliest_finish(...) > deadline`` decides SHED (shed iff true with
+    zero slack) and ``earliest_finish(...) + slack >= deadline`` decides
+    BOOST urgency.  One op sequence — division then add, every operand
+    f32 — shared by the oracle (np.float32 scalars) and the
+    engine/kernel (traced f32), so tier membership can never drift
+    between layers.  ``deadline=_BIG`` is an exact identity: ``1e30``
+    absorbs any finite addend in f32, leaving the compares false.
+    """
+    return now + rem / xp.maximum(mips, xp.float32(1e-30))
+
+
 @dataclass(frozen=True)
 class ControlSpec:
     """Scenario-level closed-loop control model (disabled by default:
@@ -88,6 +136,16 @@ class ControlSpec:
     thresholds gate the reactive rule: scale up while
     ``queue_depth > queue_threshold`` and
     ``busy_fraction >= busy_threshold``.
+
+    The graceful-degradation knobs (DESIGN.md §11): ``deadline_policy``
+    governs what the per-epoch hook does with per-task deadlines
+    (``JobSpec.deadline``); ``deadline_slack`` widens the BOOST urgency
+    window; ``preempt`` lets an urgent/higher-priority ready task evict a
+    running lower-priority task on its space-shared VM (the PR-7
+    failure-kill op sequence driven by a policy mask), and
+    ``preempt_resume`` keeps the victim's partial progress instead of
+    resetting it.  All defaults off: the degenerate configuration is a
+    bitwise identity with the §10 closed loop.
     """
     policy: ControlPolicy = ControlPolicy.NONE
     failure_rate: float = 0.0
@@ -96,6 +154,10 @@ class ControlSpec:
     redispatch_delay: float = 0.0
     queue_threshold: float = 0.0
     busy_threshold: float = 0.0
+    deadline_policy: DeadlinePolicy = DeadlinePolicy.NONE
+    deadline_slack: float = 0.0
+    preempt: bool = False
+    preempt_resume: bool = False
 
 
 def failure_times(n_vms: int, *, rate: float, seed: int = 0,

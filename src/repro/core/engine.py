@@ -29,7 +29,8 @@ import numpy as np
 from . import elasticity, network, storage
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
-from .control import ControlPolicy, failover_targets, scenario_control
+from .control import (ControlPolicy, DeadlinePolicy, earliest_finish,
+                      failover_targets, scenario_control)
 from .util import pow2_pad
 
 _BIG = 1e30          # stand-in for +inf that survives arithmetic
@@ -112,6 +113,14 @@ class ScenarioArrays(NamedTuple):
     #                            fraction is at least this
     redispatch_delay: jax.Array  # f32 scalar — failure-detection +
     #                              re-queue latency added on task kill
+    # graceful degradation (DESIGN.md §11): per-task decision windows and
+    # the overload-policy knobs.  The degenerate fill (deadline _BIG,
+    # NONE policy, preemption off) is a bitwise identity with §10.
+    task_deadline: jax.Array   # f32[T] completion deadline; _BIG = none
+    deadline_policy: jax.Array  # i32 (0 NONE | 1 SHED | 2 BOOST)
+    deadline_slack: jax.Array  # f32 scalar — BOOST urgency window
+    preempt: jax.Array         # i32 (0/1) — priority preemption on
+    preempt_resume: jax.Array  # i32 (0/1) — evicted tasks keep progress
 
 
 class SimOutput(NamedTuple):
@@ -131,6 +140,13 @@ class SimOutput(NamedTuple):
     vm_open: jax.Array   # f32[V] realized lease open (_BIG = never)
     vm_close: jax.Array  # f32[V] realized lease close (_BIG = never)
     n_scale: jax.Array   # i32 — autoscale open+close events executed
+    # graceful degradation (DESIGN.md §11; exact zero fills when off)
+    shed: jax.Array      # bool[T] task shed by deadline admission control
+    #                      (never started, deadline unmeetable — includes
+    #                      reduces orphaned by a shed map of their job)
+    n_evict: jax.Array   # i32[T] times the task was preempted (<= 2)
+    work_lost: jax.Array  # f32 — MI of progress discarded by failure
+    #                       kills + non-resume preemptions
 
 
 class JobMetrics(NamedTuple):
@@ -171,6 +187,18 @@ class ScenarioMetrics(NamedTuple):
     scale_events: jax.Array        # f32 — autoscale lease opens + closes
     recovered_fraction: jax.Array  # f32 — re-dispatched tasks that still
     #                                completed / re-dispatched (0 if none)
+    # SLO metrics layer (DESIGN.md §11; exact zeros without deadlines)
+    deadline_miss_fraction: jax.Array  # f32 — finite-deadline tasks that
+    #                                    finished late or never / all
+    #                                    finite-deadline tasks
+    shed_tasks: jax.Array          # f32 — tasks shed by admission control
+    preemptions: jax.Array         # f32 — priority evictions executed
+    wasted_work_frac: jax.Array    # f32 — (discarded progress + late
+    #                                completions' MI) / (delivered MI +
+    #                                discarded progress)
+    p99_slack: jax.Array           # f32 — nearest-rank p99 of
+    #                                finish − deadline over *completed*
+    #                                finite-deadline tasks (<= 0 is good)
 
 
 def task_lengths(sc: ScenarioArrays) -> jax.Array:
@@ -300,6 +328,7 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
     # (config.base_task_lengths_f32) so every layer resolves LEAST_LOADED
     # argmin ties identically.
     t_len = np.zeros(T, f32)
+    t_dl = np.full(T, _BIG, f32)
     k = 0
     for ji, job in enumerate(sc.jobs):
         map_l, red_l = base_task_lengths_f32(
@@ -310,6 +339,7 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
                 t_job[k], t_red[k], t_val[k] = ji, phase, True
                 t_len[k] = red_l if phase else map_l
                 t_prio[k] = job.priority
+                t_dl[k] = f32(min(job.deadline, _BIG))
                 k += 1
 
     vm_mips = _padf([v.mips for v in sc.vms], V, fill=1.0)
@@ -386,6 +416,11 @@ def from_scenario(sc: Scenario, *, pad_tasks: int | None = None,
         ctl_queue=f32(sc.control.queue_threshold),
         ctl_busy=f32(sc.control.busy_threshold),
         redispatch_delay=f32(sc.control.redispatch_delay),
+        task_deadline=t_dl,
+        deadline_policy=np.int32(sc.control.deadline_policy),
+        deadline_slack=f32(sc.control.deadline_slack),
+        preempt=np.int32(bool(sc.control.preempt)),
+        preempt_resume=np.int32(bool(sc.control.preempt_resume)),
     )
 
 
@@ -424,6 +459,9 @@ class _Carry(NamedTuple):
     vm_open: jax.Array | None = None   # f32[V] realized lease open
     vm_close: jax.Array | None = None  # f32[V] realized lease close
     n_scale: jax.Array | None = None   # i32 autoscale events so far
+    shed: jax.Array | None = None      # bool[T] deadline-shed so far
+    n_evict: jax.Array | None = None   # i32[T] preemptions per task
+    work_lost: jax.Array | None = None  # f32 discarded progress (MI)
 
 
 class _EpochInv(NamedTuple):
@@ -549,29 +587,48 @@ def _epoch_setup(sc: ScenarioArrays, *,
             hit=jnp.zeros(T, bool),
             vm_open=jnp.where(sc.vm_auto, jnp.float32(_BIG), sc.vm_start),
             vm_close=jnp.asarray(sc.vm_stop, jnp.float32),
-            n_scale=jnp.int32(0))
+            n_scale=jnp.int32(0),
+            shed=jnp.zeros(T, bool),
+            n_evict=jnp.zeros(T, jnp.int32),
+            work_lost=jnp.float32(0.0))
     return inv, c0
 
 
 def _has_unfinished(sc: ScenarioArrays, c: _Carry) -> jax.Array:
-    return jnp.any(sc.task_valid & (c.finish >= _BIG / 2))
+    unfin = sc.task_valid & (c.finish >= _BIG / 2)
+    if c.shed is not None:
+        # a shed task never finishes by design — it must not keep its
+        # lane alive (shedding *terminates* otherwise-unbounded backlogs)
+        unfin &= ~c.shed
+    return jnp.any(unfin)
 
 
 def _lane_bound(sc: ScenarioArrays) -> jax.Array:
     """Per-lane epoch bound (i32, data-dependent under control).
 
     Open-loop, every live epoch fires a start or a completion: ``2T + 2``.
-    With failures a task restarts at most twice (its bound VM and its
-    failover VM each fail at most once), so live epochs fire at most
-    ``3T`` starts + ``T`` completions + ``V`` failure instants — the
-    failure term is paid only by lanes that actually encode a failing VM,
-    so degenerate lanes keep the exact open-loop bound (and stranded
-    lanes' realized ``n_epochs`` stay bit-identical)."""
+    Each robustness mechanism widens the bound *additively*, and each
+    term is paid only by lanes whose encoded data can trigger it — so
+    degenerate lanes keep the exact open-loop bound (and stranded lanes'
+    realized ``n_epochs`` stay bit-identical):
+
+    * failures — a task restarts at most twice (its bound VM and its
+      failover VM each fail at most once): +``2T`` starts + ``V``
+      failure instants;
+    * deadline shedding — marking epochs piggyback on live events, but
+      ``+T + 1`` margins the tail where the last events only shed;
+    * preemption — at most two evictions per task: +``2T`` restarts
+      (eviction epochs coincide with the challenger's start)."""
     T = sc.task_job.shape[0]
     V = sc.vm_mips.shape[0]
     any_fail = jnp.any(sc.vm_valid & (sc.vm_fail < _BIG / 2))
-    return jnp.where(any_fail, jnp.int32(4 * T + V + 2),
-                     jnp.int32(2 * T + 2))
+    any_shed = (sc.deadline_policy == jnp.int32(DeadlinePolicy.SHED)) \
+        & jnp.any(sc.task_valid & (sc.task_deadline < _BIG / 2))
+    pre_on = sc.preempt != 0
+    return (jnp.int32(2 * T + 2)
+            + jnp.where(any_fail, jnp.int32(2 * T + V), jnp.int32(0))
+            + jnp.where(any_shed, jnp.int32(T + 1), jnp.int32(0))
+            + jnp.where(pre_on, jnp.int32(2 * T), jnp.int32(0)))
 
 
 def _lane_active(sc: ScenarioArrays, c: _Carry, *,
@@ -624,7 +681,10 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
 
         V = sc.vm_mips.shape[0]
         pol_on = sc.control_policy == jnp.int32(ControlPolicy.AUTOSCALE)
-        unfinished = sc.task_valid & (c.finish >= _BIG / 2)
+        # shed tasks are out of the system: refused backlog neither holds
+        # a reserve open nor counts toward scaling pressure (all-true
+        # ~shed under NONE — bitwise identity with the §10 hook)
+        unfinished = sc.task_valid & (c.finish >= _BIG / 2) & ~c.shed
         # queue depth over *raw* ready times: tasks bound to unopened
         # reserves must count toward the backlog or the rule that would
         # open their VM could never trigger
@@ -654,6 +714,15 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
         # when no reserve ever opens (one-hot sums are exact)
         avail_t = cur_oh @ (vm_open + sc.spinup_delay)
         close_t = cur_oh @ vm_close
+        # graceful-degradation policy masks (DESIGN.md §11) — i32/bool
+        # *data*, so one lowering serves batches mixing NONE/SHED/BOOST
+        # lanes; every op they gate is a bitwise no-op when all-false
+        mips_t = cur_oh @ sc.vm_mips
+        dl_shed = sc.deadline_policy == jnp.int32(DeadlinePolicy.SHED)
+        dl_boost = sc.deadline_policy == jnp.int32(DeadlinePolicy.BOOST)
+        pre_on = (sc.preempt != 0) & inv.is_space
+        res_on = sc.preempt_resume != 0
+        prio = sc.task_prio
     else:
         cur_oh, task_pes, same_vm = inv.vm_onehot, inv.task_pes, inv.same_vm
         avail_t, close_t = inv.avail_t, inv.close_t
@@ -689,13 +758,38 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
 
         elig = gate(elig)
         cand_t = gate(jnp.maximum(elig, c.time))
+        # SHED admission control at the arrival-candidate instant
+        # (DESIGN.md §11): a pending task whose earliest possible finish
+        # already exceeds its deadline stops defining arrival events.
+        # The close_t gate keeps stranded tasks out — the oracle never
+        # re-examines an arrival it could not schedule.
+        evaluable = not_started & (elig < _BIG / 2)
+        efin_c = earliest_finish(cand_t, c.rem, mips_t, xp=jnp)
+        shed_c = c.shed | (dl_shed & evaluable & (cand_t < close_t)
+                           & (efin_c > sc.task_deadline))
     else:
         cand_t = jnp.maximum(elig, c.time)
     # Space-shared: a pending task only defines an arrival event while
     # its VM has a free PE slot; otherwise a completion epoch admits it.
     has_slot = (task_pes - cur_oh @ n_on_vm) > 0.5
-    arr = jnp.where(not_started & (~inv.is_space | has_slot)
-                    & (cand_t < close_t), cand_t, _BIG)
+    if control:
+        # preemption arrival gate (DESIGN.md §11): a pending task whose
+        # raw priority strictly beats a running, still-evictable task on
+        # its VM defines an arrival event even with no free slot — the
+        # eviction below frees one at that instant.  Raw priority only
+        # (not the BOOST urgency tier): the gate and the eviction rule
+        # must agree or a same-instant arrival event could repeat with
+        # no state change.
+        evictable = c.running & (c.n_evict < jnp.int32(2))
+        prey = same_vm & evictable[None, :] \
+            & (prio[:, None] > prio[None, :])
+        can_pre = pre_on & jnp.any(prey, axis=1)
+        arr = jnp.where(not_started & ~shed_c
+                        & (~inv.is_space | has_slot | can_pre)
+                        & (cand_t < close_t), cand_t, _BIG)
+    else:
+        arr = jnp.where(not_started & (~inv.is_space | has_slot)
+                        & (cand_t < close_t), cand_t, _BIG)
     t_next = jnp.minimum(jnp.min(eta), jnp.min(arr))
     if control:
         # pending failure instants of valid VMs are calendar events too
@@ -730,8 +824,11 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
     start_base = c.start
     if control:
         fired = live & (f_t > c.time) & (f_t <= t_next)
-        affected = sc.task_valid & fired & (finish >= _BIG / 2)
+        # shed tasks are out of the system — a failure must not
+        # re-dispatch (or failover-rebind) work that was already refused
+        affected = sc.task_valid & fired & (finish >= _BIG / 2) & ~shed_c
         first_hit = affected & ~c.hit
+        lost_fail = jnp.where(affected, inv.task_len - rem, 0.0)
         rem = jnp.where(affected, inv.task_len, rem)
         running = running & ~affected
         start_base = jnp.where(affected, jnp.float32(_BIG), start_base)
@@ -754,19 +851,79 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
     # fleet reduce every term to the classic (ready, index) rank bitwise.
     eligible = live & not_started & (elig <= t_next + tie) \
         & (t_next < close_t)
+    key = elig
+    prio = sc.task_prio
     if control:
         # never admit onto a VM that is down at (or fails exactly at)
         # this epoch's instant — the killed set was computed above and a
         # same-instant admission would dodge it
         eligible &= ~((t_next >= f_t) & (t_next < r_t))
-    free_after = task_pes - cur_oh @ (n_on_vm - vm_counts(done_now))
-    key = elig
-    prio = sc.task_prio
-    higher_prio = same_vm & (
-        (prio[None, :] > prio[:, None])
-        | ((prio[None, :] == prio[:, None])
-           & ((key[None, :] < key[:, None])
-              | ((key[None, :] == key[:, None]) & inv.idx_earlier))))
+        # SHED at the admission instant (the oracle's pop-time check):
+        # queue wait grows pressure, so a task admissible when it
+        # arrived may be unmeetable by the time a PE slot frees
+        efin_t = earliest_finish(t_next, c.rem, mips_t, xp=jnp)
+        shed_t = shed_c | (dl_shed & evaluable & (t_next < close_t)
+                           & (efin_t > sc.task_deadline))
+        eligible &= ~shed_t
+        # Priority preemption (DESIGN.md §11): on each full space-shared
+        # VM, the single weakest still-evictable running task (lowest
+        # raw priority, latest index) loses its PE when an eligible
+        # pending task strictly outranks it; further victims fall in the
+        # repeated same-instant epochs the arrival gate above keeps
+        # scheduling.  The kill reuses the §10 failure op sequence:
+        # progress reset (kept under preempt_resume), re-dispatch
+        # latency on readiness, first hit moves to the failover slot and
+        # pays the re-replication fetch.
+        vic_cand = pre_on & running & (c.n_evict < jnp.int32(2))
+        full = (task_pes - cur_oh @ (n_on_vm - vm_counts(done_now))) \
+            <= 0.5
+        beats = same_vm & vic_cand[:, None] & eligible[None, :] \
+            & (prio[None, :] > prio[:, None])
+        cand_e = vic_cand & full & jnp.any(beats, axis=1)
+        weaker = same_vm & cand_e[None, :] & (
+            (prio[None, :] < prio[:, None])
+            | ((prio[None, :] == prio[:, None]) & inv.idx_earlier.T))
+        evicted = cand_e & ~jnp.any(weaker, axis=1)
+        lost_evict = jnp.where(evicted & ~res_on,
+                               inv.task_len - rem, 0.0)
+        e_first = evicted & ~hit
+        rem = jnp.where(evicted & ~res_on, inv.task_len, rem)
+        running = running & ~evicted
+        start_base = jnp.where(evicted, jnp.float32(_BIG), start_base)
+        ready = jnp.where(evicted,
+                          jnp.maximum(ready,
+                                      t_next + sc.redispatch_delay),
+                          ready)
+        ready = jnp.where(e_first, ready + inv.refetch, ready)
+        hit = hit | e_first
+        n_evict = c.n_evict + evicted.astype(jnp.int32)
+        work_lost = c.work_lost + jnp.sum(lost_fail) \
+            + jnp.sum(lost_evict)
+        free_after = task_pes - cur_oh @ (n_on_vm - vm_counts(done_now)
+                                          - vm_counts(evicted))
+        # BOOST urgency tier (DESIGN.md §11): a pending task whose
+        # earliest finish is within deadline_slack of its deadline
+        # outranks every non-urgent task; ties inside a tier keep the §8
+        # (priority, eligible, index) key.  All-false urgency (NONE/SHED
+        # lanes, _BIG deadlines) collapses to the §8 rank bitwise.
+        urg = (dl_boost & evaluable
+               & (efin_t + sc.deadline_slack >= sc.task_deadline)
+               ).astype(jnp.float32)
+        higher_prio = same_vm & (
+            (urg[None, :] > urg[:, None])
+            | ((urg[None, :] == urg[:, None])
+               & ((prio[None, :] > prio[:, None])
+                  | ((prio[None, :] == prio[:, None])
+                     & ((key[None, :] < key[:, None])
+                        | ((key[None, :] == key[:, None])
+                           & inv.idx_earlier))))))
+    else:
+        free_after = task_pes - cur_oh @ (n_on_vm - vm_counts(done_now))
+        higher_prio = same_vm & (
+            (prio[None, :] > prio[:, None])
+            | ((prio[None, :] == prio[:, None])
+               & ((key[None, :] < key[:, None])
+                  | ((key[None, :] == key[:, None]) & inv.idx_earlier))))
     rank = jnp.sum((higher_prio & eligible[None, :])
                    .astype(jnp.float32), axis=1)
     start_now = eligible & (~inv.is_space | (rank < free_after))
@@ -775,9 +932,19 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
 
     time = jnp.where(live, t_next, c.time)
     if control:
+        # persist the shed set; reduces of a job with a shed map can
+        # never become ready (the map phase cannot complete) — marking
+        # these orphans ends their lane instead of spinning it to the
+        # epoch bound
+        map_shed = (shed_t & ~sc.task_is_reduce).astype(jnp.float32)
+        job_dead = (map_shed @ inv.job_onehot) > 0.5
+        shed = shed_t | (sc.task_valid & sc.task_is_reduce
+                         & job_dead[sc.task_job]
+                         & (finish >= _BIG / 2) & ~running)
         return _Carry(time, rem, running, start, finish, ready,
                       maps_left, c.epoch, hit=hit, vm_open=vm_open,
-                      vm_close=vm_close, n_scale=n_scale)
+                      vm_close=vm_close, n_scale=n_scale, shed=shed,
+                      n_evict=n_evict, work_lost=work_lost)
     return _Carry(time, rem, running, start, finish, ready,
                   maps_left, c.epoch)
 
@@ -794,15 +961,22 @@ def _sim_output(sc: ScenarioArrays, cf: _Carry) -> SimOutput:
         vm_open = jnp.asarray(sc.vm_start, jnp.float32)
         vm_close = jnp.asarray(sc.vm_stop, jnp.float32)
         n_scale = jnp.int32(0)
+        shed = jnp.zeros_like(sc.task_valid)
+        n_evict = jnp.zeros(sc.task_valid.shape[0], jnp.int32)
+        work_lost = jnp.float32(0.0)
     else:
         hit, vm_open, vm_close = cf.hit, cf.vm_open, cf.vm_close
         n_scale = cf.n_scale
+        shed, n_evict, work_lost = cf.shed, cf.n_evict, cf.work_lost
+    # shed tasks never finish (finish == _BIG): the makespan is over the
+    # work the system kept — all-false ~shed is the pre-§11 op sequence
     return SimOutput(start=cf.start, finish=cf.finish, ready=cf.ready,
                      exec_time=exec_time, n_epochs=cf.epoch,
-                     finish_time=jnp.max(jnp.where(sc.task_valid, cf.finish,
-                                                   0.0)),
+                     finish_time=jnp.max(jnp.where(sc.task_valid & ~shed,
+                                                   cf.finish, 0.0)),
                      hit=hit, task_vm2=task_vm2, vm_open=vm_open,
-                     vm_close=vm_close, n_scale=n_scale)
+                     vm_close=vm_close, n_scale=n_scale,
+                     shed=shed, n_evict=n_evict, work_lost=work_lost)
 
 
 def _control_active(sc: ScenarioArrays) -> bool:
@@ -816,10 +990,12 @@ def _control_active(sc: ScenarioArrays) -> bool:
         vv = np.asarray(sc.vm_valid)
         va = np.asarray(sc.vm_auto)
         cp = np.asarray(sc.control_policy)
+        dp = np.asarray(sc.deadline_policy)
+        pe = np.asarray(sc.preempt)
     except Exception:                     # traced values
         return True
     return bool((vv & (vf < _BIG / 2)).any() or (vv & va).any()
-                or (cp != 0).any())
+                or (cp != 0).any() or (dp != 0).any() or (pe != 0).any())
 
 
 def simulate_arrays(sc: ScenarioArrays, *,
@@ -883,8 +1059,8 @@ def simulate_batch_arrays(
     V = batch.vm_mips.shape[1]
     # under control the per-lane bound is data-dependent (_lane_bound,
     # folded into each lane's activity); the global count only needs the
-    # static worst case
-    bound = jnp.int32(4 * T + V + 2 if control else 2 * T + 2)
+    # static worst case (all additive widenings active at once)
+    bound = jnp.int32(7 * T + V + 3 if control else 2 * T + 2)
     inv, c0 = jax.vmap(partial(_epoch_setup, control=control))(batch)
 
     def lanes_active(c: _Carry) -> jax.Array:
@@ -1001,12 +1177,21 @@ def simulate_batch_arrays_compact(
         control = _control_active(batch)
     N, T = batch.task_job.shape[:2]
     bound = 2 * T + 2
-    if control and bool(np.any(np.asarray(batch.vm_valid)
-                               & (np.asarray(batch.vm_fail) < _BIG / 2))):
-        # failing lanes widen their own epoch bound (_lane_bound); the
-        # host budget only needs the batch-wide worst case — per-lane
-        # counts stay exact through the activity mask
-        bound = 4 * T + batch.vm_mips.shape[1] + 2
+    if control:
+        # lanes widen their own epoch bound (_lane_bound, additive per
+        # mechanism); the host budget only needs the batch-wide worst
+        # case — per-lane counts stay exact through the activity mask
+        if bool(np.any(np.asarray(batch.vm_valid)
+                       & (np.asarray(batch.vm_fail) < _BIG / 2))):
+            bound += 2 * T + batch.vm_mips.shape[1]
+        if bool(np.any((np.asarray(batch.deadline_policy)
+                        == int(DeadlinePolicy.SHED))
+                       & np.any(np.asarray(batch.task_valid)
+                                & (np.asarray(batch.task_deadline)
+                                   < _BIG / 2), axis=1))):
+            bound += T + 1
+        if bool(np.any(np.asarray(batch.preempt) != 0)):
+            bound += 2 * T
     if k == "auto":
         from . import costmodel as costmodel_mod
         cm = cost_model or costmodel_mod.default_cost_model()
@@ -1177,6 +1362,30 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
     n_hit = jnp.sum(hit_tasks.astype(jnp.float32))
     n_recovered = jnp.sum((hit_tasks & ran).astype(jnp.float32))
     recovered = n_recovered / jnp.maximum(n_hit, 1.0)
+    # SLO metrics layer (DESIGN.md §11): pure functions of the encoded
+    # deadlines and the realized schedule, so they accumulate even under
+    # DeadlinePolicy.NONE (observe without acting); all exact zeros when
+    # no finite deadline / preemption is encoded.
+    fin_dl = sc.task_valid & (sc.task_deadline < _BIG / 2)
+    n_dl = jnp.sum(fin_dl.astype(jnp.float32))
+    missed = fin_dl & ((out.finish >= _BIG / 2)
+                       | (out.finish > sc.task_deadline))
+    miss_frac = jnp.sum(missed.astype(jnp.float32)) / jnp.maximum(n_dl, 1.0)
+    shed_tasks = jnp.sum((sc.task_valid & out.shed).astype(jnp.float32))
+    preemptions = jnp.sum(out.n_evict).astype(jnp.float32)
+    late = fin_dl & ran & (out.finish > sc.task_deadline)
+    wasted = out.work_lost + jnp.sum(jnp.where(late, task_lengths(sc), 0.0))
+    wasted_frac = wasted / jnp.maximum(delivered + out.work_lost, 1e-30)
+    # nearest-rank p99 over completed finite-deadline tasks: members sort
+    # below the _BIG fill, so index ceil(0.99 n) - 1 lands on a member
+    comp_dl = fin_dl & ran
+    n_comp = jnp.sum(comp_dl.astype(jnp.float32))
+    slack_sorted = jnp.sort(jnp.where(comp_dl,
+                                      out.finish - sc.task_deadline,
+                                      jnp.float32(_BIG)))
+    p_idx = jnp.clip(jnp.ceil(0.99 * n_comp).astype(jnp.int32) - 1,
+                     0, slack_sorted.shape[0] - 1)
+    p99 = jnp.where(n_comp > 0.5, slack_sorted[p_idx], 0.0)
     return ScenarioMetrics(finish_time=out.finish_time, utilization=util,
                            n_epochs=out.n_epochs,
                            locality_fraction=loc_frac, transfer_bytes=xfer,
@@ -1185,7 +1394,12 @@ def scenario_metrics(sc: ScenarioArrays, out: SimOutput) -> ScenarioMetrics:
                            failures_injected=n_failures,
                            tasks_redispatched=n_hit,
                            scale_events=out.n_scale.astype(jnp.float32),
-                           recovered_fraction=recovered)
+                           recovered_fraction=recovered,
+                           deadline_miss_fraction=miss_frac,
+                           shed_tasks=shed_tasks,
+                           preemptions=preemptions,
+                           wasted_work_frac=wasted_frac,
+                           p99_slack=p99)
 
 
 @partial(jax.jit, static_argnames="control")

@@ -63,6 +63,10 @@ class Task:
     finish: float = math.inf
     remaining: float = 0.0     # MI left (engine state)
     priority: float = 0.0      # space-shared admission priority (job-level)
+    deadline: float = math.inf  # completion deadline (DESIGN.md §11),
+    #                             f32-encoded like the engine's column
+    shed: bool = False         # refused by deadline admission control
+    n_evict: int = 0           # times preempted (capped at 2)
 
     @property
     def exec_time(self) -> float:
@@ -100,6 +104,10 @@ class SimResult:
     tasks_redispatched: int = 0
     scale_events: int = 0
     recovered_fraction: float = 0.0
+    # graceful-degradation counters (DESIGN.md §11; zero without
+    # deadlines/preemption — parity-pinned against the engine's SLO layer)
+    shed_tasks: int = 0
+    preemptions: int = 0
 
     def job(self, j: int = 0) -> JobResult:
         return self.jobs[j]
@@ -207,17 +215,19 @@ class JobTracker:
         self.reduce_ids: list[list[int]] = []
         for ji, job in enumerate(scenario.jobs):
             m_ids, r_ids = [], []
+            # deadline encoded exactly like the engine's f32 column
+            dl = float(np.float32(min(job.deadline, _BIG)))
             for mi in range(job.n_maps):
                 m_ids.append(len(self.tasks))
                 self.tasks.append(Task(ji, mi, False,
                                        job.length_mi / job.n_maps,
-                                       priority=job.priority))
+                                       priority=job.priority, deadline=dl))
             for ri in range(job.n_reduces):
                 r_ids.append(len(self.tasks))
                 self.tasks.append(Task(
                     ji, ri, True,
                     job.reduce_factor * job.length_mi / job.n_reduces,
-                    priority=job.priority))
+                    priority=job.priority, deadline=dl))
             self.map_ids.append(m_ids)
             self.reduce_ids.append(r_ids)
 
@@ -271,7 +281,12 @@ class IoTSimBroker:
             self.tt.bind(t, red_l if t.is_reduce else map_l,
                          cand=self._cand[tid])
         if length_multipliers is not None:
-            assert len(length_multipliers) == len(self.jt.tasks)
+            if len(length_multipliers) != len(self.jt.tasks):
+                raise ValueError(
+                    f"length_multipliers: expected one entry per task "
+                    f"({len(self.jt.tasks)}), got {len(length_multipliers)}"
+                    f" — the multiplier list must match the scenario's "
+                    f"task count (maps then reduces, per job)")
             for t, m in zip(self.jt.tasks, length_multipliers):
                 t.length_mi *= m
         # Closed-loop control (DESIGN.md §10): the same realized failure
@@ -298,6 +313,12 @@ class IoTSimBroker:
         self.tt.avail = np.where(vm_auto, math.inf, self.tt.avail)
         self._opened: set[int] = set()
         self._n_scale = 0
+        # graceful degradation (DESIGN.md §11)
+        self._dlpol = control.DeadlinePolicy(self._ctl.deadline_policy)
+        self._dl_slack = np.float32(self._ctl.deadline_slack)
+        self._preempt = bool(self._ctl.preempt)
+        self._resume = bool(self._ctl.preempt_resume)
+        self._n_preempt = 0
 
     # ---- event-driven run ------------------------------------------------
 
@@ -320,11 +341,42 @@ class IoTSimBroker:
             f, r = self._vm_fail[vm], self._vm_restore[vm]
             return r if f <= x < r else x
 
+        def shed_at(tid: int, at: float) -> bool:
+            """The engine's SHED predicate (DESIGN.md §11), same shared
+            f32 op sequence: earliest possible finish at the bound VM's
+            full per-PE rate already past the deadline."""
+            task = tasks[tid]
+            if self._dlpol != control.DeadlinePolicy.SHED \
+                    or task.deadline >= _BIG / 2:
+                return False
+            efin = control.earliest_finish(
+                np.float32(at), np.float32(task.remaining),
+                np.float32(vms[task.vm].mips))
+            return bool(efin > np.float32(task.deadline))
+
+        def urgent(tid: int) -> bool:
+            """The engine's BOOST urgency predicate, evaluated at the
+            current clock (pop time — urgency grows as slack shrinks)."""
+            task = tasks[tid]
+            if self._dlpol != control.DeadlinePolicy.BOOST \
+                    or task.deadline >= _BIG / 2:
+                return False
+            efin = control.earliest_finish(
+                np.float32(now), np.float32(task.remaining),
+                np.float32(vms[task.vm].mips))
+            return bool(efin + self._dl_slack >= np.float32(task.deadline))
+
         def push_arrival(tid: int) -> None:
             task = tasks[tid]
+            if task.shed:
+                return
             elig = gate(self.tt.eligible_at(task), task.vm)
-            if self.tt.is_open(task.vm, elig):
-                heapq.heappush(calendar, (elig, next(seq), tid, gen[tid]))
+            if not self.tt.is_open(task.vm, elig):
+                return
+            if shed_at(tid, elig):     # push-time admission control
+                task.shed = True
+                return
+            heapq.heappush(calendar, (elig, next(seq), tid, gen[tid]))
 
         # Map tasks become ready at submit + stage-in delay (+ the storage
         # remote-fetch delay when bound off the input block's replica set).
@@ -376,6 +428,78 @@ class IoTSimBroker:
             self.tt.launch(tid, task)
             running.add(tid)
 
+        def admit(vm: int) -> int | None:
+            """Deadline-aware admission (DESIGN.md §11): pops the
+            admission-order head, discarding queued tasks whose decision
+            window closed while they waited (the engine's pop-time SHED
+            check).  Under BOOST the heap key is stale — urgency is a
+            function of the clock — so the head is a linear scan by
+            (urgent desc, priority desc, eligible, id); with no BOOST
+            lanes this is exactly ``TaskTracker.admit``."""
+            q = self.tt.queue[vm]
+            while q and self.tt.has_free_slot(vm) \
+                    and self.tt.is_open(vm, now):
+                if self._dlpol == control.DeadlinePolicy.BOOST:
+                    i = min(range(len(q)),
+                            key=lambda j: (not urgent(q[j][2]),) + q[j])
+                    tid = q.pop(i)[2]
+                else:
+                    tid = heapq.heappop(q)[2]
+                if shed_at(tid, now):
+                    tasks[tid].shed = True
+                    continue
+                return tid
+            return None
+
+        def evict(tid: int) -> None:
+            """Preempt a running task — the §10 failure-kill op
+            sequence driven by the policy mask: progress reset (kept
+            under preempt_resume), re-dispatch latency, first hit moves
+            to the failover slot and pays the re-replication fetch."""
+            task = tasks[tid]
+            task.n_evict += 1
+            self._n_preempt += 1
+            running.discard(tid)
+            self.tt.complete(tid, task)
+            if not self._resume:
+                task.remaining = task.length_mi
+            task.start = math.inf
+            task.ready = max(task.ready, now + self._ctl.redispatch_delay)
+            if not hit[tid]:
+                hit[tid] = True
+                task.vm = int(self._task_vm2[tid])
+                task.ready += float(self._refetch2[tid])
+            gen[tid] += 1
+            if task.ready < math.inf:
+                push_arrival(tid)
+
+        def preempt_pass() -> None:
+            """The engine's per-epoch eviction rule, event-wise: on each
+            full space-shared VM, while a queued (non-shed) task's raw
+            priority strictly beats the weakest still-evictable running
+            task (lowest priority, latest index), that victim loses its
+            PE and the admission-order head takes it.  Runs after every
+            event batch — the running set only changes at events."""
+            if not self._preempt or not space:
+                return
+            for vm in range(self.tt.n_vms):
+                while self.tt.queue[vm] and self.tt.is_open(vm, now) \
+                        and not self.tt.has_free_slot(vm):
+                    vics = [t for t in self.tt.active[vm]
+                            if tasks[t].n_evict < 2]
+                    if not vics:
+                        break
+                    v = min(vics, key=lambda t: (tasks[t].priority, -t))
+                    if not any(tasks[e[2]].priority > tasks[v].priority
+                               and not shed_at(e[2], now)
+                               for e in self.tt.queue[vm]):
+                        break
+                    evict(v)
+                    qid = admit(vm)
+                    if qid is None:
+                        break
+                    start_task(qid)
+
         def control_hook() -> None:
             """The engine's per-epoch control rule, event-wise: evaluated
             at the top of every loop iteration at the current clock (the
@@ -387,14 +511,17 @@ class IoTSimBroker:
             if self._policy != control.ControlPolicy.AUTOSCALE:
                 return
             # close opened reserves with no unfinished bound tasks
+            # (shed tasks are out of the system: refused backlog neither
+            # holds a reserve open nor counts toward scaling pressure)
             for v in sorted(self._opened):
                 if now < self.tt.close[v] and not any(
-                        t.finish == math.inf and t.vm == v for t in tasks):
+                        t.finish == math.inf and not t.shed and t.vm == v
+                        for t in tasks):
                     self.tt.close[v] = now
                     self._n_scale += 1
             qdepth = sum(1 for t in tasks
                          if t.finish == math.inf and t.start == math.inf
-                         and t.ready <= now)
+                         and not t.shed and t.ready <= now)
             open_vms = [v for v in range(self.tt.n_vms)
                         if self.tt.avail[v] <= now < self.tt.close[v]]
             busy = sum(1 for v in open_vms if self.tt.active[v])
@@ -426,7 +553,7 @@ class IoTSimBroker:
             rd = self._ctl.redispatch_delay
             self.tt.queue[v].clear()
             for tid, task in enumerate(tasks):
-                if task.finish < math.inf or task.vm != v:
+                if task.finish < math.inf or task.shed or task.vm != v:
                     continue
                 if tid in running:
                     running.discard(tid)
@@ -480,7 +607,7 @@ class IoTSimBroker:
                     # freed PE slot -> admit the next queued task (only
                     # while the VM's lease is still open)
                     if space:
-                        qid = self.tt.admit(task.vm, now)
+                        qid = admit(task.vm)
                         if qid is not None:
                             start_task(qid)
             elif t_fail <= t_evt:          # failures next: kills beat
@@ -498,29 +625,62 @@ class IoTSimBroker:
                 while calendar and calendar[0][0] <= now + _EPS:
                     _, _, tid, g = heapq.heappop(calendar)
                     task = tasks[tid]
-                    if g != gen[tid] or task.start < math.inf \
+                    if g != gen[tid] or task.shed or task.start < math.inf \
                             or task.finish < math.inf:
                         continue           # superseded by a control action
                     if space:
                         self.tt.enqueue(tid, task)
                         arrived_vms.add(task.vm)
                     else:
-                        start_task(tid)
+                        if shed_at(tid, now):
+                            task.shed = True
+                        else:
+                            start_task(tid)
                 for vm in arrived_vms:
-                    while (qid := self.tt.admit(vm, now)) is not None:
+                    while (qid := admit(vm)) is not None:
                         start_task(qid)
+            # preemption runs after every event batch at the current
+            # clock — exactly the engine's in-epoch eviction instant
+            preempt_pass()
+
+        # Closed-form tail sheds (the engine keeps evaluating pending
+        # tasks each epoch; the calendar stops producing pop-time checks
+        # once no slot ever frees again): any schedulable never-started
+        # task whose window closed by the final clock is shed, and
+        # reduces of a job with a shed map can never be released.
+        if self._dlpol == control.DeadlinePolicy.SHED:
+            for tid, task in enumerate(tasks):
+                if task.shed or task.start < math.inf \
+                        or task.finish < math.inf:
+                    continue
+                at = gate(max(self.tt.eligible_at(task), now), task.vm)
+                if self.tt.is_open(task.vm, at) and shed_at(tid, at):
+                    task.shed = True
+            for ji in range(len(sc.jobs)):
+                if any(tasks[t].shed for t in self.jt.map_ids[ji]):
+                    for rid in self.jt.reduce_ids[ji]:
+                        if tasks[rid].finish == math.inf:
+                            tasks[rid].shed = True
 
         n_hit = sum(hit)
         n_rec = sum(1 for tid, h in enumerate(hit)
                     if h and tasks[tid].finish < math.inf)
+        # makespan over the work the system kept: a shed task's arrival
+        # can be the calendar's last event, but it completes nothing —
+        # the engine's max-finish op sequence never sees it (and the
+        # injected-failure census clocks against the same horizon)
+        fin_t = max((t.finish for t in tasks if t.finish < math.inf),
+                    default=0.0)
         injected = int(np.sum((self._vm_fail < _BIG / 2)
-                              & (self._vm_fail <= now)))
+                              & (self._vm_fail <= fin_t)))
         return SimResult(tasks=tasks, jobs=self._job_metrics(tasks),
-                         finish_time=now, n_events=n_events,
+                         finish_time=fin_t, n_events=n_events,
                          failures_injected=injected,
                          tasks_redispatched=n_hit,
                          scale_events=self._n_scale,
-                         recovered_fraction=n_rec / max(n_hit, 1))
+                         recovered_fraction=n_rec / max(n_hit, 1),
+                         shed_tasks=sum(1 for t in tasks if t.shed),
+                         preemptions=self._n_preempt)
 
     # ---- dependent variables (paper §5.3) ---------------------------------
 

@@ -40,12 +40,22 @@ def simulate_speculative(scenario: Scenario, multipliers: list[float], *,
     reduces to the reference result when multipliers are all 1.0.
     Returns per-phase times + totals with and without speculation.
     """
-    assert len(scenario.jobs) == 1, "study uses single-job cells"
+    if len(scenario.jobs) != 1:
+        raise ValueError(
+            f"simulate_speculative: scenario has {len(scenario.jobs)} jobs; "
+            "the fluid model covers single-job cells only")
     # this analytic model hardcodes time-shared sharing + round-robin
     # binding; reject other policies rather than silently mis-simulating
-    assert scenario.sched_policy == SchedPolicy.TIME_SHARED \
-        and scenario.binding_policy == BindingPolicy.ROUND_ROBIN, \
-        "simulate_speculative models TIME_SHARED + ROUND_ROBIN only"
+    if (scenario.sched_policy != SchedPolicy.TIME_SHARED
+            or scenario.binding_policy != BindingPolicy.ROUND_ROBIN):
+        raise ValueError(
+            "simulate_speculative models TIME_SHARED + ROUND_ROBIN only "
+            f"(got {scenario.sched_policy.name}, "
+            f"{scenario.binding_policy.name})")
+    if len(multipliers) != scenario.total_tasks():
+        raise ValueError(
+            f"simulate_speculative: {len(multipliers)} multipliers for "
+            f"{scenario.total_tasks()} tasks — one per task required")
     job = scenario.jobs[0]
     vms = scenario.vms
     V = len(vms)

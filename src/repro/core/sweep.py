@@ -55,6 +55,7 @@ from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
 from .control import ControlPolicy, as_control_policy
+from .control import DeadlinePolicy, as_deadline_policy
 from .control import failure_times as _failure_times
 from .elasticity import ElasticitySpec, as_arrival_process
 from .engine import (_BIG, JobMetrics, ScenarioArrays, ScenarioMetrics,
@@ -103,7 +104,9 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
                 billing_granularity=_DEFAULT_ELASTICITY.billing_granularity,
                 task_prio=None, vm_fail=_BIG, vm_restore=_BIG, vm_auto=0.0,
                 control_policy=0, ctl_queue=0.0, ctl_busy=0.0,
-                redispatch_delay=0.0) -> ScenarioArrays:
+                redispatch_delay=0.0, task_deadline=None,
+                deadline_policy=0, deadline_slack=0.0, preempt=0,
+                preempt_resume=0) -> ScenarioArrays:
     """One paper cell as traced arrays — homogeneous or per-VM heterogeneous.
 
     ``vm_mips`` / ``vm_pes`` / ``vm_cost`` are **per-VM vectors** of length
@@ -144,6 +147,16 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
     control-enabled engine path when one of these columns is present in
     the plan at all.
 
+    Graceful degradation (DESIGN.md §11): ``task_deadline`` is a per-task
+    completion-deadline vector (``pad_tasks`` wide, like ``task_mult``;
+    ``_BIG`` = none, the default), ``deadline_policy`` is the i32
+    :class:`~repro.core.control.DeadlinePolicy` id, ``deadline_slack``
+    widens the BOOST urgency window, and ``preempt``/``preempt_resume``
+    are the 0/1 priority-preemption knobs (pair them with a ``task_prio``
+    column — preemption acts on raw priorities).  These ride the same
+    control path gate; the defaults reproduce the §10 encoding bit for
+    bit.
+
     All parameters may be traced — ``vmap`` this over parameter grids;
     ``sched_policy``/``binding_policy`` are plain i32 scalars, so one grid
     may mix policies (Group 5).  ``pad_tasks``/``pad_vms`` are static
@@ -160,6 +173,8 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         task_mult = jnp.ones(pad_tasks, jnp.float32)
     if task_prio is None:
         task_prio = jnp.zeros(pad_tasks, jnp.float32)
+    if task_deadline is None:
+        task_deadline = jnp.full(pad_tasks, _BIG, jnp.float32)
     vm_valid = jnp.arange(pad_vms) < n_vms
     vm_mips_a = jnp.where(vm_valid,
                           jnp.broadcast_to(f32(vm_mips), (pad_vms,)), 1.0)
@@ -246,6 +261,12 @@ def encode_cell(n_maps, n_reduces, n_vms, vm_mips, vm_pes, vm_cost,
         ctl_queue=f32(ctl_queue),
         ctl_busy=f32(ctl_busy),
         redispatch_delay=f32(redispatch_delay),
+        task_deadline=jnp.minimum(
+            jnp.asarray(task_deadline, jnp.float32), jnp.float32(_BIG)),
+        deadline_policy=i32(deadline_policy),
+        deadline_slack=f32(deadline_slack),
+        preempt=i32(preempt),
+        preempt_resume=i32(preempt_resume),
     )
 
 
@@ -254,10 +275,11 @@ _CELL_PARAMS = tuple(p for p in inspect.signature(encode_cell).parameters
                      if p not in ("pad_tasks", "pad_vms"))
 _INT_PARAMS = frozenset(
     {"n_maps", "n_reduces", "n_vms", "sched_policy", "binding_policy",
-     "replication", "placement", "storage_seed", "control_policy"})
+     "replication", "placement", "storage_seed", "control_policy",
+     "deadline_policy", "preempt", "preempt_resume"})
 _PER_VM = frozenset({"vm_mips", "vm_pes", "vm_cost", "vm_start", "vm_stop",
                      "vm_fail", "vm_restore", "vm_auto"})
-_PER_TASK = frozenset({"task_mult", "task_prio"})
+_PER_TASK = frozenset({"task_mult", "task_prio", "task_deadline"})
 # storage knobs that are dead weight unless storage_enabled is set
 _STORAGE_KNOBS = frozenset(
     {"block_size_mb", "replication", "placement", "storage_seed"})
@@ -265,7 +287,8 @@ _STORAGE_KNOBS = frozenset(
 # (DESIGN.md §10) — a plan without any of them never pays for control
 _CONTROL_PARAMS = frozenset(
     {"vm_fail", "vm_restore", "vm_auto", "control_policy", "ctl_queue",
-     "ctl_busy", "redispatch_delay"})
+     "ctl_busy", "redispatch_delay", "task_deadline", "deadline_policy",
+     "deadline_slack", "preempt", "preempt_resume"})
 # per-VM pad fill: "no event" sentinels, not zero (a zero-filled failure
 # column would fail every padding VM at t=0 before vm_valid masks it)
 _PER_VM_FILL = {"vm_fail": _BIG, "vm_restore": _BIG}
@@ -322,6 +345,41 @@ def _validate_cell_columns(cols: Mapping[str, Any]) -> None:
                 f"grid_arrays: control_policy values {bad.tolist()} are not "
                 f"ControlPolicy members "
                 f"{[f'{int(p)}={p.name}' for p in ControlPolicy]}")
+    if "deadline_policy" in conc:
+        bad = np.setdiff1d(conc["deadline_policy"],
+                           [int(p) for p in DeadlinePolicy])
+        if bad.size:
+            raise ValueError(
+                f"grid_arrays: deadline_policy values {bad.tolist()} are not "
+                f"DeadlinePolicy members "
+                f"{[f'{int(p)}={p.name}' for p in DeadlinePolicy]}")
+    if "task_deadline" in conc:
+        dl = conc["task_deadline"].astype(np.float64)
+        if not np.isfinite(dl).all():
+            raise ValueError(
+                "grid_arrays: task_deadline must be finite in every cell "
+                "(use the _BIG sentinel, not inf/nan, for 'no deadline')")
+        live = dl < _BIG / 2                      # _BIG sentinel = no deadline
+        submit = conc.get("job_submit")
+        sub = np.asarray(0.0 if submit is None else submit, np.float64)
+        while sub.ndim < dl.ndim:
+            sub = sub[..., None]
+        if (live & (dl <= sub)).any():
+            raise ValueError(
+                "grid_arrays: task_deadline must exceed the job's submit "
+                "time in every cell (a deadline at or before job_submit is "
+                "unmeetable by construction — raise task_deadline or drop "
+                "the axis)")
+    for n in ("preempt", "preempt_resume"):
+        if n in conc and (conc[n] != 0).any() and "task_prio" not in cols:
+            raise ValueError(
+                f"grid_arrays: {n!r} enables priority preemption but no "
+                "'task_prio' column is set, so every task has equal rank "
+                "and the knob would silently do nothing — add a task_prio "
+                f"axis/base or drop {n!r}")
+    if "deadline_slack" in conc and (conc["deadline_slack"] < 0).any():
+        raise ValueError(
+            "grid_arrays: deadline_slack must be >= 0 in every cell")
     if "redispatch_delay" in conc and (conc["redispatch_delay"] < 0).any():
         raise ValueError(
             "grid_arrays: redispatch_delay must be >= 0 in every cell")
@@ -534,12 +592,16 @@ def axis(name: str, values: Sequence[Any]) -> Axis:
         members = [as_control_policy(v) for v in values]
         return Axis((name,), tuple((m,) for m in members),
                     {name: np.asarray(members, np.int32)})
+    if name == "deadline_policy":
+        members = [as_deadline_policy(v) for v in values]
+        return Axis((name,), tuple((m,) for m in members),
+                    {name: np.asarray(members, np.int32)})
     if name not in _CELL_PARAMS:
         raise ValueError(
             f"axis {name!r}: not an encode_cell parameter or spec axis; "
             f"valid: {list(_CELL_PARAMS)} + ['vm', 'vm_type', 'vms', 'job', "
             "'job_type', 'network_delay', 'storage', 'placement', "
-            "'control_policy']")
+            "'control_policy', 'deadline_policy']")
     if any(np.ndim(v) > 0 for v in values):        # per-VM / per-task vectors
         if name not in _PER_VM and name not in _PER_TASK:
             raise ValueError(
@@ -774,7 +836,8 @@ class SweepPlan:
                 cols[cname] = np.pad(
                     c, ((0, 0), (0, pad_vms - c.shape[1])),
                     constant_values=_PER_VM_FILL.get(cname, 0.0))
-        for cname, fill in (("task_mult", 1.0), ("task_prio", 0.0)):
+        for cname, fill in (("task_mult", 1.0), ("task_prio", 0.0),
+                            ("task_deadline", _BIG)):
             if cname in cols and cols[cname].ndim == 2 \
                     and cols[cname].shape[1] != pad_tasks:
                 tm = cols[cname]

@@ -53,20 +53,32 @@ pre-elastic schedule bit for bit (``tests/test_elasticity.py``).
 
 Closed-loop control (DESIGN.md §10): a static ``control`` flag threads
 the engine's control dataflow through the same kernel — open-loop
-lowerings carry **zero** control code.  When on, ten extra lane-data refs
-(failure/restore instants, reserve flags, policy id + thresholds, the
-precomputed failover binding ``task_vm2`` and its re-replication fetch)
-and four extra carry leaves (``hit``, realized ``vm_open``/``vm_close``,
-``n_scale``) join the loop; every epoch runs the control hook at its
-opening clock, switches each task's one-hot row between its two binding
-slots on ``hit``, joins pending failure instants into the next-event
-min, kills + re-dispatches tasks on fired VMs, and gates admission
-around each VM's ``[fail, restore)`` down window — the exact engine op
-sequence, so seeded-failure and autoscale grids stay bit-identical to
-``engine.simulate_arrays`` (``tests/test_control.py``).  The per-lane
-epoch bound becomes data (``4T + V + 2`` only for lanes that encode a
-failing VM), so degenerate lanes keep the exact open-loop ``2T + 2``
-realized counts.
+lowerings carry **zero** control code.  When on, fifteen extra lane-data
+refs (failure/restore instants, reserve flags, policy id + thresholds,
+the precomputed failover binding ``task_vm2`` and its re-replication
+fetch, plus the §11 graceful-degradation block: per-task deadlines,
+deadline policy id + slack, preemption knobs) and seven extra carry
+leaves (``hit``, realized ``vm_open``/``vm_close``, ``n_scale``,
+``shed``, ``n_evict``, ``work_lost``) join the loop; every epoch runs
+the control hook at its opening clock, switches each task's one-hot row
+between its two binding slots on ``hit``, joins pending failure instants
+into the next-event min, kills + re-dispatches tasks on fired VMs, and
+gates admission around each VM's ``[fail, restore)`` down window — the
+exact engine op sequence, so seeded-failure and autoscale grids stay
+bit-identical to ``engine.simulate_arrays`` (``tests/test_control.py``).
+
+Graceful degradation under overload (DESIGN.md §11,
+``tests/test_deadlines.py``): SHED lanes drop pending tasks whose
+earliest possible finish already exceeds their deadline (evaluated with
+the shared ``control.earliest_finish`` f32 op sequence at both the
+arrival-candidate and admission instants), BOOST lanes wrap an urgency
+tier around the space-shared admission key, and preemption lets an
+eligible higher-raw-priority task evict the weakest still-evictable
+running task on its full VM (the §10 failure-kill op sequence driven by
+a policy mask).  The T×T relations the engine uses lower here as per-VM
+extrema through the same one-hot masks the admission scan uses.  The
+per-lane epoch bound is additive data (``engine._lane_bound``), so
+degenerate lanes keep the exact open-loop ``2T + 2`` realized counts.
 """
 from __future__ import annotations
 
@@ -75,6 +87,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# THE shared f32 deadline-pressure op sequence (DESIGN.md §11) — imported
+# so the kernel's SHED/BOOST predicates cannot drift from the oracle's
+from repro.core.control import earliest_finish
 
 _BIG = 1e30
 _TIME_EPS = 1e-6
@@ -89,9 +105,10 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
     if control:
         (vm_valid_ref, vm_fail_ref, vm_restore_ref, vm_auto_ref,
          ctl_policy_ref, ctl_queue_ref, ctl_busy_ref, redispatch_ref,
-         task_vm2_ref, refetch_ref) = refs[13:23]
-        n_data = 23
-    n_state = 11 if control else 7
+         task_vm2_ref, refetch_ref, task_deadline_ref, dl_policy_ref,
+         dl_slack_ref, preempt_ref, resume_ref) = refs[13:28]
+        n_data = 28
+    n_state = 14 if control else 7
     state_in = refs[n_data:n_data + n_state]
     out_refs = refs[n_data + n_state:]
 
@@ -128,15 +145,27 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         redispatch = redispatch_ref[...]         # (tile, 1)
         task_vm2 = task_vm2_ref[...]             # (tile, T) failover slot
         refetch = refetch_ref[...]               # (tile, T) re-repl fetch
+        task_deadline = task_deadline_ref[...]   # (tile, T) f32 (_BIG=none)
+        dl_shed = dl_policy_ref[...] == 1        # (tile, 1) SHED
+        dl_boost = dl_policy_ref[...] == 2       # (tile, 1) BOOST
+        dl_slack = dl_slack_ref[...]             # (tile, 1) f32
+        pre_onl = (preempt_ref[...] != 0) & is_space   # (tile, 1)
+        res_onl = resume_ref[...] != 0           # (tile, 1)
         onehot2_b = (task_vm2[..., None]
                      == jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2))
-        # per-lane epoch bound (engine._lane_bound): only lanes encoding
-        # a failing VM pay the restart/failure-event terms — degenerate
-        # lanes keep the exact open-loop bound (and stranded lanes'
-        # realized n_epochs stay bit-identical)
-        lane_bound = jnp.where(
-            jnp.any(vm_valid & (vm_fail < _BIG / 2), axis=1),
-            jnp.int32(4 * T + V + 2), jnp.int32(2 * T + 2))
+        # per-lane epoch bound (engine._lane_bound, additive): each
+        # robustness mechanism's term is paid only by lanes whose encoded
+        # data can trigger it — degenerate lanes keep the exact open-loop
+        # bound (and stranded lanes' realized n_epochs stay bit-identical)
+        any_fail = jnp.any(vm_valid & (vm_fail < _BIG / 2), axis=1)
+        any_shed = dl_shed[:, 0] & jnp.any(
+            valid & (task_deadline < _BIG / 2), axis=1)
+        lane_bound = (
+            jnp.int32(2 * T + 2)
+            + jnp.where(any_fail, jnp.int32(2 * T + V), jnp.int32(0))
+            + jnp.where(any_shed, jnp.int32(T + 1), jnp.int32(0))
+            + jnp.where(preempt_ref[...][:, 0] != 0,
+                        jnp.int32(2 * T), jnp.int32(0)))
 
     # Lease admission windows (DESIGN.md §8), gathered per task with the
     # exact f32 ops the engine's _epoch_setup uses (one-hot gathers are
@@ -168,26 +197,37 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
             state_in[8][...],                            # vm_open
             state_in[9][...],                            # vm_close
             state_in[10][...][:, 0],                     # n_scale
+            state_in[11][...] != 0,                      # shed
+            state_in[12][...],                           # n_evict
+            state_in[13][...][:, 0],                     # work_lost
         )
 
-    def lanes_active(finish, lane_ep):
-        act = jnp.any(valid & (finish >= _BIG / 2), axis=1)    # (tile,)
+    def lanes_active(finish, lane_ep, shed=None):
+        unfin = valid & (finish >= _BIG / 2)
+        if control:
+            # a shed task never finishes by design — it must not keep
+            # its lane alive (shedding *terminates* backlogs)
+            unfin &= ~shed
+        act = jnp.any(unfin, axis=1)                     # (tile,)
         if control:
             act &= lane_ep < lane_bound
         return act
 
     def cond(st):
-        return jnp.any(lanes_active(st[4], st[7])) & (st[8] < epoch_bound)
+        act = lanes_active(st[4], st[7], st[13] if control else None)
+        return jnp.any(act) & (st[8] < epoch_bound)
 
     def epoch(st):
         (time, rem, running, start, finish, ready, maps_left, lane_ep,
          n) = st[:9]
-        active = lanes_active(finish, lane_ep)
+        active = lanes_active(finish, lane_ep,
+                              st[13] if control else None)
         runf = running.astype(jnp.float32)
 
         # --- binding-slot switch + control hook (clock = time) ------------
         if control:
-            hit, vm_open, vm_close, n_scale = st[9:]
+            (hit, vm_open, vm_close, n_scale, shed0, n_evict0,
+             work_lost) = st[9:]
             cur_oh_b = jnp.where(hit[..., None], onehot2_b, onehot_b)
             cur_oh = cur_oh_b.astype(jnp.float32)
         else:
@@ -205,7 +245,10 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
             task_pes = to_task(vm_pes)
             f_t = to_task(vm_fail)
             r_t = to_task(vm_restore)
-            unfinished = valid & (finish >= _BIG / 2)
+            mips_t = to_task(vm_mips)
+            # shed tasks are out of the system: refused backlog neither
+            # holds a reserve open nor counts toward scaling pressure
+            unfinished = valid & (finish >= _BIG / 2) & ~shed0
             # queue depth over *raw* ready times: tasks bound to unopened
             # reserves must count toward the backlog or the rule that
             # would open their VM could never trigger
@@ -266,13 +309,40 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
 
             elig = gate(elig)
             cand_t = gate(jnp.maximum(elig, time[:, None]))
+            # SHED admission control at the arrival-candidate instant
+            # (DESIGN.md §11): a pending task whose earliest possible
+            # finish already exceeds its deadline stops defining arrival
+            # events.  The close_t gate keeps stranded tasks out — the
+            # oracle never re-examines an arrival it could not schedule.
+            # Pressure is evaluated on the *carried* rem (engine: c.rem).
+            rem_c = rem
+            evaluable = not_started & (elig < _BIG / 2)
+            efin_c = earliest_finish(cand_t, rem_c, mips_t, xp=jnp)
+            shed_c = shed0 | (dl_shed & evaluable & (cand_t < close_t)
+                              & (efin_c > task_deadline))
         else:
             cand_t = jnp.maximum(elig, time[:, None])
         # space-shared: pending tasks only define arrival events while a
         # PE slot is free; otherwise a completion epoch admits them.
         has_slot = (task_pes - to_task(n_on_vm)) > 0.5
-        arr = jnp.where(not_started & (~is_space | has_slot)
-                        & (cand_t < close_t), cand_t, _BIG)
+        if control:
+            # preemption arrival gate (DESIGN.md §11): a pending task
+            # strictly beating the weakest still-evictable running task
+            # on its VM defines an arrival event even with no free slot —
+            # per-VM min of evictable raw priorities instead of the
+            # engine's T×T prey relation (same set: beats some evictable
+            # iff beats the weakest)
+            evictable = running & (n_evict0 < jnp.int32(2))
+            ev_m = jnp.where(evictable, prio, _BIG)
+            min_ev_v = jnp.min(
+                jnp.where(cur_oh_b, ev_m[..., None], _BIG), axis=1)
+            can_pre = pre_onl & (prio > to_task(min_ev_v))
+            arr = jnp.where(not_started & ~shed_c
+                            & (~is_space | has_slot | can_pre)
+                            & (cand_t < close_t), cand_t, _BIG)
+        else:
+            arr = jnp.where(not_started & (~is_space | has_slot)
+                            & (cand_t < close_t), cand_t, _BIG)
         t_next = jnp.minimum(jnp.min(eta, axis=1), jnp.min(arr, axis=1))
         if control:
             # pending failure instants of valid VMs are calendar events too
@@ -307,8 +377,11 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         if control:
             fired = live[:, None] & (f_t > time[:, None]) \
                 & (f_t <= t_next[:, None])
-            affected = valid & fired & (finish >= _BIG / 2)
+            # shed tasks are out of the system — a failure must not
+            # re-dispatch (or failover-rebind) work already refused
+            affected = valid & fired & (finish >= _BIG / 2) & ~shed_c
             first_hit = affected & ~hit
+            lost_fail = jnp.where(affected, task_len - rem, 0.0)
             rem = jnp.where(affected, task_len, rem)
             running = running & ~affected
             start_base = jnp.where(affected, jnp.float32(_BIG), start_base)
@@ -339,15 +412,82 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
             # and a same-instant admission would dodge it
             eligible &= ~((t_next[:, None] >= f_t)
                           & (t_next[:, None] < r_t))
-        free_v = vm_pes - (n_on_vm - per_vm_sum(done_now.astype(jnp.float32)))
+            # SHED at the admission instant (the oracle's pop-time
+            # check): queue wait grows pressure, so a task admissible
+            # when it arrived may be unmeetable by the time a slot frees
+            efin_t = earliest_finish(t_next[:, None], rem_c, mips_t,
+                                     xp=jnp)
+            shed_t = shed_c | (dl_shed & evaluable
+                               & (t_next[:, None] < close_t)
+                               & (efin_t > task_deadline))
+            eligible &= ~shed_t
+            # Priority preemption (DESIGN.md §11): on each full
+            # space-shared VM the single weakest still-evictable running
+            # task (lowest raw priority, latest index) loses its PE when
+            # an eligible pending task strictly outranks it; further
+            # victims fall in the repeated same-instant epochs the
+            # arrival gate keeps scheduling.  The engine's T×T
+            # beats/weaker relations lower as per-VM extrema; the kill
+            # reuses the §10 failure op sequence.
+            done_f = done_now.astype(jnp.float32)
+            vic_cand = pre_onl & running & (n_evict0 < jnp.int32(2))
+            full_t = (task_pes - to_task(n_on_vm - per_vm_sum(done_f))) \
+                <= 0.5
+            el_m = jnp.where(eligible, prio, -_BIG)
+            max_el_v = jnp.max(
+                jnp.where(cur_oh_b, el_m[..., None], -_BIG), axis=1)
+            cand_e = vic_cand & full_t & (to_task(max_el_v) > prio)
+            low_m = jnp.where(cand_e, prio, _BIG)
+            min_low_v = jnp.min(
+                jnp.where(cur_oh_b, low_m[..., None], _BIG), axis=1)
+            low = cand_e & (prio == to_task(min_low_v))
+            idxe_m = jnp.where(low, idx, -1)
+            max_idx_v = jnp.max(
+                jnp.where(cur_oh_b, idxe_m[..., None], -1), axis=1)
+            evicted = low & (idx == to_task(
+                max_idx_v.astype(jnp.float32)).astype(jnp.int32))
+            lost_evict = jnp.where(evicted & ~res_onl,
+                                   task_len - rem, 0.0)
+            e_first = evicted & ~hit
+            rem = jnp.where(evicted & ~res_onl, task_len, rem)
+            running = running & ~evicted
+            start_base = jnp.where(evicted, jnp.float32(_BIG), start_base)
+            ready = jnp.where(evicted,
+                              jnp.maximum(ready,
+                                          t_next[:, None] + redispatch),
+                              ready)
+            ready = jnp.where(e_first, ready + refetch, ready)
+            hit = hit | e_first
+            n_evict = n_evict0 + evicted.astype(jnp.int32)
+            work_lost = work_lost + jnp.sum(lost_fail, axis=1) \
+                + jnp.sum(lost_evict, axis=1)
+            free_v = vm_pes - (n_on_vm - per_vm_sum(done_f)
+                               - per_vm_sum(evicted.astype(jnp.float32)))
+            # BOOST urgency tier (DESIGN.md §11): urgent pending tasks
+            # outrank every non-urgent task; ties inside a tier keep the
+            # §8 (priority, eligible, index) key.  All-false urgency
+            # collapses the extra scan stage to a no-op bitwise.
+            urg = (dl_boost & evaluable
+                   & (efin_t + dl_slack >= task_deadline)
+                   ).astype(jnp.float32)
+        else:
+            free_v = vm_pes - (n_on_vm
+                               - per_vm_sum(done_now.astype(jnp.float32)))
         free_after = to_task(free_v)
         admit = jnp.zeros_like(eligible)
         remaining = eligible
         for s in range(max_pes):
-            prio_m = jnp.where(remaining, prio, -_BIG)
+            if control:
+                urg_m = jnp.where(remaining, urg, -_BIG)
+                max_urg_v = jnp.max(
+                    jnp.where(cur_oh_b, urg_m[..., None], -_BIG), axis=1)
+                tier = remaining & (urg_m == to_task(max_urg_v))
+            else:
+                tier = remaining
+            prio_m = jnp.where(tier, prio, -_BIG)
             max_prio_v = jnp.max(
                 jnp.where(cur_oh_b, prio_m[..., None], -_BIG), axis=1)
-            top = remaining & (prio_m == to_task(max_prio_v))
+            top = tier & (prio_m == to_task(max_prio_v))
             elig_m = jnp.where(top, elig, _BIG)
             min_elig_v = jnp.min(
                 jnp.where(cur_oh_b, elig_m[..., None], _BIG), axis=1)
@@ -367,7 +507,16 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         new = (time, rem, running, start, finish, ready, maps_left_new,
                lane_ep + active.astype(jnp.int32), n + 1)
         if control:
-            new = new + (hit, vm_open, vm_close, n_scale)
+            # persist the shed set; reduces of a job with a shed map can
+            # never become ready (J = 1 lanes: any shed map dooms the
+            # lane's reduces) — marking these orphans ends their lane
+            # instead of spinning it to the epoch bound
+            map_shed_any = jnp.sum((shed_t & ~is_red).astype(jnp.float32),
+                                   axis=1) > 0.5
+            shed = shed_t | (valid & is_red & map_shed_any[:, None]
+                             & (finish >= _BIG / 2) & ~running)
+            new = new + (hit, vm_open, vm_close, n_scale, shed, n_evict,
+                         work_lost)
         return new
 
     st = jax.lax.while_loop(cond, epoch, state)
@@ -384,6 +533,9 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         out_refs[9][...] = st[10]
         out_refs[10][...] = st[11]
         out_refs[11][...] = st[12][:, None]
+        out_refs[12][...] = st[13].astype(jnp.int32)
+        out_refs[13][...] = st[14]
+        out_refs[14][...] = st[15][:, None]
 
 
 def initial_state(task_len, ready0, is_red, valid, vm_start=None,
@@ -395,11 +547,12 @@ def initial_state(task_len, ready0, is_red, valid, vm_start=None,
     running (N,T) i32, start (N,T) f32, finish (N,T) f32, ready (N,T)
     f32, maps_left (N,1) i32, n_epochs (N,1) i32)``.
 
-    Passing ``vm_auto`` (with ``vm_start``/``vm_stop``) appends the four
-    control leaves (DESIGN.md §10): ``hit (N,T) i32, vm_open (N,V) f32,
-    vm_close (N,V) f32, n_scale (N,1) i32`` — reserve VMs start with no
-    realized lease (``vm_open = _BIG``) until the control rule opens one,
-    exactly the engine's ``_epoch_setup`` initialization."""
+    Passing ``vm_auto`` (with ``vm_start``/``vm_stop``) appends the seven
+    control leaves (DESIGN.md §10–11): ``hit (N,T) i32, vm_open (N,V)
+    f32, vm_close (N,V) f32, n_scale (N,1) i32, shed (N,T) i32, n_evict
+    (N,T) i32, work_lost (N,1) f32`` — reserve VMs start with no realized
+    lease (``vm_open = _BIG``) until the control rule opens one, exactly
+    the engine's ``_epoch_setup`` initialization."""
     N, T = task_len.shape
     base = (jnp.zeros((N, 1), jnp.float32),
             task_len,
@@ -417,7 +570,10 @@ def initial_state(task_len, ready0, is_red, valid, vm_start=None,
         jnp.where(vm_auto != 0, jnp.float32(_BIG),
                   vm_start.astype(jnp.float32)),
         vm_stop.astype(jnp.float32),
-        jnp.zeros((N, 1), jnp.int32))
+        jnp.zeros((N, 1), jnp.int32),
+        jnp.zeros((N, T), jnp.int32),
+        jnp.zeros((N, T), jnp.int32),
+        jnp.zeros((N, 1), jnp.float32))
 
 
 @functools.partial(jax.jit,
@@ -428,8 +584,9 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
              vm_stop=None, spinup=None, prio=None, vm_valid=None,
              vm_fail=None, vm_restore=None, vm_auto=None, ctl_policy=None,
              ctl_queue=None, ctl_busy=None, redispatch=None, task_vm2=None,
-             refetch=None, state=None, *,
-             tile: int = 64, max_pes: int = 8, interpret: bool = True,
+             refetch=None, task_deadline=None, dl_policy=None,
+             dl_slack=None, preempt=None, preempt_resume=None, state=None,
+             *, tile: int = 64, max_pes: int = 8, interpret: bool = True,
              epoch_limit: int | None = None, control: bool = False):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
@@ -447,23 +604,28 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     f32 seeded failure/restore instants (_BIG = never); ctl_policy: (N,1)
     i32 policy id; ctl_queue/ctl_busy/redispatch: (N,1) f32 thresholds +
     re-dispatch latency; task_vm2: (N,T) i32 failover binding; refetch:
-    (N,T) f32 re-replication fetch toward it.  ``control=False``
-    lowerings carry none of this — the open-loop kernel is byte-for-byte
-    the pre-control one.
+    (N,T) f32 re-replication fetch toward it.  Graceful degradation
+    (DESIGN.md §11, also control-gated): task_deadline: (N,T) f32
+    (``_BIG`` = none); dl_policy: (N,1) i32 (NONE/SHED/BOOST);
+    dl_slack: (N,1) f32 BOOST window; preempt/preempt_resume: (N,1) i32
+    knobs.  ``control=False`` lowerings carry none of this — the
+    open-loop kernel is byte-for-byte the pre-control one.
 
     ``state``/``epoch_limit`` make the kernel *resumable* (DESIGN.md §9):
     ``state`` is a full carry in :func:`initial_state` layout (default —
     the t=0 state; when given, the ``ready0`` argument is superseded by
     ``state[5]``) and ``epoch_limit`` caps how many event epochs this
-    call advances (default — the engine bound: ``2T + 2`` open-loop,
-    ``4T + V + 2`` under control, i.e. run to completion).  The compacted
-    driver (``ops.epoch_schedule_compact``) steps K-epoch chunks over
-    gathered active lanes this way.
+    call advances (default — the engine bound: ``2T + 2`` open-loop, the
+    additive worst case ``7T + V + 3`` under control, i.e. run to
+    completion; per-lane realized counts still honor the data-dependent
+    ``engine._lane_bound``).  The compacted driver
+    (``ops.epoch_schedule_compact``) steps K-epoch chunks over gathered
+    active lanes this way.
 
     ``max_pes`` must be >= the largest per-VM PE count in the batch (it
     bounds the static admission scan); ``tile`` lanes share one early-exit
     epoch loop.  Returns the advanced carry state (same 8-leaf layout;
-    12 leaves under control).
+    15 leaves under control).
     """
     N, T = task_len.shape
     V = vm_mips.shape[1]
@@ -478,16 +640,18 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     if prio is None:
         prio = jnp.zeros((N, T), jnp.float32)
     ctl = (vm_valid, vm_fail, vm_restore, vm_auto, ctl_policy, ctl_queue,
-           ctl_busy, redispatch, task_vm2, refetch)
+           ctl_busy, redispatch, task_vm2, refetch, task_deadline,
+           dl_policy, dl_slack, preempt, preempt_resume)
     if control and any(x is None for x in ctl):
-        raise ValueError("mr_epoch: control=True requires all ten control "
-                         "lane-data arrays (vm_valid .. refetch)")
+        raise ValueError("mr_epoch: control=True requires all fifteen "
+                         "control lane-data arrays (vm_valid .. "
+                         "preempt_resume)")
     if state is None:
         state = initial_state(task_len, ready0, is_red, valid,
                               vm_start=vm_start, vm_stop=vm_stop,
                               vm_auto=vm_auto if control else None)
     if epoch_limit is None:
-        epoch_limit = 4 * T + V + 2 if control else 2 * T + 2
+        epoch_limit = 7 * T + V + 3 if control else 2 * T + 2
     tile = min(tile, N)
     while N % tile:
         tile //= 2
@@ -505,9 +669,12 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
                   spec_v, spec_v, spec_1, spec_v, spec_v, spec_1, spec_t]
     if control:
         data += [vm_valid, vm_fail, vm_restore, vm_auto, ctl_policy,
-                 ctl_queue, ctl_busy, redispatch, task_vm2, refetch]
+                 ctl_queue, ctl_busy, redispatch, task_vm2, refetch,
+                 task_deadline, dl_policy, dl_slack, preempt,
+                 preempt_resume]
         data_specs += [spec_v, spec_v, spec_v, spec_v, spec_1, spec_1,
-                       spec_1, spec_1, spec_t, spec_t]
+                       spec_1, spec_1, spec_t, spec_t, spec_t, spec_1,
+                       spec_1, spec_1, spec_1]
     state_in = [state[0], state[1], state[2], state[3], state[4],
                 state[6], state[7]]
     state_in_specs = [spec_1, spec_t, spec_t, spec_t, spec_t, spec_1,
@@ -515,9 +682,12 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     state_specs = (spec_1, spec_t, spec_t, spec_t, spec_t, spec_t,
                    spec_1, spec_1)
     if control:
-        state_in += [state[8], state[9], state[10], state[11]]
-        state_in_specs += [spec_t, spec_v, spec_v, spec_1]
-        state_specs = state_specs + (spec_t, spec_v, spec_v, spec_1)
+        state_in += [state[8], state[9], state[10], state[11], state[12],
+                     state[13], state[14]]
+        state_in_specs += [spec_t, spec_v, spec_v, spec_1, spec_t,
+                           spec_t, spec_1]
+        state_specs = state_specs + (spec_t, spec_v, spec_v, spec_1,
+                                     spec_t, spec_t, spec_1)
     state_shapes = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
                          for x in state)
     out = pl.pallas_call(

@@ -89,10 +89,14 @@ def schedule(batch: ScenarioArrays, *, tile: int = 64,
 
 
 def _control_lane_data(batch: ScenarioArrays, pad, task_vm2, refetch):
-    """The ten control lane-data arrays, padded, in ``mr_epoch``'s
-    positional order.  Pad lanes zero-fill — their ``vm_valid`` is all
-    zero, so they encode no failure events, a NONE policy, and the
-    open-loop 2T+2 lane bound."""
+    """The fifteen control lane-data arrays, padded, in ``mr_epoch``'s
+    positional order (the §11 graceful-degradation block rides at the
+    end so earlier indices — e.g. ``lanes[15]`` = vm_auto in the compact
+    driver — stay stable).  Pad lanes zero-fill — their ``vm_valid`` is
+    all zero, so they encode no failure events, a NONE policy (both
+    control and deadline), no preemption, and the open-loop 2T+2 lane
+    bound (zero task_deadline rows are inert: pad lanes hold no valid
+    tasks)."""
     return (pad(batch.vm_valid.astype(jnp.int32)),
             pad(batch.vm_fail.astype(jnp.float32)),
             pad(batch.vm_restore.astype(jnp.float32)),
@@ -102,7 +106,12 @@ def _control_lane_data(batch: ScenarioArrays, pad, task_vm2, refetch):
             pad(batch.ctl_busy.astype(jnp.float32)[:, None]),
             pad(batch.redispatch_delay.astype(jnp.float32)[:, None]),
             pad(task_vm2.astype(jnp.int32)),
-            pad(refetch.astype(jnp.float32)))
+            pad(refetch.astype(jnp.float32)),
+            pad(batch.task_deadline.astype(jnp.float32)),
+            pad(batch.deadline_policy.astype(jnp.int32)[:, None]),
+            pad(batch.deadline_slack.astype(jnp.float32)[:, None]),
+            pad(batch.preempt.astype(jnp.int32)[:, None]),
+            pad(batch.preempt_resume.astype(jnp.int32)[:, None]))
 
 
 def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
@@ -168,26 +177,35 @@ def _sim_output_of_state(batch: ScenarioArrays, st, N: int, *,
     it into the engine's :class:`SimOutput` (exact op sequence —
     including the engine's ``_sim_output`` control fields: open-loop
     states report the encoded scenario as the realized control outputs,
-    control states read the four extra carry leaves; ``task_vm2`` is the
+    control states read the seven extra carry leaves; ``task_vm2`` is the
     failover binding control *would* use in either lowering)."""
     start, finish, ready = st[3][:N], st[4][:N], st[5][:N]
     n_epochs = st[7][:N, 0]
     exec_time = jnp.where(batch.task_valid, finish - start, 0.0)
-    finish_time = jnp.max(jnp.where(batch.task_valid, finish, 0.0), axis=1)
     task_vm2, _ = _control_derived(batch)
     if control:
         hit = st[8][:N] != 0
         vm_open, vm_close = st[9][:N], st[10][:N]
         n_scale = st[11][:N, 0]
+        shed = st[12][:N] != 0
+        n_evict = st[13][:N]
+        work_lost = st[14][:N, 0]
     else:
         hit = jnp.zeros_like(batch.task_valid)
         vm_open = jnp.asarray(batch.vm_start, jnp.float32)
         vm_close = jnp.asarray(batch.vm_stop, jnp.float32)
         n_scale = jnp.zeros(N, jnp.int32)
+        shed = jnp.zeros_like(batch.task_valid)
+        n_evict = jnp.zeros(batch.task_valid.shape, jnp.int32)
+        work_lost = jnp.zeros(N, jnp.float32)
+    # mirrors engine._sim_output: shed tasks are out of the makespan
+    finish_time = jnp.max(jnp.where(batch.task_valid & ~shed, finish, 0.0),
+                          axis=1)
     return SimOutput(start=start, finish=finish, ready=ready,
                      exec_time=exec_time, n_epochs=n_epochs,
                      finish_time=finish_time, hit=hit, task_vm2=task_vm2,
-                     vm_open=vm_open, vm_close=vm_close, n_scale=n_scale)
+                     vm_open=vm_open, vm_close=vm_close, n_scale=n_scale,
+                     shed=shed, n_evict=n_evict, work_lost=work_lost)
 
 
 def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
@@ -229,7 +247,21 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
         max_pes = max(int(np.ceil(float(jnp.max(batch.vm_pes)))), 1)
     N, T = batch.task_vm.shape
     V = batch.vm_mips.shape[1]
-    bound = 4 * T + V + 2 if control else 2 * T + 2
+    # host budget = the batch-wide worst case of the additive per-lane
+    # bound (engine.simulate_batch_arrays_compact's exact host rule);
+    # per-lane counts stay exact through the kernel's lane_bound
+    bound = 2 * T + 2
+    if control:
+        if bool(np.any(np.asarray(batch.vm_valid)
+                       & (np.asarray(batch.vm_fail) < _BIG / 2))):
+            bound += 2 * T + V
+        if bool(np.any((np.asarray(batch.deadline_policy) == 1)
+                       & np.any(np.asarray(batch.task_valid)
+                                & (np.asarray(batch.task_deadline)
+                                   < _BIG / 2), axis=1))):
+            bound += T + 1
+        if bool(np.any(np.asarray(batch.preempt) != 0)):
+            bound += 2 * T
     if k == "auto":
         from repro.core import costmodel as costmodel_mod
         cm = cost_model or costmodel_mod.default_cost_model()
@@ -269,7 +301,12 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
     total = 0
     while total < bound:
         finish_np = np.asarray(cur_state[4])
-        act = (valid_np[cur_idx] & (finish_np >= _BIG / 2)).any(axis=1)
+        unfin = valid_np[cur_idx] & (finish_np >= _BIG / 2)
+        if control:
+            # shed tasks never finish by design — they must not keep
+            # their lane in the gather (engine._has_unfinished)
+            unfin &= np.asarray(cur_state[12]) == 0
+        act = unfin.any(axis=1)
         n_act = int(act.sum())
         if n_act == 0:
             break

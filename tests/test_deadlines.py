@@ -1,0 +1,427 @@
+"""Graceful degradation under overload (DESIGN.md §11): deadline-aware
+admission (SHED), urgency escalation (BOOST), priority preemption, and
+the SLO metrics layer — cross-layer parity in the repo's usual pattern:
+
+* **degenerate bitwise parity** — every §11 knob switched on but fed
+  degenerate data (deadlines at the ``_BIG`` sentinel, flat priorities)
+  must reproduce the pre-§11 schedule bit for bit across engine ↔
+  batched ↔ batched-compact (K ∈ {1, 4, "auto"}) ↔ pallas ``mr_epoch``
+  dense + compact, including stranded lanes whose realized ``n_epochs``
+  must keep the exact open-loop ``2T + 2`` count under the widened
+  additive epoch bound;
+* **oracle event parity** — the sequential calendar oracle models shed
+  and preemption event-wise: *exactly* equal shed/preemption counts and
+  schedules to the f32-engine tolerance (rtol 2e-4) over a
+  policy × preemption grid;
+* **overload acceptance** — staggered-arrival overloads where SHED
+  strictly reduces ``p99_slack`` and BOOST strictly reduces
+  ``deadline_miss_fraction`` against NONE; a preemption grid where
+  ``preemptions > 0`` coexists with a rank-inversion count of zero;
+  tightening deadlines monotonically grows the shed count;
+* **seeded overload grids** — deadline + preemption + failure columns
+  through the sweep: engine ↔ compact ↔ pallas five-way **bitwise** with
+  ``shed_tasks > 0`` really exercised;
+* sweep-plan validation: unmeetable/non-finite deadlines and orphaned
+  preemption knobs fail at plan build with errors naming the axis;
+* export: the five SLO metrics ride ``to_table()`` and the streaming
+  parquet writer.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (ControlSpec, DeadlinePolicy, Scenario, SchedPolicy,
+                        control, engine, refsim, sweep)
+from repro.core.config import JobSpec, NetworkSpec, VM_SMALL, paper_scenario
+from repro.core.sweep import axis, product
+from repro.kernels.mr_sched import epoch_schedule, epoch_schedule_compact
+
+_BIG = engine._BIG
+SLO_METRICS = ("deadline_miss_fraction", "shed_tasks", "preemptions",
+               "wasted_work_frac", "p99_slack")
+SCHED_FIELDS = engine.SimOutput._fields
+
+
+def _assert_same(a, b, fields, msg):
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}: {f}")
+
+
+def _overload(dlpol, *, preempt=False, resume=False, slack=0.0,
+              sp=SchedPolicy.SPACE_SHARED, spacing=120.0,
+              deadlines=(4000.0, 4600.0, 5200.0, 5800.0, 6400.0)):
+    """Five staggered jobs on two small VMs: sustained overload with
+    mixed static priorities, each job carrying one deadline."""
+    jobs = tuple(JobSpec(f"j{i}", length_mi=362_880.0, data_mb=200_000.0,
+                         n_maps=3, n_reduces=1, submit_time=spacing * i,
+                         priority=float(i % 3), deadline=deadlines[i])
+                 for i in range(5))
+    return Scenario(vms=(VM_SMALL,) * 2, jobs=jobs,
+                    network=NetworkSpec(enabled=False), sched_policy=sp,
+                    control=ControlSpec(deadline_policy=dlpol,
+                                        deadline_slack=slack,
+                                        preempt=preempt,
+                                        preempt_resume=resume))
+
+
+# ---------------------------------------------------------------------------
+# Policy coercion
+# ---------------------------------------------------------------------------
+
+def test_deadline_policy_coercion():
+    assert control.as_deadline_policy("shed") == DeadlinePolicy.SHED
+    assert control.as_deadline_policy(2) == DeadlinePolicy.BOOST
+    assert control.as_deadline_policy(DeadlinePolicy.NONE) == 0
+    with pytest.raises(ValueError, match="(?i)deadline"):
+        control.as_deadline_policy("evict")
+
+
+# ---------------------------------------------------------------------------
+# Degenerate parity: every §11 op is a where over an all-false mask
+# ---------------------------------------------------------------------------
+
+def _arm(scs, policies, preempts):
+    """Arm the §11 knobs per scenario without touching the workload."""
+    return [sc.replace(control=dataclasses.replace(
+        sc.control, deadline_policy=pol, deadline_slack=100.0,
+        preempt=pre, preempt_resume=pre))
+        for sc, pol, pre in zip(scs, policies, preempts)]
+
+
+def _degenerate_pair():
+    """(plain, armed) stacked single-job batches: ``armed`` switches on
+    SHED/BOOST + preemption + resume per lane but feeds only ``_BIG``
+    deadlines and flat priorities, so every predicate is all-false.
+    Includes a stranded lane (lease closes early)."""
+    base = [paper_scenario(n_maps=6, n_reduces=2, n_vms=3),
+            paper_scenario(n_maps=8, n_reduces=2, n_vms=4,
+                           sched_policy=SchedPolicy.SPACE_SHARED)]
+    from repro.core.elasticity import ElasticitySpec
+    strand = base[1].replace(
+        vms=tuple(dataclasses.replace(v, lease_stop=500.0)
+                  for v in base[1].vms),
+        elasticity=ElasticitySpec())
+    scs = base + [strand]
+    # preemption stays off on the stranded lane: a lane that never drains
+    # realizes its full epoch *bound*, and preempt=1 widens the bound by
+    # +2T as data — arming it there is observable in n_epochs by design
+    armed = _arm(scs, (DeadlinePolicy.SHED, DeadlinePolicy.BOOST,
+                       DeadlinePolicy.BOOST), (True, True, False))
+    return sweep.stack_scenarios(scs), sweep.stack_scenarios(armed)
+
+
+def test_degenerate_deadline_bitwise_every_mode():
+    plain, armed = _degenerate_pair()
+    ref, _ = engine.simulate_batch_arrays(plain, control=False)
+    assert (np.asarray(ref.finish[2]) >= _BIG / 2).any(), "no stranded lane"
+    on, _ = engine.simulate_batch_arrays(armed, control=True)
+    _assert_same(ref, on, SCHED_FIELDS, "engine armed")
+    lane = jax.vmap(lambda sc: engine.simulate_arrays(sc, control=True)
+                    )(armed)
+    _assert_same(ref, lane, SCHED_FIELDS, "vmapped simulate_arrays")
+    for K in (1, 4, "auto"):
+        comp, _ = engine.simulate_batch_arrays_compact(armed, k=K,
+                                                       control=True)
+        _assert_same(ref, comp, SCHED_FIELDS, f"engine compact k={K}")
+        pal, _ = epoch_schedule_compact(armed, k=K, control=True)
+        _assert_same(ref, pal, SCHED_FIELDS, f"pallas compact k={K}")
+    dense = epoch_schedule(armed, control=True)
+    _assert_same(ref, dense, SCHED_FIELDS, "pallas dense")
+    # the widened additive bound is per-lane *data*: degenerate lanes keep
+    # the exact open-loop epoch count
+    T = plain.task_valid.shape[1]
+    np.testing.assert_array_equal(np.asarray(on.n_epochs),
+                                  np.asarray(ref.n_epochs))
+    assert int(np.asarray(ref.n_epochs).max()) <= 2 * T + 2
+
+
+def test_degenerate_deadline_bitwise_multi_job_staggered():
+    """Multi-job staggered arrivals armed with degenerate §11 data stay an
+    identity through the engine lowerings (the oracle included); the
+    ``mr_epoch`` kernel models single-job lanes only and sits this one
+    out."""
+    plain = _overload(DeadlinePolicy.NONE, deadlines=(math.inf,) * 5)
+    # flatten the priorities: preemption over equal ranks never fires (the
+    # strict > gate), so arming it stays an identity on this lane too
+    plain = plain.replace(jobs=tuple(
+        dataclasses.replace(j, priority=0.0) for j in plain.jobs))
+    armed, = _arm([plain], (DeadlinePolicy.SHED,), (True,))
+    a = engine.simulate_arrays(engine.from_scenario(plain), control=False)
+    b = engine.simulate_arrays(engine.from_scenario(armed), control=True)
+    _assert_same(a, b, SCHED_FIELDS, "armed multi-job")
+    batch = sweep.stack_scenarios([plain, armed])
+    both, _ = engine.simulate_batch_arrays(batch, control=True)
+    comp, _ = engine.simulate_batch_arrays_compact(batch, k=2, control=True)
+    _assert_same(both, comp, SCHED_FIELDS, "compact multi-job")
+    for f in ("start", "finish", "ready"):
+        np.testing.assert_array_equal(np.asarray(getattr(both, f)[0]),
+                                      np.asarray(getattr(both, f)[1]),
+                                      err_msg=f"lane parity: {f}")
+    ra, rb = refsim.simulate(plain), refsim.simulate(armed)
+    assert rb.shed_tasks == 0 and rb.preemptions == 0
+    assert [t.finish for t in ra.tasks] == [t.finish for t in rb.tasks]
+
+
+def test_degenerate_deadline_columns_bitwise_noop_in_sweep():
+    """Explicit sentinel deadline columns == a plan that never mentions
+    them, through the sweep (control lowering vs open-loop one)."""
+    pr = np.array([1.0, 0.0, 2.0, 0.0, 1.0, 0.0, 0.0, 2.0, 1.0], np.float32)
+    plain = product(axis("n_maps", range(2, 8)), n_reduces=2, n_vms=4,
+                    task_prio=pr,
+                    sched_policy=SchedPolicy.SPACE_SHARED)
+    armed = product(axis("n_maps", range(2, 8)), n_reduces=2, n_vms=4,
+                    task_prio=pr,
+                    sched_policy=SchedPolicy.SPACE_SHARED,
+                    task_deadline=np.full(9, _BIG, np.float32),
+                    deadline_policy="shed", deadline_slack=50.0,
+                    preempt=1, preempt_resume=1)
+    a, b = plain.run(), armed.run()
+    for f in a.metric_names:
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f)
+    c = armed.run(backend="pallas")
+    for f in a.metric_names:
+        np.testing.assert_array_equal(a[f], c[f], err_msg=f"pallas {f}")
+    assert (a["shed_tasks"] == 0).all()
+    assert (a["preemptions"] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Oracle event parity: shed + preemption modelled event-wise
+# ---------------------------------------------------------------------------
+
+_PARITY_CASES = [
+    ("none", dict(dlpol=DeadlinePolicy.NONE)),
+    ("shed", dict(dlpol=DeadlinePolicy.SHED)),
+    ("boost", dict(dlpol=DeadlinePolicy.BOOST, slack=100.0)),
+    ("preempt", dict(dlpol=DeadlinePolicy.NONE, preempt=True)),
+    ("preempt-resume", dict(dlpol=DeadlinePolicy.NONE, preempt=True,
+                            resume=True)),
+    ("shed-preempt", dict(dlpol=DeadlinePolicy.SHED, preempt=True,
+                          resume=True)),
+]
+
+
+@pytest.mark.parametrize("name,kw", _PARITY_CASES,
+                         ids=[n for n, _ in _PARITY_CASES])
+def test_overload_refsim_matches_engine(name, kw):
+    kw = dict(kw)
+    sc = _overload(kw.pop("dlpol"), **kw)
+    ref = refsim.simulate(sc)
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs, control=True)
+    sm = engine.scenario_metrics(arrs, out)
+    n = sc.total_tasks()
+    # event counts are integers: exactly equal
+    shed_e = int(np.asarray(out.shed[:n]).sum())
+    assert ref.shed_tasks == shed_e
+    assert ref.preemptions == int(sm.preemptions)
+    if name == "preempt":
+        assert ref.preemptions > 0, "grid never preempted"
+    # shed sets identical; kept schedules to the f32 tolerance
+    ref_live = np.array([not t.shed for t in ref.tasks])
+    eng_live = np.asarray(out.finish[:n]) < _BIG / 2
+    np.testing.assert_array_equal(
+        ref_live, np.asarray(~out.shed[:n]) if shed_e else eng_live)
+    np.testing.assert_array_equal(eng_live, ref_live)
+    rs = np.array([t.finish if not t.shed else np.inf for t in ref.tasks])
+    es = np.asarray(out.finish[:n], np.float64)
+    np.testing.assert_allclose(es[ref_live], rs[ref_live],
+                               rtol=2e-4, atol=1e-2, err_msg=name)
+    fin = max((t.finish for t in ref.tasks if t.finish < math.inf),
+              default=0.0)
+    np.testing.assert_allclose(float(sm.finish_time), fin,
+                               rtol=2e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Overload acceptance: the policies actually help
+# ---------------------------------------------------------------------------
+
+def _metrics_of(sc):
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs, control=True)
+    return engine.scenario_metrics(arrs, out)
+
+
+@pytest.mark.parametrize("spacing", [60.0, 120.0, 180.0])
+def test_shed_strictly_reduces_p99_slack(spacing):
+    none = _metrics_of(_overload(DeadlinePolicy.NONE, spacing=spacing))
+    shed = _metrics_of(_overload(DeadlinePolicy.SHED, spacing=spacing))
+    assert float(shed.shed_tasks) > 0, "grid never shed"
+    assert float(shed.p99_slack) < float(none.p99_slack), (
+        float(shed.p99_slack), float(none.p99_slack))
+    # refused work is cheaper too: no late completions burning capacity
+    assert float(shed.wasted_work_frac) < float(none.wasted_work_frac)
+
+
+def _boost_pair(deadline, dlpol, slack=0.0):
+    """A low-priority tight-deadline job stuck behind a high-priority
+    batch: only urgency escalation can move it up the admission order."""
+    ja = JobSpec("a", length_mi=450_000.0, data_mb=1000.0, n_maps=6,
+                 n_reduces=1, submit_time=0.0, priority=5.0,
+                 deadline=math.inf)
+    jb = JobSpec("b", length_mi=75_000.0, data_mb=1000.0, n_maps=1,
+                 n_reduces=1, submit_time=10.0, priority=0.0,
+                 deadline=deadline)
+    return Scenario(vms=(VM_SMALL,) * 2, jobs=(ja, jb),
+                    network=NetworkSpec(enabled=False),
+                    sched_policy=SchedPolicy.SPACE_SHARED,
+                    control=ControlSpec(deadline_policy=dlpol,
+                                        deadline_slack=slack))
+
+
+@pytest.mark.parametrize("deadline", [1100.0, 1300.0])
+def test_boost_strictly_reduces_miss_fraction(deadline):
+    none = _metrics_of(_boost_pair(deadline, DeadlinePolicy.NONE))
+    boost = _metrics_of(_boost_pair(deadline, DeadlinePolicy.BOOST,
+                                    slack=500.0))
+    assert float(none.deadline_miss_fraction) > 0, "grid never missed"
+    assert float(boost.deadline_miss_fraction) \
+        < float(none.deadline_miss_fraction)
+    # BOOST only reorders admissions — nothing is refused or killed
+    assert float(boost.shed_tasks) == 0
+    assert float(boost.preemptions) == 0
+
+
+@pytest.mark.parametrize("resume", [False, True])
+@pytest.mark.parametrize("spacing", [60.0, 120.0])
+def test_preemption_no_rank_inversion(resume, spacing):
+    """With preemption on, no lower-priority task survives a full VM
+    while a higher-priority task sits eligible and waiting — every such
+    inversion is resolved by an eviction (``n_evict > 0``)."""
+    sc = _overload(DeadlinePolicy.NONE, preempt=True, resume=resume,
+                   spacing=spacing)
+    arrs = engine.from_scenario(sc)
+    out = engine.simulate_arrays(arrs, control=True)
+    sm = engine.scenario_metrics(arrs, out)
+    assert int(sm.preemptions) > 0, "grid never preempted"
+    n = sc.total_tasks()
+    prio = np.asarray(arrs.task_prio[:n])
+    # evicted tasks re-dispatch onto their failover slot: rank inversions
+    # are judged on the *realized* binding
+    vm = np.where(np.asarray(out.hit[:n]), np.asarray(out.task_vm2[:n]),
+                  np.asarray(arrs.task_vm[:n]))
+    start = np.asarray(out.start[:n], np.float64)
+    ready = np.asarray(out.ready[:n], np.float64)
+    n_evict = np.asarray(out.n_evict[:n])
+    inversions = 0
+    for i in range(n):            # the waiting high-priority task
+        for j in range(n):        # the running low-priority task
+            if vm[i] != vm[j] or prio[i] <= prio[j]:
+                continue
+            if not (start[i] < math.inf and start[j] < math.inf):
+                continue
+            if ready[i] < start[j] - 1e-6 and start[i] > start[j] + 1e-6 \
+                    and n_evict[j] == 0:
+                inversions += 1
+    assert inversions == 0, inversions
+
+
+def test_tightening_deadlines_monotone_sheds():
+    scales = [1.6, 1.2, 1.0, 0.8, 0.6]
+    base = (4000.0, 4600.0, 5200.0, 5800.0, 6400.0)
+    sheds = []
+    for s in scales:
+        sm = _metrics_of(_overload(
+            DeadlinePolicy.SHED, deadlines=tuple(d * s for d in base)))
+        sheds.append(int(sm.shed_tasks))
+    assert sheds == sorted(sheds), sheds       # tighter -> never fewer sheds
+    assert sheds[-1] > sheds[0], sheds         # and the sweep really moves
+
+
+# ---------------------------------------------------------------------------
+# Seeded overload grids: five-way bitwise through the sweep
+# ---------------------------------------------------------------------------
+
+def test_overload_grid_five_way_bitwise():
+    dl = [np.array([400.0] * 4 + [900.0] * 4 + [1200.0] * 2, np.float32),
+          np.array([250.0] * 8 + [2000.0] * 2, np.float32)]
+    pr = np.array([0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 0.0, 1.0, 0.0, 0.0],
+                  np.float32)
+    plan = (product(
+        axis("task_deadline", dl),
+        axis("deadline_policy", [0, 1, 2]),
+        axis("preempt", [0, 1]),
+        axis("sched_policy", list(SchedPolicy)),
+        n_maps=8, n_reduces=2, n_vms=2, task_prio=pr, deadline_slack=100.0,
+        preempt_resume=1, net_enabled=0.0, redispatch_delay=5.0)
+        .failures(2, rate=0.002, n_vms=2, seed=7, repair_delay=200.0))
+    te = plan.run()
+    tp = plan.run(backend="pallas")
+    tc1 = plan.run(compact=1)
+    tc4 = plan.run(compact=4)
+    tpc = plan.run(backend="pallas", compact=4)
+    for f in te.metric_names:
+        for name, other in (("pallas", tp), ("compact1", tc1),
+                            ("compact4", tc4), ("pallas-compact", tpc)):
+            np.testing.assert_array_equal(te[f], other[f],
+                                          err_msg=f"{name}: {f}")
+    # the acceptance grid really exercises the machinery
+    assert (np.asarray(te["shed_tasks"]) > 0).any()
+    assert (np.asarray(te["preemptions"]) > 0).any()
+    # heavy-shed cells can end before the first failure instant — the
+    # injected census clocks against the realized makespan
+    assert (np.asarray(te["failures_injected"]) > 0).any()
+
+
+# ---------------------------------------------------------------------------
+# Sweep-plan validation: bad degradation axes fail at build, by name
+# ---------------------------------------------------------------------------
+
+def test_sweep_plan_validation_errors():
+    pr = np.zeros(4, np.float32)
+    with pytest.raises(ValueError, match="DeadlinePolicy"):
+        axis("deadline_policy", [7])
+    with pytest.raises(ValueError, match="task_deadline.*finite"):
+        product(axis("task_deadline",
+                     [np.array([np.inf, 100.0, 100.0, 100.0], np.float32)]),
+                n_maps=2, n_reduces=2, n_vms=2,
+                deadline_policy="shed").params()
+    with pytest.raises(ValueError, match="task_deadline.*submit"):
+        product(axis("task_deadline",
+                     [np.full(4, 100.0, np.float32)]),
+                n_maps=2, n_reduces=2, n_vms=2, job_submit=200.0,
+                deadline_policy="shed").params()
+    with pytest.raises(ValueError, match="'preempt'.*task_prio"):
+        product(axis("preempt", [1]), n_maps=2, n_reduces=2,
+                n_vms=2).params()
+    with pytest.raises(ValueError, match="'preempt_resume'"):
+        product(axis("preempt_resume", [1]), n_maps=2, n_reduces=2,
+                n_vms=2).params()
+    with pytest.raises(ValueError, match="deadline_slack"):
+        product(axis("deadline_slack", [-1.0]), n_maps=2, n_reduces=2,
+                n_vms=2, task_prio=pr).params()
+    # zero knobs stay valid: preempt=0 without priorities is the identity
+    product(axis("preempt", [0]), n_maps=2, n_reduces=2, n_vms=2).params()
+
+
+# ---------------------------------------------------------------------------
+# Export path: the five SLO metrics ride every export encoding
+# ---------------------------------------------------------------------------
+
+def test_slo_metrics_in_table_and_stream(tmp_path):
+    dl = np.array([150.0] * 4 + [5000.0] * 4 + [9000.0] * 2, np.float32)
+    plan = product(axis("vm_mips", [250.0, 500.0]),
+                   axis("deadline_policy", ["none", "shed"]),
+                   n_maps=8, n_reduces=2, n_vms=2, task_deadline=dl,
+                   net_enabled=0.0)
+    res = plan.run()
+    tab = res.to_table()
+    for m in SLO_METRICS:
+        assert m in tab, sorted(tab)
+    assert (np.asarray(tab["shed_tasks"]) > 0).any()
+    assert (np.asarray(tab["deadline_miss_fraction"]) > 0).any()
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    path = tmp_path / "slo.parquet"
+    plan.run(chunk=2, stream_to=path)
+    disk = pq.read_table(path)
+    for m in SLO_METRICS:
+        np.testing.assert_array_equal(np.asarray(disk[m]),
+                                      np.asarray(tab[m]), err_msg=m)
+    del pa

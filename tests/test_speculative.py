@@ -1,0 +1,86 @@
+"""Pin the speculative-execution fluid model against the reference DES.
+
+``core/speculative.py`` is an analytic extension (fluid processor sharing
+plus one Hadoop-style speculation round) that bypasses the engine tower, so
+nothing else anchors it to the oracle.  Two properties pin it:
+
+* degenerate multipliers (all 1.0) reproduce the reference schedule — the
+  fluid plain makespan equals ``refsim``'s, and the speculation round is a
+  no-op (no suspects, no extra work, speedup exactly 1);
+* malformed inputs are rejected with clear errors instead of silently
+  mis-shaping — wrong multiplier count, multi-job scenarios, and policies
+  the fluid model does not implement.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # seeded fallback, same test surface
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from repro.core import (BindingPolicy, SchedPolicy, paper_scenario, refsim,
+                        speculative)
+
+# single reduce only: the fluid model prices the reduce phase as one task
+# at full VM rate, which is the reference schedule's shape only while
+# reduces never share a processor
+spec_params = st.tuples(
+    st.integers(1, 12),                      # n_maps
+    st.integers(1, 8),                       # n_vms
+    st.sampled_from(["small", "medium", "large"]),
+    st.sampled_from(["small", "medium", "big"]),
+    st.booleans(),                           # network delay
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec_params)
+def test_property_degenerate_multipliers_match_refsim(p):
+    m, v, vm, job, nd = p
+    sc = paper_scenario(job=job, vm=vm, n_vms=v, n_maps=m, n_reduces=1,
+                        network_delay=nd)
+    r = speculative.simulate_speculative(sc, [1.0] * sc.total_tasks())
+    ref = refsim.simulate(sc).job()
+    np.testing.assert_allclose(r["makespan_plain"], ref.makespan,
+                               rtol=2e-4, atol=1e-2)
+    # no stragglers -> the speculation round must not fire
+    assert r["n_backups"] == 0
+    assert r["extra_work_frac"] == 0.0
+    assert r["speedup"] == 1.0
+    assert r["makespan_spec"] == r["makespan_plain"]
+
+
+def test_multiplier_count_mismatch_raises():
+    sc = paper_scenario(n_maps=4, n_vms=2)          # 4 maps + 1 reduce
+    with pytest.raises(ValueError, match="4 multipliers for 5 tasks"):
+        speculative.simulate_speculative(sc, [1.0] * 4)
+
+
+def test_multi_job_rejected():
+    sc = paper_scenario(n_maps=4, n_vms=2)
+    two = sc.replace(jobs=list(sc.jobs) * 2)
+    with pytest.raises(ValueError, match="2 jobs"):
+        speculative.simulate_speculative(two, [1.0] * two.total_tasks())
+
+
+def test_unsupported_policies_rejected():
+    sc = paper_scenario(n_maps=4, n_vms=2)
+    mult = [1.0] * sc.total_tasks()
+    with pytest.raises(ValueError, match="TIME_SHARED"):
+        speculative.simulate_speculative(
+            sc.replace(sched_policy=SchedPolicy.SPACE_SHARED), mult)
+    with pytest.raises(ValueError, match="ROUND_ROBIN"):
+        speculative.simulate_speculative(
+            sc.replace(binding_policy=BindingPolicy.LEAST_LOADED), mult)
+
+
+def test_stragglers_never_slower_than_plain():
+    """With real stragglers the speculated makespan never exceeds plain."""
+    sc = paper_scenario(n_maps=16, n_vms=16)
+    for seed in range(5):
+        mult = speculative.straggler_multipliers(sc, 0.6, seed)
+        r = speculative.simulate_speculative(sc, mult, threshold=1.5)
+        assert r["makespan_spec"] <= r["makespan_plain"] + 1e-9
