@@ -48,6 +48,14 @@ adds.  The workload *is* the elastic grid plus control columns, so the
 honest comparator is the elastic row — timed min-of-alternating-A/B
 (like the compaction pair) and recorded as ``control_gap_vs_elastic``.
 
+Traced row: the ``_traced_b64`` row times the deadline workload at the
+engine level with the in-loop trace lowering on (DESIGN.md §12 — one-hot
+time-series scatter + bounded event log inside the epoch loop), min-of-
+alternating-A/B against the same jitted call with tracing off, recorded
+as ``trace_gap_vs_plain``.  The trace-*off* side is bitwise the plain
+path (the lowering inserts no ops when off) — ``bench_smoke`` guards
+that identity with a tightened budget on the plain b64 row.
+
 ``python -m benchmarks.sweep_throughput`` records the rows plus
 backend/device metadata (and a small calibration figure that lets CI gate
 regressions across machine speeds, see ``benchmarks.bench_smoke``) to
@@ -55,6 +63,7 @@ regressions across machine speeds, see ``benchmarks.bench_smoke``) to
 """
 from __future__ import annotations
 
+import functools
 import json
 import multiprocessing
 import pathlib
@@ -65,7 +74,8 @@ import jax
 import numpy as np
 
 from repro.core import (BindingPolicy, ControlPolicy, Placement,
-                        SchedPolicy, control as ctl, elasticity)
+                        SchedPolicy, control as ctl, costmodel, elasticity,
+                        engine, telemetry)
 from repro.core.sweep import axis, product, zip_
 
 EPOCH_BOUND = 2 * 21 + 2   # the pre-adaptive engine's static bound at T=21
@@ -376,6 +386,52 @@ def deadline_rows(batch_sizes=(64, 2048), reps=7):
     return rows
 
 
+def traced_rows(n=64, reps=7):
+    """In-loop tracing vs the plain engine path (DESIGN.md §12).
+
+    The pair is timed min-of-alternating-A/B at the *engine* level — the
+    same jitted :func:`engine.simulate_batch_arrays` call on the deadline
+    b64 batch (every subsystem lit, so all event kinds can fire) with the
+    trace lowering off (A) vs on (B).  Only the traced row is recorded;
+    its meta carries ``trace_gap_vs_plain`` (min-vs-min — what the one-hot
+    time-series scatter + bounded event log cost *inside* the epoch loop),
+    the event census from a warm traced call, and — the observability
+    contract of DESIGN.md §12.4 — the run provenance and cost-model
+    coefficients (with their measured/cache/fallback ``source``) that the
+    report/export paths stamp.  The trace-off side is the identity the
+    ``bench_smoke`` plain-path guard protects: with ``trace=False`` the
+    lowering inserts no ops at all."""
+    batch = _random_plan(n, np.random.default_rng(n), deadline=True).arrays()
+    run_plain = jax.jit(functools.partial(
+        engine.simulate_batch_arrays, control=True))
+    run_traced = jax.jit(functools.partial(
+        engine.simulate_batch_arrays, control=True, trace=True))
+    res = [None]
+
+    def a():
+        jax.block_until_ready(run_plain(batch))
+
+    def b(res=res):
+        res[0] = jax.block_until_ready(run_traced(batch))
+
+    dt_a, min_a, dt_b, min_b = _time_ab(a, b, reps)
+    out, realized, tb = res[0]
+    tr = telemetry.TraceResult(tb, label=f"traced_b{n}")
+    counts = tr.counts_by_kind()
+    cost = costmodel.default_cost_model()
+    return [(f"sweep_throughput_traced_b{n}", dt_b * 1e6, min_b * 1e6,
+             f"{n / dt_b:.0f}_scen/s", int(np.asarray(realized).max()),
+             {"trace": "timeseries+events",
+              "events_logged": int(sum(counts.values())),
+              "dropped_events": int(tr.dropped_events.sum()),
+              "timing": "min_of_alternating_ab",
+              "trace_gap_vs_plain": round(min_b / min_a - 1.0, 4),
+              "cost_model": {"dispatch_us": cost.dispatch_us,
+                             "epoch_lane_us": cost.epoch_lane_us,
+                             "device": cost.device, "source": cost.source},
+              "provenance": dict(telemetry.provenance())})]
+
+
 def unifpol_rows(n=2048, reps=7):
     """The mixed grid's workload as six per-policy-combo uniform plans.
 
@@ -447,7 +503,8 @@ def all_rows():
             + throughput_rows(batch_sizes=(64, 2048), elastic=True)
             + tailheavy_rows()
             + control_rows()
-            + deadline_rows())
+            + deadline_rows()
+            + traced_rows())
 
 
 def main() -> None:
@@ -471,6 +528,11 @@ def main() -> None:
     # deadline gap: ditto, against the control comparator (DESIGN.md §11)
     dl_gap = by_name["sweep_throughput_deadline_b2048"][5][
         "deadline_gap_vs_control"]
+    # trace gap: min-of-A/B at the engine level (DESIGN.md §12) — the cost
+    # of turning the in-loop trace lowering ON; the OFF side is bitwise the
+    # plain path and is guarded separately by bench_smoke
+    tr_meta = by_name["sweep_throughput_traced_b64"][5]
+    tr_gap = tr_meta["trace_gap_vs_plain"]
     # the fluid speculative-execution study rides along in the same schema
     from . import speculative_execution
     rows = rows + speculative_execution.bench_rows()
@@ -494,6 +556,12 @@ def main() -> None:
                                                         2),
             "control_gap_vs_elastic": ctl_gap,
             "deadline_gap_vs_control": dl_gap,
+            "trace_gap_vs_plain": tr_gap,
+            # run provenance + cost-model transparency (DESIGN.md §12.4):
+            # which build/device produced this baseline, and whether the
+            # bucket-split coefficients were measured here or loaded
+            "provenance": tr_meta["provenance"],
+            "cost_model": tr_meta["cost_model"],
         },
         "rows": [{"name": n, "us_per_call": round(us, 1),
                   "us_per_call_min": round(us_min, 1), "derived": d,
@@ -517,6 +585,8 @@ def main() -> None:
           f"{payload['meta']['control_gap_vs_elastic']:+.1%}")
     print(f"deadline (graceful degradation) vs control b2048 gap "
           f"(min-of-A/B): {payload['meta']['deadline_gap_vs_control']:+.1%}")
+    print(f"trace (in-loop telemetry) vs plain engine b64 gap "
+          f"(min-of-A/B): {payload['meta']['trace_gap_vs_plain']:+.1%}")
     print(f"wrote {out}")
 
 

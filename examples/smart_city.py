@@ -23,6 +23,9 @@ Part 6 reruns the same surge with decision-window deadlines (DESIGN.md
 compares running everything late (the Part-5 posture) against shedding
 doomed work and preempting for the critical feed — same recovery, far
 fewer missed windows.
+Part 7 runs one surge scenario with the in-loop trace recorder on
+(DESIGN.md §12) and exports the event timeline as Chrome trace-event
+JSON for chrome://tracing / Perfetto.
 
     PYTHONPATH=src python examples/smart_city.py
 """
@@ -32,8 +35,9 @@ import time
 import numpy as np
 
 from repro.core import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, VM_TYPES,
-                        BindingPolicy, Scenario, SchedPolicy, elasticity,
-                        refsim, sweep)
+                        BindingPolicy, ControlPolicy, ControlSpec,
+                        DeadlinePolicy, Scenario, SchedPolicy, elasticity,
+                        refsim, sweep, telemetry)
 
 
 def part1_mixed_workload():
@@ -304,6 +308,48 @@ def part6_deadline_surge():
           "fraction)\n")
 
 
+def part7_surge_trace(path="smart_city_trace.json"):
+    """Observability (DESIGN.md §12): the council's post-mortem.  Parts
+    5-6 said *how much* was recovered; the trace says *when the queue
+    built up, which VM each kill landed on, and when the reserves
+    opened*.  One surge-like scenario — failures striking the gateway
+    zone, autoscale reserves, decision-window shedding and preemption —
+    runs with the in-loop trace recorder on (bitwise the same schedule),
+    and the event log exports as Chrome trace-event JSON: load it at
+    chrome://tracing or https://ui.perfetto.dev to scrub the timeline
+    of task spans per VM track."""
+    print("== Part 7: exporting the surge timeline for chrome://tracing ==")
+    jobs = tuple(
+        dataclasses.replace(JOB_BIG, name=f"feed{i}", n_maps=10,
+                            n_reduces=2, submit_time=300.0 * i,
+                            priority=float(2 - i),
+                            deadline=3600.0 + 600.0 * i)
+        for i in range(3))
+    vms = tuple(dataclasses.replace(VM_TYPES["small"],
+                                    autoscale=(i >= 4)) for i in range(6))
+    sc = Scenario(vms=vms, jobs=jobs,
+                  sched_policy=SchedPolicy.SPACE_SHARED,
+                  control=ControlSpec(policy=ControlPolicy.AUTOSCALE,
+                                      queue_threshold=2.0,
+                                      busy_threshold=0.5,
+                                      failure_rate=0.0005, failure_seed=3,
+                                      repair_delay=600.0,
+                                      redispatch_delay=30.0,
+                                      deadline_policy=DeadlinePolicy.SHED,
+                                      preempt=1, preempt_resume=1))
+    out, tr = telemetry.trace_scenario(sc, label="smart-city surge")
+    counts = {k: v for k, v in tr.counts_by_kind(0).items() if v}
+    doc = tr.to_chrome_trace(path)
+    spans = sum(e["ph"] == "X" for e in doc["traceEvents"])
+    print(f"  events by kind: {counts}")
+    print(f"  wrote {path}: {spans} task spans over "
+          f"{tr.ts[0][:, 4].sum():.0f} realized epochs, "
+          f"{doc['otherData']['dropped_events']} dropped events")
+    print("  -> open chrome://tracing (or https://ui.perfetto.dev) and "
+          "load the file: lanes are processes, VM tracks are threads; "
+          "kills, redispatches, sheds and scale events are instants\n")
+
+
 if __name__ == "__main__":
     part1_mixed_workload()
     part2_provisioning_sweep()
@@ -311,3 +357,4 @@ if __name__ == "__main__":
     part4_lease_rightsizing()
     part5_disaster_surge()
     part6_deadline_surge()
+    part7_surge_trace()

@@ -11,7 +11,7 @@ Public API:
   (stragglers, failures, checkpoint goodput).
 """
 from . import (control, elasticity, engine, network, refsim, storage, sweep,
-               workload)
+               telemetry, workload)
 from .config import (JOB_BIG, JOB_MEDIUM, JOB_SMALL, JOB_TYPES, VM_LARGE,
                      VM_MEDIUM, VM_SMALL, VM_TYPES, BindingPolicy,
                      DatacenterSpec, JobSpec, NetworkSpec, Scenario,
@@ -21,11 +21,12 @@ from .elasticity import ArrivalProcess, ElasticitySpec
 from .engine import JobMetrics, ScenarioArrays, ScenarioMetrics, SimOutput
 from .storage import Placement, StorageSpec
 from .sweep import Axis, StreamedSweep, SweepPlan, SweepResult
+from .telemetry import RunReport, TraceResult, TraceSpec, trace_scenario
 from .workload import ChipSpec, StepCost
 
 __all__ = [
     "control", "elasticity", "engine", "network", "refsim", "storage",
-    "sweep", "workload",
+    "sweep", "telemetry", "workload",
     "Scenario", "VMSpec", "JobSpec", "NetworkSpec", "DatacenterSpec",
     "StorageSpec", "Placement", "SchedPolicy", "BindingPolicy",
     "ElasticitySpec", "ArrivalProcess", "ControlSpec", "ControlPolicy",
@@ -34,6 +35,7 @@ __all__ = [
     "JOB_SMALL", "JOB_MEDIUM", "JOB_BIG", "JOB_TYPES",
     "paper_scenario", "JobMetrics", "ScenarioArrays", "ScenarioMetrics",
     "SimOutput", "Axis", "SweepPlan", "SweepResult", "StreamedSweep",
+    "TraceSpec", "TraceResult", "RunReport", "trace_scenario",
     "ChipSpec", "StepCost",
 ]
 

@@ -23,6 +23,9 @@ from .control import (ControlPolicy, ControlSpec,  # noqa: F401
                       DeadlinePolicy, as_control_policy,
                       as_deadline_policy)
 #   (re-exported: Scenario carries a ControlSpec; DESIGN.md §10)
+from .telemetry import TraceSpec  # noqa: F401
+#   (re-exported: the trace request rides next to the scenario specs —
+#    config is the one-stop import for experiment setup; DESIGN.md §12)
 
 
 # ---------------------------------------------------------------------------

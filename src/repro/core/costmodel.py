@@ -63,6 +63,14 @@ class CostModel:
     dispatch_us: float       # fixed overhead of one fused dispatch
     epoch_lane_us: float     # us per (lane x epoch x task-slot)
     device: str = "unknown"
+    # Where the coefficients came from — "measured" (fresh micro-bench
+    # this process), "cache" (persisted JSON hit), "fallback" (built-in
+    # conservative constants), or "static" (hand-constructed, e.g. the
+    # pinned test calibrations).  Surfaced through ``RunReport`` and the
+    # BENCH meta so a recorded number can be traced to its calibration.
+    # compare=False: provenance, not a coefficient — a save/load
+    # round-trip must stay ``==`` to what was saved.
+    source: str = dataclasses.field(default="static", compare=False)
 
     # -- derived scoring -------------------------------------------------
     @staticmethod
@@ -128,7 +136,8 @@ class CostModel:
 
 def fallback_cost_model(device: str = "fallback") -> CostModel:
     return CostModel(dispatch_us=_FALLBACK_DISPATCH_US,
-                     epoch_lane_us=_FALLBACK_EPOCH_LANE_US, device=device)
+                     epoch_lane_us=_FALLBACK_EPOCH_LANE_US, device=device,
+                     source="fallback")
 
 
 def device_key() -> str:
@@ -203,7 +212,7 @@ def measure(reps: int = 5) -> CostModel:
     epoch_lane = max((t_big_36 - t_big_4) / 32.0, 1e-6) / (64 * 16)
     return CostModel(dispatch_us=round(dispatch, 2),
                      epoch_lane_us=round(epoch_lane, 6),
-                     device=device_key())
+                     device=device_key(), source="measured")
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +255,7 @@ def load_cost_model(path, device: str | None = None) -> CostModel:
     entry = models[device]
     return CostModel(dispatch_us=float(entry["dispatch_us"]),
                      epoch_lane_us=float(entry["epoch_lane_us"]),
-                     device=device)
+                     device=device, source="cache")
 
 
 def save_cost_model(model: CostModel, path) -> None:

@@ -31,6 +31,9 @@ from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 from .control import (ControlPolicy, DeadlinePolicy, earliest_finish,
                       failover_targets, scenario_control)
+from .telemetry import (EV_FINISH, EV_KILL, EV_PREEMPT, EV_SCALE_CLOSE,
+                        EV_SCALE_OPEN, EV_SHED, EV_START, TraceBuffers,
+                        event_capacity, timeseries_capacity)
 from .util import pow2_pad
 
 _BIG = 1e30          # stand-in for +inf that survives arithmetic
@@ -462,6 +465,15 @@ class _Carry(NamedTuple):
     shed: jax.Array | None = None      # bool[T] deadline-shed so far
     n_evict: jax.Array | None = None   # i32[T] preemptions per task
     work_lost: jax.Array | None = None  # f32 discarded progress (MI)
+    # trace recorder leaves (DESIGN.md §12): ``None`` unless the static
+    # ``trace`` flag is on — an observe-only layer, never read by any
+    # dynamics op, so traced schedules stay bitwise-identical
+    ts: jax.Array | None = None        # f32[C, 8] per-epoch time series
+    ev_t: jax.Array | None = None      # f32[E] event timestamps
+    ev_kind: jax.Array | None = None   # i32[E] event kinds (-1 empty)
+    ev_task: jax.Array | None = None   # i32[E] task id (-1 scale events)
+    ev_vm: jax.Array | None = None     # i32[E] VM id
+    ev_n: jax.Array | None = None      # i32 events attempted (cursor)
 
 
 class _EpochInv(NamedTuple):
@@ -494,9 +506,14 @@ class _EpochInv(NamedTuple):
     rest2: jax.Array | None = None       # f32[T] vm_restore[task_vm2]
 
 
-def _epoch_setup(sc: ScenarioArrays, *,
-                 control: bool = False) -> tuple[_EpochInv, _Carry]:
-    """Derived quantities + initial carry for one encoded scenario."""
+def _epoch_setup(sc: ScenarioArrays, *, control: bool = False,
+                 trace: tuple[int, int] | None = None
+                 ) -> tuple[_EpochInv, _Carry]:
+    """Derived quantities + initial carry for one encoded scenario.
+
+    ``trace`` is the static ``(timeseries_rows, event_rows)`` capacity
+    pair (DESIGN.md §12) — ``None`` keeps the trace leaves empty pytrees.
+    """
     T = sc.task_job.shape[0]
     J = sc.job_length.shape[0]
     V = sc.vm_mips.shape[0]
@@ -591,6 +608,15 @@ def _epoch_setup(sc: ScenarioArrays, *,
             shed=jnp.zeros(T, bool),
             n_evict=jnp.zeros(T, jnp.int32),
             work_lost=jnp.float32(0.0))
+    if trace is not None:
+        ts_cap, ev_cap = trace
+        c0 = c0._replace(
+            ts=jnp.zeros((ts_cap, 8), jnp.float32),
+            ev_t=jnp.zeros(ev_cap, jnp.float32),
+            ev_kind=jnp.full(ev_cap, -1, jnp.int32),
+            ev_task=jnp.full(ev_cap, -1, jnp.int32),
+            ev_vm=jnp.full(ev_cap, -1, jnp.int32),
+            ev_n=jnp.int32(0))
     return inv, c0
 
 
@@ -643,7 +669,7 @@ def _lane_active(sc: ScenarioArrays, c: _Carry, *,
 
 
 def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
-                control: bool = False) -> _Carry:
+                control: bool = False, trace: bool = False) -> _Carry:
     """Advance one event epoch.  Idempotent for finished lanes (every
     update is gated on ``live``/``running``), so a vmapped batch may keep
     stepping a lane past its last event without changing its state — the
@@ -931,6 +957,7 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
     running = running | start_now
 
     time = jnp.where(live, t_next, c.time)
+    extra = {}
     if control:
         # persist the shed set; reduces of a job with a shed map can
         # never become ready (the map phase cannot complete) — marking
@@ -941,12 +968,109 @@ def _epoch_step(sc: ScenarioArrays, inv: _EpochInv, c: _Carry, *,
         shed = shed_t | (sc.task_valid & sc.task_is_reduce
                          & job_dead[sc.task_job]
                          & (finish >= _BIG / 2) & ~running)
-        return _Carry(time, rem, running, start, finish, ready,
-                      maps_left, c.epoch, hit=hit, vm_open=vm_open,
-                      vm_close=vm_close, n_scale=n_scale, shed=shed,
-                      n_evict=n_evict, work_lost=work_lost)
+        extra = dict(hit=hit, vm_open=vm_open, vm_close=vm_close,
+                     n_scale=n_scale, shed=shed, n_evict=n_evict,
+                     work_lost=work_lost)
+    if trace:
+        # --- trace recorder (DESIGN.md §12): observe, never act -----------
+        # Gated on the same per-lane activity predicate the drivers count
+        # epochs with, so traces from the per-lane while_loop, the batched
+        # driver (which keeps stepping inactive lanes) and the compacted
+        # driver are bitwise-identical.
+        act = _lane_active(sc, c, control=control)
+        actf = act.astype(jnp.float32)
+        T = sc.task_job.shape[0]
+        if control:
+            new_shed = shed & ~c.shed
+            n_fail = jnp.sum(affected.astype(jnp.float32))
+            n_shed = jnp.sum(new_shed.astype(jnp.float32))
+            n_ev = jnp.sum(evicted.astype(jnp.float32))
+        else:
+            # open-loop lanes compute the control hook's observables here,
+            # with the identical op sequence over the static lease windows
+            unfin_t = sc.task_valid & (c.finish >= _BIG / 2)
+            qdepth = jnp.sum((unfin_t & (c.start >= _BIG / 2)
+                              & (c.ready <= c.time)).astype(jnp.float32))
+            busy_v = (c.running.astype(jnp.float32) @ cur_oh) > 0.5
+            open_v = sc.vm_valid \
+                & (sc.vm_start + sc.spinup_delay <= c.time) \
+                & (c.time < sc.vm_stop)
+            n_open = jnp.sum(open_v.astype(jnp.float32))
+            busy_frac = (jnp.sum((open_v & busy_v).astype(jnp.float32))
+                         / jnp.maximum(n_open, 1.0))
+            n_fail = n_shed = n_ev = jnp.float32(0.0)
+        # One time-series row per realized epoch, set by a one-hot add:
+        # the row index is this lane's own epoch counter, which advances
+        # exactly when ``act`` holds, so each row is written once (an
+        # index past capacity would write nothing — the capacity equals
+        # the lane's epoch bound, so it never overflows).
+        row = (jnp.arange(c.ts.shape[0]) == c.epoch
+               ).astype(jnp.float32) * actf
+        vals = jnp.stack([time, qdepth, busy_frac, n_open, actf,
+                          n_fail, n_shed, n_ev])
+        ts = c.ts + row[:, None] * vals[None, :]
+        # Bounded event log: every event firing this epoch, in canonical
+        # in-epoch order (scale decisions at the opening clock, then
+        # completions / kills / evictions / starts / sheds), written by
+        # one-hot scatter at cursor positions.  Events past capacity fall
+        # off the one-hot and are counted by the cursor (dropped_events).
+        tvec = jnp.full(T, t_next, jnp.float32)
+        tidx = jnp.arange(T, dtype=jnp.int32)
+
+        def kvec(kind, n):
+            return jnp.full(n, kind, jnp.int32)
+
+        if control:
+            V = sc.vm_mips.shape[0]
+            vvec = jnp.arange(V, dtype=jnp.int32)
+            novm = jnp.full(V, -1, jnp.int32)
+            scale_t = jnp.full(V, c.time, jnp.float32)
+            cur_vm_i = cur_vm.astype(jnp.int32)
+            m = jnp.concatenate([open_mask, close_mask, done_now, affected,
+                                 evicted, start_now, new_shed])
+            # kills stamp the failure instant; sheds the epoch's clock
+            # (their detection is epoch-quantized — see DESIGN.md §12.3)
+            e_t = jnp.concatenate([scale_t, scale_t, tvec, f_t, tvec, tvec,
+                                   jnp.full(T, time, jnp.float32)])
+            e_kind = jnp.concatenate([kvec(EV_SCALE_OPEN, V),
+                                      kvec(EV_SCALE_CLOSE, V),
+                                      kvec(EV_FINISH, T), kvec(EV_KILL, T),
+                                      kvec(EV_PREEMPT, T),
+                                      kvec(EV_START, T), kvec(EV_SHED, T)])
+            e_task = jnp.concatenate([novm, novm, tidx, tidx, tidx, tidx,
+                                      tidx])
+            e_vm = jnp.concatenate([vvec, vvec, cur_vm_i, cur_vm_i,
+                                    cur_vm_i, cur_vm_i, cur_vm_i])
+        else:
+            m = jnp.concatenate([done_now, start_now])
+            e_t = jnp.concatenate([tvec, tvec])
+            e_kind = jnp.concatenate([kvec(EV_FINISH, T), kvec(EV_START, T)])
+            e_task = jnp.concatenate([tidx, tidx])
+            e_vm = jnp.concatenate([sc.task_vm, sc.task_vm]
+                                   ).astype(jnp.int32)
+        m = m & act
+        mf = m.astype(jnp.float32)
+        E = c.ev_t.shape[0]
+        pos = c.ev_n + (jnp.cumsum(mf) - mf).astype(jnp.int32)
+        slot = (pos[:, None] == jnp.arange(E, dtype=jnp.int32)[None, :]) \
+            & m[:, None]
+        written = jnp.any(slot, axis=0)
+
+        def pick_f(v):
+            return jnp.sum(jnp.where(slot, v[:, None], 0.0), axis=0)
+
+        def pick_i(v):
+            return jnp.sum(jnp.where(slot, v[:, None], 0), axis=0)
+
+        extra.update(
+            ts=ts,
+            ev_t=jnp.where(written, pick_f(e_t), c.ev_t),
+            ev_kind=jnp.where(written, pick_i(e_kind), c.ev_kind),
+            ev_task=jnp.where(written, pick_i(e_task), c.ev_task),
+            ev_vm=jnp.where(written, pick_i(e_vm), c.ev_vm),
+            ev_n=c.ev_n + jnp.sum(mf).astype(jnp.int32))
     return _Carry(time, rem, running, start, finish, ready,
-                  maps_left, c.epoch)
+                  maps_left, c.epoch, **extra)
 
 
 def _sim_output(sc: ScenarioArrays, cf: _Carry) -> SimOutput:
@@ -998,8 +1122,24 @@ def _control_active(sc: ScenarioArrays) -> bool:
                 or (cp != 0).any() or (dp != 0).any() or (pe != 0).any())
 
 
-def simulate_arrays(sc: ScenarioArrays, *,
-                    control: bool | None = None) -> SimOutput:
+def _trace_caps(T: int, V: int, control: bool, trace: bool,
+                trace_events: int | None) -> tuple[int, int] | None:
+    """Static trace capacities (DESIGN.md §12.2), or ``None`` when off."""
+    if not trace:
+        return None
+    ev = (int(trace_events) if trace_events is not None
+          else event_capacity(T, V, control))
+    return (timeseries_capacity(T, V, control), ev)
+
+
+def _trace_of(cf: _Carry) -> TraceBuffers:
+    return TraceBuffers(ts=cf.ts, ev_t=cf.ev_t, ev_kind=cf.ev_kind,
+                        ev_task=cf.ev_task, ev_vm=cf.ev_vm, ev_n=cf.ev_n)
+
+
+def simulate_arrays(sc: ScenarioArrays, *, control: bool | None = None,
+                    trace: bool = False,
+                    trace_events: int | None = None):
     """Run one encoded scenario.  Pure function of arrays: jit/vmap-friendly.
 
     Both scheduling policies run branch-free inside the one while_loop body:
@@ -1017,10 +1157,15 @@ def simulate_arrays(sc: ScenarioArrays, *,
     failures); rates are evaluated exactly once per epoch.  Batches should
     prefer :func:`simulate_batch_arrays`, which shares one epoch loop across
     all lanes and stops at the batch's realized epoch count.
+
+    ``trace=True`` (DESIGN.md §12) returns ``(SimOutput, TraceBuffers)``
+    — the schedule is bitwise-identical to the untraced run.
     """
     if control is None:
         control = _control_active(sc)
-    inv, c0 = _epoch_setup(sc, control=control)
+    tr = _trace_caps(sc.task_job.shape[0], sc.vm_mips.shape[0], control,
+                     trace, trace_events)
+    inv, c0 = _epoch_setup(sc, control=control, trace=tr)
     bound = _lane_bound(sc) if control \
         else jnp.int32(2 * sc.task_job.shape[0] + 2)
 
@@ -1028,16 +1173,20 @@ def simulate_arrays(sc: ScenarioArrays, *,
         return _has_unfinished(sc, c) & (c.epoch < bound)
 
     def body(c: _Carry):
-        return _epoch_step(sc, inv, c,
-                           control=control)._replace(epoch=c.epoch + 1)
+        return _epoch_step(sc, inv, c, control=control,
+                           trace=tr is not None
+                           )._replace(epoch=c.epoch + 1)
 
     cf = jax.lax.while_loop(cond, body, c0)
-    return _sim_output(sc, cf)
+    out = _sim_output(sc, cf)
+    if tr is not None:
+        return out, _trace_of(cf)
+    return out
 
 
 def simulate_batch_arrays(
-        batch: ScenarioArrays, *,
-        control: bool | None = None) -> tuple[SimOutput, jax.Array]:
+        batch: ScenarioArrays, *, control: bool | None = None,
+        trace: bool = False, trace_events: int | None = None):
     """Run a stacked batch with one shared epoch loop (batch early exit).
 
     Instead of vmapping the per-lane ``while_loop`` (whose batching rule
@@ -1051,17 +1200,20 @@ def simulate_batch_arrays(
 
     Returns ``(SimOutput, realized_epochs)`` where ``realized_epochs`` is
     the i32 scalar number of epoch iterations the batch actually executed
-    (== the max per-lane ``n_epochs``).
+    (== the max per-lane ``n_epochs``); ``(SimOutput, realized_epochs,
+    TraceBuffers)`` under ``trace=True``.
     """
     if control is None:
         control = _control_active(batch)
     T = batch.task_job.shape[1]
     V = batch.vm_mips.shape[1]
+    tr = _trace_caps(T, V, control, trace, trace_events)
     # under control the per-lane bound is data-dependent (_lane_bound,
     # folded into each lane's activity); the global count only needs the
     # static worst case (all additive widenings active at once)
     bound = jnp.int32(7 * T + V + 3 if control else 2 * T + 2)
-    inv, c0 = jax.vmap(partial(_epoch_setup, control=control))(batch)
+    inv, c0 = jax.vmap(partial(_epoch_setup, control=control,
+                               trace=tr))(batch)
 
     def lanes_active(c: _Carry) -> jax.Array:
         return jax.vmap(partial(_lane_active, control=control))(batch, c)
@@ -1075,7 +1227,8 @@ def simulate_batch_arrays(
 
     def body(state):
         c, active, n = state
-        c2 = jax.vmap(partial(_epoch_step, control=control))(batch, inv, c)
+        c2 = jax.vmap(partial(_epoch_step, control=control,
+                              trace=tr is not None))(batch, inv, c)
         # per-lane realized epochs: only lanes that still had work count
         # this iteration (matches the per-lane while_loop's count exactly)
         c2 = c2._replace(epoch=c.epoch + active.astype(jnp.int32))
@@ -1083,16 +1236,21 @@ def simulate_batch_arrays(
 
     cf, _, realized = jax.lax.while_loop(
         cond, body, (c0, lanes_active(c0), jnp.int32(0)))
-    return jax.vmap(_sim_output)(batch, cf), realized
+    out = jax.vmap(_sim_output)(batch, cf)
+    if tr is not None:
+        return out, realized, _trace_of(cf)
+    return out, realized
 
 
 # ---------------------------------------------------------------------------
 # Sparse/compacted epoch stepping (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames="control")
-def _setup_batch(batch: ScenarioArrays, control: bool = False):
-    return jax.vmap(partial(_epoch_setup, control=control))(batch)
+@partial(jax.jit, static_argnames=("control", "trace"))
+def _setup_batch(batch: ScenarioArrays, control: bool = False,
+                 trace: tuple[int, int] | None = None):
+    return jax.vmap(partial(_epoch_setup, control=control,
+                            trace=trace))(batch)
 
 
 @partial(jax.jit, static_argnames="control")
@@ -1103,10 +1261,10 @@ def _active_batch(batch: ScenarioArrays, c: _Carry, control: bool = False):
 _output_batch = jax.jit(jax.vmap(_sim_output))
 
 
-@partial(jax.jit, static_argnames=("k", "control"))
+@partial(jax.jit, static_argnames=("k", "control", "trace"))
 def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
                       active: jax.Array, remaining: jax.Array, k: int,
-                      control: bool = False):
+                      control: bool = False, trace: bool = False):
     """Advance the batch up to ``k`` epochs (early-exiting on
     ``any(active)`` and the dynamic ``remaining`` budget) — the one
     compiled stepper both the dense-resume and compacted shapes share.
@@ -1119,7 +1277,8 @@ def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
 
     def body(state):
         c, act, i = state
-        c2 = jax.vmap(partial(_epoch_step, control=control))(batch, inv, c)
+        c2 = jax.vmap(partial(_epoch_step, control=control,
+                              trace=trace))(batch, inv, c)
         c2 = c2._replace(epoch=c.epoch + act.astype(jnp.int32))
         return (c2,
                 jax.vmap(partial(_lane_active, control=control))(batch, c2),
@@ -1143,8 +1302,9 @@ def _put_lanes(store, idx: jax.Array, sub):
 
 def simulate_batch_arrays_compact(
         batch: ScenarioArrays, *, k: int | str = "auto",
-        floor: int = 8, cost_model=None,
-        control: bool | None = None) -> tuple[SimOutput, jax.Array]:
+        floor: int = 8, cost_model=None, control: bool | None = None,
+        trace: bool = False, trace_events: int | None = None,
+        stats: dict | None = None):
     """:func:`simulate_batch_arrays` with sparse active-lane compaction.
 
     Tail-heavy batches (mixed-policy / elastic grids) realize 20+ epochs
@@ -1172,6 +1332,13 @@ def simulate_batch_arrays_compact(
     finished mid-chunk).  Host control flow means this entry point is
     NOT jit-able — it *contains* jitted chunks; callers inside jit use
     the dense driver.
+
+    The trace leaves ride the carry through the gather/scatter like any
+    other leaf, so traced compacted runs are bitwise-identical to the
+    dense driver's.  ``stats`` (a dict, mutated in place) collects host
+    telemetry for :class:`~repro.core.telemetry.RunReport`: ``syncs``
+    (host activity syncs), ``compactions`` (gather rounds) and
+    ``dispatches`` (chunk-stepper launches).
     """
     if control is None:
         control = _control_active(batch)
@@ -1200,7 +1367,14 @@ def simulate_batch_arrays_compact(
     if k < 1:
         raise ValueError(f"simulate_batch_arrays_compact: k must be >= 1 "
                          f"or 'auto', got {k}")
-    inv, c0 = _setup_batch(batch, control=control)
+    tr = _trace_caps(T, batch.vm_mips.shape[1], control, trace,
+                     trace_events)
+    if stats is None:
+        stats = {}
+    stats.setdefault("syncs", 0)
+    stats.setdefault("compactions", 0)
+    stats.setdefault("dispatches", 0)
+    inv, c0 = _setup_batch(batch, control=control, trace=tr)
     carry_store = c0
     cur_batch, cur_inv, cur_carry = batch, inv, c0
     cur_active = _active_batch(batch, c0, control=control)
@@ -1208,6 +1382,7 @@ def simulate_batch_arrays_compact(
     realized = 0
     while realized < bound:
         act_np = np.asarray(cur_active)
+        stats["syncs"] += 1
         n_act = int(act_np.sum())
         if n_act == 0:
             break
@@ -1227,12 +1402,18 @@ def simulate_batch_arrays_compact(
             cur_carry = _take_lanes(carry_store, take)
             cur_active = _active_batch(cur_batch, cur_carry,
                                        control=control)
+            stats["compactions"] += 1
         cur_carry, cur_active, n_step = _step_epoch_chunk(
             cur_batch, cur_inv, cur_carry, cur_active,
-            jnp.int32(bound - realized), k, control=control)
+            jnp.int32(bound - realized), k, control=control,
+            trace=tr is not None)
+        stats["dispatches"] += 1
         realized += int(n_step)
     carry_store = _put_lanes(carry_store, jnp.asarray(cur_idx), cur_carry)
-    return _output_batch(batch, carry_store), jnp.int32(realized)
+    out = _output_batch(batch, carry_store), jnp.int32(realized)
+    if tr is not None:
+        return out + (_trace_of(carry_store),)
+    return out
 
 
 # ---------------------------------------------------------------------------

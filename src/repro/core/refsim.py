@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import control, elasticity, network, storage
+from . import control, elasticity, network, storage, telemetry
 from .config import (BindingPolicy, Scenario, SchedPolicy,
                      base_task_lengths_f32)
 # the engine's masked-argmin fill: LOCALITY's candidate masking must use
@@ -108,6 +108,11 @@ class SimResult:
     # deadlines/preemption — parity-pinned against the engine's SLO layer)
     shed_tasks: int = 0
     preemptions: int = 0
+    # event mirror (DESIGN.md §12): ``(t, kind, task, vm)`` rows in
+    # simulation order, kinds from ``telemetry.EVENT_NAMES`` — the
+    # engine's device-side event log must reduce to exactly these
+    # counts (and timestamps, SHED excepted) per kind
+    events: list = field(default_factory=list)
 
     def job(self, j: int = 0) -> JobResult:
         return self.jobs[j]
@@ -331,6 +336,7 @@ class IoTSimBroker:
         # reserve open) bumps the task's generation and re-pushes, so the
         # superseded calendar entry is skipped at pop time
         calendar: list[tuple[float, int, int, int]] = []
+        events: list[tuple[float, int, int, int]] = []
         seq = itertools.count()
         gen = [0] * len(tasks)
         hit = [False] * len(tasks)
@@ -354,6 +360,15 @@ class IoTSimBroker:
                 np.float32(vms[task.vm].mips))
             return bool(efin > np.float32(task.deadline))
 
+        def mark_shed(tid: int, at: float) -> None:
+            """Shed once: orphan-reduce marking can re-touch a task
+            already shed by admission control — only the first refusal
+            is an event (the engine's ``new_shed`` edge mask)."""
+            task = tasks[tid]
+            if not task.shed:
+                task.shed = True
+                events.append((at, telemetry.EV_SHED, tid, task.vm))
+
         def urgent(tid: int) -> bool:
             """The engine's BOOST urgency predicate, evaluated at the
             current clock (pop time — urgency grows as slack shrinks)."""
@@ -374,7 +389,7 @@ class IoTSimBroker:
             if not self.tt.is_open(task.vm, elig):
                 return
             if shed_at(tid, elig):     # push-time admission control
-                task.shed = True
+                mark_shed(tid, elig)
                 return
             heapq.heappush(calendar, (elig, next(seq), tid, gen[tid]))
 
@@ -427,6 +442,7 @@ class IoTSimBroker:
             task.start = now
             self.tt.launch(tid, task)
             running.add(tid)
+            events.append((now, telemetry.EV_START, tid, task.vm))
 
         def admit(vm: int) -> int | None:
             """Deadline-aware admission (DESIGN.md §11): pops the
@@ -446,7 +462,7 @@ class IoTSimBroker:
                 else:
                     tid = heapq.heappop(q)[2]
                 if shed_at(tid, now):
-                    tasks[tid].shed = True
+                    mark_shed(tid, now)
                     continue
                 return tid
             return None
@@ -457,6 +473,7 @@ class IoTSimBroker:
             under preempt_resume), re-dispatch latency, first hit moves
             to the failover slot and pays the re-replication fetch."""
             task = tasks[tid]
+            events.append((now, telemetry.EV_PREEMPT, tid, task.vm))
             task.n_evict += 1
             self._n_preempt += 1
             running.discard(tid)
@@ -519,6 +536,7 @@ class IoTSimBroker:
                         for t in tasks):
                     self.tt.close[v] = now
                     self._n_scale += 1
+                    events.append((now, telemetry.EV_SCALE_CLOSE, -1, v))
             qdepth = sum(1 for t in tasks
                          if t.finish == math.inf and t.start == math.inf
                          and not t.shed and t.ready <= now)
@@ -535,6 +553,7 @@ class IoTSimBroker:
                     self._opened.add(v)
                     self.tt.avail[v] = now + sc.elasticity.spinup_delay
                     self._n_scale += 1
+                    events.append((now, telemetry.EV_SCALE_OPEN, -1, v))
                     # the lease edge re-arms pending arrivals bound here
                     for tid, t in enumerate(tasks):
                         if t.finish == math.inf and t.start == math.inf \
@@ -555,6 +574,7 @@ class IoTSimBroker:
             for tid, task in enumerate(tasks):
                 if task.finish < math.inf or task.shed or task.vm != v:
                     continue
+                events.append((tf, telemetry.EV_KILL, tid, v))
                 if tid in running:
                     running.discard(tid)
                     self.tt.complete(tid, task)
@@ -596,6 +616,7 @@ class IoTSimBroker:
                     task = tasks[tid]
                     task.remaining = 0.0
                     task.finish = now
+                    events.append((now, telemetry.EV_FINISH, tid, task.vm))
                     running.discard(tid)
                     self.tt.complete(tid, task)
                     if not task.is_reduce:
@@ -633,7 +654,7 @@ class IoTSimBroker:
                         arrived_vms.add(task.vm)
                     else:
                         if shed_at(tid, now):
-                            task.shed = True
+                            mark_shed(tid, now)
                         else:
                             start_task(tid)
                 for vm in arrived_vms:
@@ -655,12 +676,12 @@ class IoTSimBroker:
                     continue
                 at = gate(max(self.tt.eligible_at(task), now), task.vm)
                 if self.tt.is_open(task.vm, at) and shed_at(tid, at):
-                    task.shed = True
+                    mark_shed(tid, at)
             for ji in range(len(sc.jobs)):
                 if any(tasks[t].shed for t in self.jt.map_ids[ji]):
                     for rid in self.jt.reduce_ids[ji]:
                         if tasks[rid].finish == math.inf:
-                            tasks[rid].shed = True
+                            mark_shed(rid, now)
 
         n_hit = sum(hit)
         n_rec = sum(1 for tid, h in enumerate(hit)
@@ -680,7 +701,8 @@ class IoTSimBroker:
                          scale_events=self._n_scale,
                          recovered_fraction=n_rec / max(n_hit, 1),
                          shed_tasks=sum(1 for t in tasks if t.shed),
-                         preemptions=self._n_preempt)
+                         preemptions=self._n_preempt,
+                         events=events)
 
     # ---- dependent variables (paper §5.3) ---------------------------------
 

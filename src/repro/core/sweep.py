@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import inspect
+import time
 from functools import lru_cache, partial
 from typing import Any, Mapping, Sequence
 
@@ -51,6 +52,7 @@ import numpy as np
 from . import costmodel as costmodel_mod
 from . import elasticity as elasticity_mod
 from . import storage as storage_mod
+from . import telemetry
 from .config import (JOB_SMALL, VM_SMALL, BindingPolicy, Scenario,
                      SchedPolicy, as_job_spec, as_vm_spec,
                      base_task_lengths_f32)
@@ -866,7 +868,8 @@ class SweepPlan:
     def run(self, mesh: jax.sharding.Mesh | None = None,
             chunk: int | None = None, *, bucket: object = "auto",
             backend: str = "xla", stream_to=None, compact: object = None,
-            cost_model: "costmodel_mod.CostModel | None" = None):
+            cost_model: "costmodel_mod.CostModel | None" = None,
+            report: bool = False):
         """Execute the plan and return a labeled :class:`SweepResult`.
 
         Execution modes (combine with bucketing orthogonally):
@@ -920,6 +923,20 @@ class SweepPlan:
         there is no dense tail to compact away.  ``cost_model`` overrides
         the per-device measured calibration (pin one for deterministic
         scheduling decisions across hosts).
+
+        ``report=True`` (DESIGN.md §12) additionally returns a
+        :class:`~repro.core.telemetry.RunReport` — ``(result, report)``
+        — recording what the adaptive schedule actually did: one
+        :class:`~repro.core.telemetry.BucketReport` per dispatched
+        bucket (cells, padded shape, statics, the cost-model split gain
+        that justified it, dispatch/compaction-sync counts, wall time),
+        fused-runner/encoder compile-cache hit+miss deltas, the resolved
+        cost-model coefficients with their calibration ``source``, and
+        run provenance.  Purely observational: the executed schedule and
+        every metric value are unchanged.  Composes with every mode
+        (streaming returns ``(StreamedSweep, RunReport)``; each streamed
+        chunk re-buckets, so its report holds one entry per bucket *per
+        chunk*).
         """
         if mesh is not None and chunk is not None:
             raise ValueError("run: pass mesh or chunk, not both")
@@ -933,27 +950,46 @@ class SweepPlan:
                 "run: backend='pallas' is single-device (use chunk=, "
                 "not mesh=)")
         compact = _check_compact(compact)
+        buckets: list | None = None
+        if report:
+            # resolve the calibration up front so the schedule and the
+            # report price with the *same* coefficients
+            cost_model = cost_model or costmodel_mod.default_cost_model()
+            t0 = time.perf_counter()
+            ci0, ei0 = _cache_infos()
+            buckets = []
         if stream_to is not None:
             if chunk is None:
                 raise ValueError(
                     "run: stream_to= needs chunk= (the streamed write "
                     "appends one chunk of cells at a time)")
-            return self._run_streaming(stream_to, chunk, bucket, backend,
-                                       compact, cost_model)
+            streamed = self._run_streaming(stream_to, chunk, bucket,
+                                           backend, compact, cost_model,
+                                           buckets)
+            if buckets is None:
+                return streamed
+            return streamed, _finish_report(buckets, self.size, backend,
+                                            compact, cost_model, ci0, ei0,
+                                            t0)
         cols, pad_tasks, pad_vms = self._compiled()
         metrics, n_jobs = _execute_grid(cols, self.size, pad_tasks, pad_vms,
                                         bucket, mesh, chunk, backend,
-                                        compact, cost_model)
+                                        compact, cost_model, report=buckets)
         shaped = {
             name: (m.reshape(self.shape) if m.ndim == 1 or n_jobs == 1
                    else m.reshape(self.shape + (n_jobs,)))
             for name, m in metrics.items()}
-        return SweepResult(axis_names=tuple(d.names for d in self.dims),
-                           axis_labels=tuple(d.labels for d in self.dims),
-                           metrics=shaped, n_jobs=n_jobs)
+        result = SweepResult(axis_names=tuple(d.names for d in self.dims),
+                             axis_labels=tuple(d.labels for d in self.dims),
+                             metrics=shaped, n_jobs=n_jobs)
+        if buckets is None:
+            return result
+        return result, _finish_report(buckets, self.size, backend, compact,
+                                      cost_model, ci0, ei0, t0)
 
     def _run_streaming(self, path, chunk: int, bucket, backend,
-                       compact=None, cost=None) -> "StreamedSweep":
+                       compact=None, cost=None,
+                       report=None) -> "StreamedSweep":
         """Chunked execute + parquet append (see :meth:`run`)."""
         try:
             import pyarrow as pa
@@ -974,10 +1010,16 @@ class SweepPlan:
                 sub = {k: v[lo:hi] for k, v in cols.items()}
                 metrics, n_jobs = _execute_grid(
                     sub, hi - lo, pad_tasks, pad_vms, bucket, None, None,
-                    backend, compact, cost)
+                    backend, compact, cost, report=report)
                 table = pa.table(_long_form_columns(
                     axis_names, axis_labels, shape, metrics, n_jobs,
                     lo, hi))
+                # run provenance rides in the file-level schema metadata
+                # (DESIGN.md §12) — pyarrow schema equality ignores
+                # metadata, so later chunks append without re-stamping
+                table = table.replace_schema_metadata(
+                    {**(table.schema.metadata or {}),
+                     **telemetry.parquet_metadata()})
                 if writer is None:
                     writer = pq.ParquetWriter(path, table.schema)
                 writer.write_table(table)
@@ -1004,19 +1046,66 @@ def _check_compact(compact):
         f">= 1; got {compact!r}")
 
 
+def _cache_infos():
+    """Hit/miss counters of the two lru caches the adaptive schedule
+    leans on (deltas around a run feed :class:`telemetry.RunReport`)."""
+    return _fused_runner.cache_info(), _grid_encoder.cache_info()
+
+
+def _finish_report(buckets, n_cells: int, backend, compact, cost,
+                   ci0, ei0, t0) -> "telemetry.RunReport":
+    """Assemble the :class:`telemetry.RunReport` for one ``run()``."""
+    ci1, ei1 = _cache_infos()
+    return telemetry.RunReport(
+        n_cells=n_cells, n_buckets=len(buckets), backend=backend,
+        compact=compact, buckets=buckets,
+        compile_cache_hits=ci1.hits - ci0.hits,
+        compile_cache_misses=ci1.misses - ci0.misses,
+        encoder_cache_hits=ei1.hits - ei0.hits,
+        encoder_cache_misses=ei1.misses - ei0.misses,
+        compaction_syncs=sum(b.compact_syncs for b in buckets),
+        dispatches=sum(b.dispatches for b in buckets),
+        cost_model={"dispatch_us": cost.dispatch_us,
+                    "epoch_lane_us": cost.epoch_lane_us,
+                    "device": cost.device, "source": cost.source},
+        device=costmodel_mod.device_key(),
+        provenance=dict(telemetry.provenance()),
+        wall_s=time.perf_counter() - t0)
+
+
 def _execute_grid(cols: dict[str, np.ndarray], N: int, pad_tasks: int,
                   pad_vms: int, bucket, mesh, chunk, backend,
-                  compact=None, cost=None
+                  compact=None, cost=None, report: list | None = None
                   ) -> tuple[dict[str, np.ndarray], int]:
     """Bucket + simulate ``N`` flattened cells; returns ``(metrics,
     n_jobs)`` with per-job metric columns shaped ``[N, n_jobs]`` and
-    per-scenario columns ``[N]`` (callers reshape to grid/table form)."""
-    if compact is not None and cost is None:
+    per-scenario columns ``[N]`` (callers reshape to grid/table form).
+    ``report`` (a list, appended in place) collects one
+    :class:`telemetry.BucketReport` per dispatched bucket."""
+    if (compact is not None or report is not None) and cost is None:
         cost = costmodel_mod.default_cost_model()
     groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket, cost)
-    parts = [(idx, *_run_cells(gcols, len(idx), tb, vb, statics,
-                               mesh, chunk, backend, compact, cost))
-             for idx, gcols, statics, tb, vb in groups]
+    parts = []
+    for idx, gcols, statics, tb, vb in groups:
+        stats = {"dispatches": 0, "syncs": 0, "compactions": 0}
+        w0 = time.perf_counter()
+        parts.append((idx, *_run_cells(gcols, len(idx), tb, vb, statics,
+                                       mesh, chunk, backend, compact, cost,
+                                       stats=stats)))
+        if report is not None:
+            report.append(telemetry.BucketReport(
+                cells=len(idx), pad_tasks=tb, pad_vms=vb, backend=backend,
+                control=bool(_CONTROL_PARAMS
+                             & (set(gcols) | set(statics or {}))),
+                statics=dict(statics or {}),
+                # the modelled lane-epoch saving vs running these cells
+                # at the grid cap — the quantity _bucket_groups weighed
+                # against dispatch_us (None: bucket already at the cap)
+                split_gain_us=(cost.split_gain_us(len(idx), tb, pad_tasks)
+                               if tb < pad_tasks else None),
+                dispatches=stats["dispatches"],
+                compact_syncs=stats["syncs"],
+                wall_s=time.perf_counter() - w0))
     n_jobs = int(parts[0][1].makespan.shape[-1])
     metrics: dict[str, np.ndarray] = {}
     for f in JobMetrics._fields:
@@ -1235,7 +1324,8 @@ def _metrics_batch(batch, out):
 
 def _run_compact(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
                  statics: dict[str, int] | None, backend: str, k, cost,
-                 max_pes: int, control: bool = False):
+                 max_pes: int, control: bool = False,
+                 stats: dict | None = None):
     """One compacted-stepping execution of a cell slice (DESIGN.md §9):
     jitted encode -> host-driven compacted epoch stepping -> jitted
     metrics.  Encode and metrics stay fused and signature-cached exactly
@@ -1249,21 +1339,28 @@ def _run_compact(cols: dict[str, np.ndarray], pad_tasks: int, pad_vms: int,
             epoch_schedule_compact  # lazy: ref.py cycle
         out, realized = epoch_schedule_compact(batch, k=k, max_pes=max_pes,
                                                cost_model=cost,
-                                               control=control)
+                                               control=control, stats=stats)
     else:
         out, realized = simulate_batch_arrays_compact(batch, k=k,
                                                       cost_model=cost,
-                                                      control=control)
+                                                      control=control,
+                                                      stats=stats)
     jm, sm = _metrics_batch(batch, out)
     return jm, sm, int(realized)
 
 
 def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                pad_vms: int, statics: dict[str, int] | None,
-               mesh, chunk, backend, compact=None, cost=None) -> tuple[
+               mesh, chunk, backend, compact=None, cost=None,
+               stats: dict | None = None) -> tuple[
                    JobMetrics, ScenarioMetrics, np.ndarray]:
     """Encode + simulate one bucket's cells; returns host-side
-    ``(JobMetrics, ScenarioMetrics, realized_epochs[n])``."""
+    ``(JobMetrics, ScenarioMetrics, realized_epochs[n])``.  ``stats``
+    (a dict, mutated in place) counts device ``dispatches`` plus the
+    compact drivers' host ``syncs``/``compactions``."""
+    if stats is None:
+        stats = {}
+    stats.setdefault("dispatches", 0)
     # the control path is keyed on column *presence* (host-decidable even
     # for traced columns — engine._control_active is not, under trace):
     # a plan that never names a control parameter pays zero control cost
@@ -1276,6 +1373,7 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
         batch = grid_arrays(_pad_cells(cols, full), pad_tasks=pad_tasks,
                             pad_vms=pad_vms, static_params=statics)
         jm, sm = _simulate_full_sharded(batch, mesh, control)
+        stats["dispatches"] += 1
         jm = jax.tree.map(lambda x: np.asarray(x)[:n], jm)
         sm = jax.tree.map(lambda x: np.asarray(x)[:n], sm)
         realized = np.full(n, int(np.max(sm.n_epochs)), np.int32)
@@ -1292,14 +1390,15 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                 take = min(chunk, n - lo)
                 jm, sm, rz = _run_compact(part, pad_tasks, pad_vms, statics,
                                           backend, compact, cost, max_pes,
-                                          control)
+                                          control, stats)
                 parts.append(jax.tree.map(lambda x: np.asarray(x)[:take],
                                           (jm, sm)))
                 realized[lo:lo + take] = rz
             jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
             return jm, sm, realized
         jm, sm, rz = _run_compact(cols, pad_tasks, pad_vms, statics,
-                                  backend, compact, cost, max_pes, control)
+                                  backend, compact, cost, max_pes, control,
+                                  stats)
         jm = jax.tree.map(np.asarray, jm)
         sm = jax.tree.map(np.asarray, sm)
         return jm, sm, np.full(n, rz, np.int32)
@@ -1314,12 +1413,14 @@ def _run_cells(cols: dict[str, np.ndarray], n: int, pad_tasks: int,
                               min(chunk, n))
             take = min(chunk, n - lo)
             jm, sm, rz = runner(*(jnp.asarray(part[k]) for k in names))
+            stats["dispatches"] += 1
             parts.append(jax.tree.map(lambda x: np.asarray(x)[:take],
                                       (jm, sm)))
             realized[lo:lo + take] = int(rz)
         jm, sm = jax.tree.map(lambda *xs: np.concatenate(xs), *parts)
         return jm, sm, realized
     jm, sm, rz = runner(*(jnp.asarray(cols[k]) for k in names))
+    stats["dispatches"] += 1
     jm = jax.tree.map(np.asarray, jm)
     sm = jax.tree.map(np.asarray, sm)
     return jm, sm, np.full(n, int(rz), np.int32)
@@ -1476,9 +1577,11 @@ class SweepResult:
                                   flat, nj, 0, N)
 
     def to_parquet(self, path) -> None:
-        """Write :meth:`to_table` to a parquet file.  Needs the *optional*
-        ``pyarrow`` dependency — import-guarded so the simulator core
-        never depends on it."""
+        """Write :meth:`to_table` to a parquet file, stamping run
+        provenance (repro/jax versions, device, git sha) into the schema
+        metadata (DESIGN.md §12).  Needs the *optional* ``pyarrow``
+        dependency — import-guarded so the simulator core never depends
+        on it."""
         try:
             import pyarrow as pa
             import pyarrow.parquet as pq
@@ -1487,7 +1590,11 @@ class SweepResult:
                 "SweepResult.to_parquet requires the optional pyarrow "
                 "dependency (pip install pyarrow); to_table() returns the "
                 "same columns as plain numpy") from e
-        pq.write_table(pa.table(dict(self.to_table())), path)
+        table = pa.table(dict(self.to_table()))
+        table = table.replace_schema_metadata(
+            {**(table.schema.metadata or {}),
+             **telemetry.parquet_metadata()})
+        pq.write_table(table, path)
 
     def __repr__(self) -> str:
         ax = ", ".join(f"{'×'.join(ns)}[{len(labs)}]"

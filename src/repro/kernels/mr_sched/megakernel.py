@@ -91,13 +91,15 @@ from jax.experimental import pallas as pl
 # THE shared f32 deadline-pressure op sequence (DESIGN.md §11) — imported
 # so the kernel's SHED/BOOST predicates cannot drift from the oracle's
 from repro.core.control import earliest_finish
+# trace capacity math (DESIGN.md §12) shared with the engine recorder
+from repro.core.telemetry import timeseries_capacity
 
 _BIG = 1e30
 _TIME_EPS = 1e-6
 
 
 def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
-            control: bool):
+            control: bool, trace: bool):
     (task_len_ref, task_vm_ref, ready0_ref, is_red_ref, valid_ref,
      shuffle_ref, vm_mips_ref, vm_pes_ref, sched_ref,
      vm_start_ref, vm_stop_ref, spinup_ref, prio_ref) = refs[:13]
@@ -108,7 +110,12 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
          task_vm2_ref, refetch_ref, task_deadline_ref, dl_policy_ref,
          dl_slack_ref, preempt_ref, resume_ref) = refs[13:28]
         n_data = 28
-    n_state = 14 if control else 7
+    elif trace:
+        # open-loop traces need vm_valid for the open-VM observable (the
+        # control lowering already carries it as lane data)
+        vm_valid_ref = refs[13]
+        n_data = 14
+    n_state = (14 if control else 7) + (1 if trace else 0)
     state_in = refs[n_data:n_data + n_state]
     out_refs = refs[n_data + n_state:]
 
@@ -201,6 +208,9 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
             state_in[12][...],                           # n_evict
             state_in[13][...][:, 0],                     # work_lost
         )
+    if trace:
+        vm_valid_t = vm_valid_ref[...] != 0              # (tile, V)
+        state = state + (state_in[-1][...],)             # ts rows (tile,C*8)
 
     def lanes_active(finish, lane_ep, shed=None):
         unfin = valid & (finish >= _BIG / 2)
@@ -223,11 +233,15 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         active = lanes_active(finish, lane_ep,
                               st[13] if control else None)
         runf = running.astype(jnp.float32)
+        if trace and not control:
+            # pre-update carry snapshot: the engine's open-loop recorder
+            # reads the observables off ``c.*`` before the epoch mutates
+            t0, start0, finish0, ready0c = time, start, finish, ready
 
         # --- binding-slot switch + control hook (clock = time) ------------
         if control:
             (hit, vm_open, vm_close, n_scale, shed0, n_evict0,
-             work_lost) = st[9:]
+             work_lost) = st[9:16]
             cur_oh_b = jnp.where(hit[..., None], onehot2_b, onehot_b)
             cur_oh = cur_oh_b.astype(jnp.float32)
         else:
@@ -517,6 +531,43 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
                              & (finish >= _BIG / 2) & ~running)
             new = new + (hit, vm_open, vm_close, n_scale, shed, n_evict,
                          work_lost)
+        if trace:
+            # --- trace recorder (DESIGN.md §12): observe, never act -------
+            # One time-series row per realized epoch, the engine's exact
+            # f32 op sequence and one-hot add — bitwise in interpret mode
+            # (tests/test_telemetry.py).  The event log stays engine/refsim
+            # scope to bound kernel churn.
+            actf = active.astype(jnp.float32)
+            if control:
+                new_shed = shed & ~shed0
+                n_fail = jnp.sum(affected.astype(jnp.float32), axis=1)
+                n_shed = jnp.sum(new_shed.astype(jnp.float32), axis=1)
+                n_ev = jnp.sum(evicted.astype(jnp.float32), axis=1)
+                q_d, b_f, n_o = qdepth, busy_frac, n_open
+            else:
+                # the control hook's observables over the static lease
+                # windows, evaluated on the pre-update carry
+                unfin_t = valid & (finish0 >= _BIG / 2)
+                q_d = jnp.sum((unfin_t & (start0 >= _BIG / 2)
+                               & (ready0c <= t0[:, None]))
+                              .astype(jnp.float32), axis=1)
+                busy_v = per_vm_sum(runf) > 0.5
+                open_v = vm_valid_t & (vm_start + spinup <= t0[:, None]) \
+                    & (t0[:, None] < vm_stop)
+                n_o = jnp.sum(open_v.astype(jnp.float32), axis=1)
+                b_f = (jnp.sum((open_v & busy_v).astype(jnp.float32),
+                               axis=1) / jnp.maximum(n_o, 1.0))
+                n_fail = n_shed = n_ev = jnp.zeros_like(actf)
+            ts = st[-1]
+            C = ts.shape[1] // 8
+            row = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+                   == lane_ep[:, None]).astype(jnp.float32) * actf[:, None]
+            vals = jnp.stack([time, q_d, b_f, n_o, actf,
+                              n_fail, n_shed, n_ev], axis=-1)
+            ts = (ts.reshape(ts.shape[0], C, 8)
+                  + row[:, :, None] * vals[:, None, :]
+                  ).reshape(ts.shape[0], C * 8)
+            new = new + (ts,)
         return new
 
     st = jax.lax.while_loop(cond, epoch, state)
@@ -536,10 +587,12 @@ def _kernel(*refs, T: int, V: int, max_pes: int, epoch_bound: int,
         out_refs[12][...] = st[13].astype(jnp.int32)
         out_refs[13][...] = st[14]
         out_refs[14][...] = st[15][:, None]
+    if trace:
+        out_refs[-1][...] = st[-1]
 
 
 def initial_state(task_len, ready0, is_red, valid, vm_start=None,
-                  vm_stop=None, vm_auto=None):
+                  vm_stop=None, vm_auto=None, trace_capacity=None):
     """The canonical t=0 carry state, built with the exact constants the
     kernel used to initialize in VMEM (so feeding it through the state
     inputs is a bitwise no-op vs the pre-carry kernel).  Layout — every
@@ -552,7 +605,11 @@ def initial_state(task_len, ready0, is_red, valid, vm_start=None,
     f32, vm_close (N,V) f32, n_scale (N,1) i32, shed (N,T) i32, n_evict
     (N,T) i32, work_lost (N,1) f32`` — reserve VMs start with no realized
     lease (``vm_open = _BIG``) until the control rule opens one, exactly
-    the engine's ``_epoch_setup`` initialization."""
+    the engine's ``_epoch_setup`` initialization.
+
+    ``trace_capacity`` (DESIGN.md §12) appends the per-epoch time-series
+    leaf ``ts (N, C*8) f32`` at the end — ``C`` rows of the 8-column
+    ``telemetry.TS_COLUMNS`` layout, flattened 2-D for the BlockSpecs."""
     N, T = task_len.shape
     base = (jnp.zeros((N, 1), jnp.float32),
             task_len,
@@ -563,22 +620,25 @@ def initial_state(task_len, ready0, is_red, valid, vm_start=None,
             jnp.sum(((valid != 0) & ~(is_red != 0)).astype(jnp.int32),
                     axis=1, keepdims=True),
             jnp.zeros((N, 1), jnp.int32))
-    if vm_auto is None:
-        return base
-    return base + (
-        jnp.zeros((N, T), jnp.int32),
-        jnp.where(vm_auto != 0, jnp.float32(_BIG),
-                  vm_start.astype(jnp.float32)),
-        vm_stop.astype(jnp.float32),
-        jnp.zeros((N, 1), jnp.int32),
-        jnp.zeros((N, T), jnp.int32),
-        jnp.zeros((N, T), jnp.int32),
-        jnp.zeros((N, 1), jnp.float32))
+    if vm_auto is not None:
+        base = base + (
+            jnp.zeros((N, T), jnp.int32),
+            jnp.where(vm_auto != 0, jnp.float32(_BIG),
+                      vm_start.astype(jnp.float32)),
+            vm_stop.astype(jnp.float32),
+            jnp.zeros((N, 1), jnp.int32),
+            jnp.zeros((N, T), jnp.int32),
+            jnp.zeros((N, T), jnp.int32),
+            jnp.zeros((N, 1), jnp.float32))
+    if trace_capacity is not None:
+        base = base + (jnp.zeros((N, int(trace_capacity) * 8),
+                                 jnp.float32),)
+    return base
 
 
 @functools.partial(jax.jit,
                    static_argnames=("tile", "interpret", "max_pes",
-                                    "epoch_limit", "control"))
+                                    "epoch_limit", "control", "trace"))
 def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
              vm_mips, vm_pes, sched_policy=None, vm_start=None,
              vm_stop=None, spinup=None, prio=None, vm_valid=None,
@@ -587,7 +647,8 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
              refetch=None, task_deadline=None, dl_policy=None,
              dl_slack=None, preempt=None, preempt_resume=None, state=None,
              *, tile: int = 64, max_pes: int = 8, interpret: bool = True,
-             epoch_limit: int | None = None, control: bool = False):
+             epoch_limit: int | None = None, control: bool = False,
+             trace: bool = False):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
@@ -626,6 +687,14 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     bounds the static admission scan); ``tile`` lanes share one early-exit
     epoch loop.  Returns the advanced carry state (same 8-leaf layout;
     15 leaves under control).
+
+    ``trace=True`` (static, DESIGN.md §12) appends the per-epoch
+    time-series leaf ``ts (N, C*8) f32`` to the carry — one
+    ``telemetry.TS_COLUMNS`` row per realized epoch, written by the
+    engine recorder's exact one-hot add, so the rows are **bitwise** the
+    engine's in interpret mode.  Open-loop traces additionally require
+    ``vm_valid`` (the open-VM observable); the event log stays
+    engine/refsim scope.
     """
     N, T = task_len.shape
     V = vm_mips.shape[1]
@@ -646,10 +715,16 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         raise ValueError("mr_epoch: control=True requires all fifteen "
                          "control lane-data arrays (vm_valid .. "
                          "preempt_resume)")
+    if trace and vm_valid is None:
+        raise ValueError("mr_epoch: trace=True requires vm_valid (the "
+                         "open-VM observable needs the real-VM mask)")
     if state is None:
-        state = initial_state(task_len, ready0, is_red, valid,
-                              vm_start=vm_start, vm_stop=vm_stop,
-                              vm_auto=vm_auto if control else None)
+        state = initial_state(
+            task_len, ready0, is_red, valid,
+            vm_start=vm_start, vm_stop=vm_stop,
+            vm_auto=vm_auto if control else None,
+            trace_capacity=(timeseries_capacity(T, V, control)
+                            if trace else None))
     if epoch_limit is None:
         epoch_limit = 7 * T + V + 3 if control else 2 * T + 2
     tile = min(tile, N)
@@ -675,6 +750,9 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         data_specs += [spec_v, spec_v, spec_v, spec_v, spec_1, spec_1,
                        spec_1, spec_1, spec_t, spec_t, spec_t, spec_1,
                        spec_1, spec_1, spec_1]
+    elif trace:
+        data += [vm_valid]
+        data_specs += [spec_v]
     state_in = [state[0], state[1], state[2], state[3], state[4],
                 state[6], state[7]]
     state_in_specs = [spec_1, spec_t, spec_t, spec_t, spec_t, spec_1,
@@ -688,11 +766,17 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
                            spec_t, spec_1]
         state_specs = state_specs + (spec_t, spec_v, spec_v, spec_1,
                                      spec_t, spec_t, spec_1)
+    if trace:
+        spec_ts = pl.BlockSpec((tile, state[-1].shape[1]), row)
+        state_in += [state[-1]]
+        state_in_specs += [spec_ts]
+        state_specs = state_specs + (spec_ts,)
     state_shapes = tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
                          for x in state)
     out = pl.pallas_call(
         functools.partial(_kernel, T=T, V=V, max_pes=max_pes,
-                          epoch_bound=epoch_limit, control=control),
+                          epoch_bound=epoch_limit, control=control,
+                          trace=trace),
         grid=grid,
         in_specs=data_specs + state_in_specs,
         out_specs=state_specs,

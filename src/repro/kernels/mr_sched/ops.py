@@ -21,6 +21,7 @@ from repro.core import network, storage
 from repro.core.control import failover_targets
 from repro.core.engine import (ScenarioArrays, SimOutput, _take_lanes,
                                _put_lanes)
+from repro.core.telemetry import timeseries_capacity
 from repro.core.util import pow2_pad
 
 from .kernel import mr_schedule
@@ -117,7 +118,7 @@ def _control_lane_data(batch: ScenarioArrays, pad, task_vm2, refetch):
 def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
                    max_pes: int | None = None,
                    interpret: bool | None = None,
-                   control: bool = False) -> SimOutput:
+                   control: bool = False, trace: bool = False):
     """Run the fused ``mr_epoch`` megakernel over a stacked J=1 batch.
 
     ``max_pes`` bounds the static per-VM admission scan and must cover the
@@ -131,6 +132,11 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
     ``sweep._CONTROL_PARAMS``) threads the closed-loop lane data through
     the kernel (DESIGN.md §10); degenerate control data reproduces the
     open-loop schedule bit for bit.
+
+    ``trace=True`` (static, DESIGN.md §12) additionally returns the
+    per-epoch time-series rows ``(N, C, 8)`` in ``telemetry.TS_COLUMNS``
+    layout — bitwise the engine recorder's in interpret mode:
+    ``(SimOutput, ts)`` instead of ``SimOutput``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -150,6 +156,10 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
     ctl = ()
     if control:
         ctl = _control_lane_data(batch, pad, *_control_derived(batch))
+    elif trace:
+        # open-loop traces need the real-VM mask — positionally the next
+        # mr_epoch arg after prio is vm_valid
+        ctl = (pad(batch.vm_valid.astype(jnp.int32)),)
     st = mr_epoch(
         pad(task_len.astype(jnp.float32)),
         pad(batch.task_vm.astype(jnp.int32)),
@@ -167,8 +177,13 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         pad(batch.spinup_delay.astype(jnp.float32)[:, None]),
         pad(batch.task_prio.astype(jnp.float32)),
         *ctl,
-        tile=tile, max_pes=max_pes, interpret=interpret, control=control)
-    return _sim_output_of_state(batch, st, N, control=control)
+        tile=tile, max_pes=max_pes, interpret=interpret, control=control,
+        trace=trace)
+    out = _sim_output_of_state(batch, st, N, control=control)
+    if trace:
+        C = st[-1].shape[1] // 8
+        return out, st[-1][:N].reshape(N, C, 8)
+    return out
 
 
 def _sim_output_of_state(batch: ScenarioArrays, st, N: int, *,
@@ -211,8 +226,8 @@ def _sim_output_of_state(batch: ScenarioArrays, st, N: int, *,
 def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
                            tile: int = 64, max_pes: int | None = None,
                            interpret: bool | None = None, floor: int = 8,
-                           cost_model=None, control: bool = False
-                           ) -> tuple[SimOutput, jnp.ndarray]:
+                           cost_model=None, control: bool = False,
+                           trace: bool = False, stats: dict | None = None):
     """Sparse active-lane compaction over the ``mr_epoch`` megakernel
     (DESIGN.md §9) — the Pallas twin of
     ``engine.simulate_batch_arrays_compact``.
@@ -240,7 +255,22 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
     result stays bitwise identical to the dense control path.  The host
     bound widens to the control epoch bound; the kernel's per-lane bound
     keeps degenerate lanes' realized counts at the open-loop ``2T + 2``.
+
+    ``trace=True`` (DESIGN.md §12): the time-series leaf rides the
+    gather/scatter like any other carry leaf, so the rows stay bitwise
+    the dense traced path's; returns ``(SimOutput, realized, ts)``.
+
+    ``stats`` (a dict, mutated in place) collects host-loop counters
+    with the engine compact driver's keys — ``syncs`` (device->host
+    activity readbacks), ``compactions`` (gather/scatter re-tiles) and
+    ``dispatches`` (kernel chunk launches) — feeding the sweep
+    :class:`~repro.core.telemetry.RunReport`.
     """
+    if stats is None:
+        stats = {}
+    stats.setdefault("syncs", 0)
+    stats.setdefault("compactions", 0)
+    stats.setdefault("dispatches", 0)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if max_pes is None:
@@ -291,16 +321,23 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
     if control:
         lanes = lanes + _control_lane_data(batch, pad,
                                            *_control_derived(batch))
+    elif trace:
+        # vm_valid joins the lane data (and the gather) — positionally
+        # the next mr_epoch arg after prio
+        lanes = lanes + (pad(batch.vm_valid.astype(jnp.int32)),)
     store = initial_state(lanes[0], pad(ready0.astype(jnp.float32)),
                           lanes[2], lanes[3],
                           vm_start=lanes[8], vm_stop=lanes[9],
-                          vm_auto=lanes[15] if control else None)
+                          vm_auto=lanes[15] if control else None,
+                          trace_capacity=(timeseries_capacity(T, V, control)
+                                          if trace else None))
     valid_np = np.asarray(lanes[3]) != 0                 # (N', T) host
     cur_idx = np.arange(N + n_pad)
     cur_lanes, cur_state = lanes, store
     total = 0
     while total < bound:
         finish_np = np.asarray(cur_state[4])
+        stats["syncs"] += 1
         unfin = valid_np[cur_idx] & (finish_np >= _BIG / 2)
         if control:
             # shed tasks never finish by design — they must not keep
@@ -321,12 +358,17 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
             take = jnp.asarray(cur_idx)
             cur_lanes = _take_lanes(lanes, take)
             cur_state = _take_lanes(store, take)
+            stats["compactions"] += 1
         limit = min(k, bound - total)
+        stats["dispatches"] += 1
         cur_state = mr_epoch(*cur_lanes[:2], cur_state[5], *cur_lanes[2:],
                              state=cur_state, tile=tile, max_pes=max_pes,
                              interpret=interpret, epoch_limit=limit,
-                             control=control)
+                             control=control, trace=trace)
         total += limit
     store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
     out = _sim_output_of_state(batch, store, N, control=control)
+    if trace:
+        C = store[-1].shape[1] // 8
+        return out, jnp.max(out.n_epochs), store[-1][:N].reshape(N, C, 8)
     return out, jnp.max(out.n_epochs)
