@@ -23,6 +23,12 @@ that row runs under a tightened budget — ``BENCH_SMOKE_PLAIN_TOL``
 lowering leaks into the plain path fails CI at <10% instead of hiding
 inside the general 25% noise allowance.
 
+A separate *host-chattiness* gate (DESIGN.md §13) replays the tail-heavy
+b64 grid at the baseline's pinned compaction interval and requires the
+sync census — full mask/permutation pulls, fused scalar pulls, device
+dispatches — to match the recorded figures exactly: the census is
+deterministic given the grid and the interval, so no tolerance applies.
+
     PYTHONPATH=src python -m benchmarks.bench_smoke
 """
 from __future__ import annotations
@@ -67,6 +73,44 @@ GATED = (          # (baseline row name, plan kwargs, run kwargs)
 # the tail-heavy grid must actually realize a deep tail, else the row
 # gates nothing (the ISSUE's floor for a meaningful compaction workload)
 MIN_TAIL_EPOCHS = 20
+
+
+def _census_gate(baseline) -> bool:
+    """Host-chattiness gate for the dispatch-lean compact loop (DESIGN.md
+    §13): replay the tail-heavy b64 grid at the baseline's *pinned*
+    compaction interval with ``report=True`` and require the sync census
+    to match the recorded one exactly.  Unlike the wall-time rows, the
+    census — full mask/permutation pulls, fused scalar pulls, dispatches —
+    is deterministic given the grid and the interval, so any regression
+    (a lowering that quietly re-adds a per-round full pull, say) fails
+    crisply with no machine-speed rescaling.  Returns True on failure."""
+    name = "sweep_throughput_tailheavy_compact_b64"
+    base_row = next((r for r in baseline["rows"] if r["name"] == name),
+                    None)
+    census = (base_row or {}).get("meta", {}).get("census")
+    if census is None:
+        print(f"FAIL: baseline row {name!r} records no sync census — "
+              "re-record with `python -m benchmarks.sweep_throughput`")
+        return True
+    plan = _random_plan(64, np.random.default_rng(64), tailheavy=True)
+    _, rep = plan.run(compact=int(census["k"]), report=True)
+    got = {"k": int(census["k"]),
+           "compaction_syncs": rep.compaction_syncs,
+           "scalar_syncs": rep.scalar_syncs,
+           "dispatches": rep.dispatches}
+    print(f"{name} census at pinned k={got['k']}: "
+          f"{got['compaction_syncs']} full pulls, "
+          f"{got['scalar_syncs']} scalar pulls, "
+          f"{got['dispatches']} dispatches "
+          f"(recorded {census['compaction_syncs']}/"
+          f"{census['scalar_syncs']}/{census['dispatches']})")
+    if got != dict(census):
+        print("FAIL: compact-loop host chattiness drifted from the "
+              f"recorded census ({got} != {dict(census)}) — the lean "
+              "loop must pull full activity arrays only on compacting "
+              "rounds")
+        return True
+    return False
 
 
 def _min_of_reps(reps=7, run_kw=None, **plan_kw):
@@ -129,6 +173,7 @@ def main() -> int:
                   f"(< {MIN_TAIL_EPOCHS}) — the compaction row is not "
                   "exercising a deep tail")
             failed = True
+    failed |= _census_gate(baseline)
     if failed:
         return 1
     print("OK")

@@ -107,10 +107,64 @@ def mr_epoch_tile_rows(tiles=(8, 16, 32, 64, 128), n=256, reps=3):
     measures that trade-off on this backend.  Returns one row per tile
     plus a winner row.
     """
+    from repro.kernels.mr_sched import epoch_schedule
+    batch = _mr_tile_batch(n)
+    rows, timings = [], {}
+    for tile in tiles:
+        us = _time(lambda b, t=tile: epoch_schedule(b, tile=t).finish,
+                   batch, reps=reps)
+        timings[tile] = us
+        rows.append((f"kernel_mr_epoch_tile{tile}", us,
+                     f"{n / us * 1e6:.0f}_scen/s"))
+    best = min(timings, key=timings.get)
+    rows.append(("kernel_mr_epoch_best_tile", timings[best], str(best)))
+    return rows, best
+
+
+def mr_epoch_block_rows(blocks=(4, 8, 16, 32), tile=32, n=256, reps=3):
+    """Sweep the multi-tile ``block_lanes`` sub-blocking of ``mr_epoch``
+    at a fixed lane tile (DESIGN.md §13).
+
+    ``block_lanes=b`` splits each ``tile``-lane grid step into
+    ``tile // b`` minor-dimension steps; on TPU the minor grid dimension
+    is sequential, so the Pallas pipeline emitter double-buffers the
+    ``b``-lane block fetches — HBM->VMEM streaming of the next block
+    overlaps the current block's epoch loop.  Each candidate is asserted
+    bitwise-equal to the single-tile lowering before it is timed (the
+    sub-blocking must be pure pipelining, never a semantic change); the
+    winner row records the block the TPU path should use at this tile.
+    Interpret-mode numbers rank by work, not TPU wall time — re-run on
+    real hardware to re-rank.
+    """
+    import numpy as np
+
+    from repro.kernels.mr_sched import epoch_schedule
+    batch = _mr_tile_batch(n)
+    ref = epoch_schedule(batch, tile=tile)
+    rows, timings = [], {}
+    for block in blocks:
+        got = epoch_schedule(batch, tile=tile, block_lanes=block)
+        for f in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+                err_msg=f"mr_epoch block_lanes={block} diverges from "
+                        f"single-tile on {f}")
+        us = _time(lambda b, blk=block: epoch_schedule(
+            b, tile=tile, block_lanes=blk).finish, batch, reps=reps)
+        timings[block] = us
+        rows.append((f"kernel_mr_epoch_t{tile}_block{block}", us,
+                     f"{n / us * 1e6:.0f}_scen/s"))
+    best = min(timings, key=timings.get)
+    rows.append(("kernel_mr_epoch_best_block_lanes", timings[best],
+                 str(best)))
+    return rows, best
+
+
+def _mr_tile_batch(n):
+    """The mixed-policy random batch the tile/block sweeps share."""
     import numpy as np
 
     from repro.core import sweep
-    from repro.kernels.mr_sched import epoch_schedule
     rng = np.random.default_rng(0)
     params = dict(
         n_maps=rng.integers(1, 21, n).astype(np.int32),
@@ -124,17 +178,7 @@ def mr_epoch_tile_rows(tiles=(8, 16, 32, 64, 128), n=256, reps=3):
         sched_policy=rng.integers(0, 2, n).astype(np.int32),
         binding_policy=rng.integers(0, 3, n).astype(np.int32),
     )
-    batch = sweep.grid_arrays(params, pad_tasks=23, pad_vms=9)
-    rows, timings = [], {}
-    for tile in tiles:
-        us = _time(lambda b, t=tile: epoch_schedule(b, tile=t).finish,
-                   batch, reps=reps)
-        timings[tile] = us
-        rows.append((f"kernel_mr_epoch_tile{tile}", us,
-                     f"{n / us * 1e6:.0f}_scen/s"))
-    best = min(timings, key=timings.get)
-    rows.append(("kernel_mr_epoch_best_tile", timings[best], str(best)))
-    return rows, best
+    return sweep.grid_arrays(params, pad_tasks=23, pad_vms=9)
 
 
 def mr_epoch_compact_tile_rows(tiles=(8, 16, 32, 64), n=64, reps=3):
@@ -193,8 +237,9 @@ def all_rows():
 
 def main() -> None:
     tile_rows, best_tile = mr_epoch_tile_rows()
+    block_rows, best_block = mr_epoch_block_rows()
     compact_rows, best_tile_compact = mr_epoch_compact_tile_rows()
-    rows = mr_sched_rows() + tile_rows + compact_rows
+    rows = mr_sched_rows() + tile_rows + block_rows + compact_rows
     out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernel.json"
     payload = {
         "benchmark": "mr_sched/mr_epoch kernel micro-benchmarks",
@@ -206,6 +251,7 @@ def main() -> None:
             "platform": platform.platform(),
             "interpret": jax.default_backend() != "tpu",
             "best_tile": best_tile,
+            "best_block_lanes": best_block,
             "best_tile_compact": best_tile_compact,
         },
         "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}

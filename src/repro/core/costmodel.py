@@ -12,8 +12,14 @@ decisions trade the same two measured quantities against each other:
   epoch per task slot (the epoch body is branch-free, so this is
   activity-independent).  Saving lane-epochs is the *benefit* of both a
   smaller-padded bucket and a compacted batch.
+* ``sync_us`` — the cost of one blocking scalar device→host pull.  The
+  dispatch-lean compact loop (DESIGN.md §13) pays exactly one of these
+  per round (the fused ``[n_step, n_active]`` pair) instead of a full
+  ``bool[N]`` mask transfer, so the round overhead it balances against
+  wasted tail epochs is ``sync_us + dispatch_us`` — measured, not the
+  retired ``ROUND_DISPATCHES`` guess.
 
-Both are measured once per device with a tiny seeded micro-benchmark
+All are measured once per device with a tiny seeded micro-benchmark
 (min-of-reps: these feed scheduling decisions, so the noise floor is the
 right statistic) and persisted to a small JSON cache keyed by device, so
 every later process skips the measurement.  A pinned calibration file
@@ -46,22 +52,39 @@ _DEFAULT_PATH = pathlib.Path.home() / ".cache" / "repro-iotsim" / \
 # protocol) so stale caches are invalidated instead of silently feeding
 # garbage coefficients into the schedulers.  Pre-schema files (a bare
 # ``{device: {...}}`` mapping) fail the check and are re-measured.
-SCHEMA_VERSION = 1
+# v2: adds the measured ``sync_us`` scalar-pull coefficient (the
+# dispatch-lean compact loop prices rounds as sync + dispatch, replacing
+# the fixed ROUND_DISPATCHES multiplier), so v1 caches re-measure.
+SCHEMA_VERSION = 2
 
 # Conservative CPU-ish coefficients used when measurement is disabled or
 # fails (e.g. a sandboxed FS): chosen to reproduce the retired static
 # heuristic's behaviour on the benchmark grids within a few percent.
 _FALLBACK_DISPATCH_US = 1500.0
 _FALLBACK_EPOCH_LANE_US = 0.030
+_FALLBACK_SYNC_US = 250.0
+
+# Clamp bounds for the auto compaction interval K*.  Named constants so
+# re-derivations of the interval formula cannot silently change the
+# clamp (regression-tested): K=1 is the check-every-epoch floor the
+# pre-cost-model driver used; 64 caps the wasted-tail exposure of a
+# degenerate calibration (a huge measured dispatch cost must not make
+# the driver effectively never compact).
+COMPACT_INTERVAL_MIN = 1
+COMPACT_INTERVAL_MAX = 64
 
 _CACHE: dict[str, "CostModel"] = {}
 
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Two measured coefficients + the scoring rules built on them."""
+    """Measured coefficients + the scoring rules built on them."""
     dispatch_us: float       # fixed overhead of one fused dispatch
     epoch_lane_us: float     # us per (lane x epoch x task-slot)
+    # Cost of one blocking scalar device->host pull (the compact loop's
+    # per-round [n_step, n_active] readback).  Defaulted so pinned
+    # hand-constructed calibrations predating the split keep working.
+    sync_us: float = _FALLBACK_SYNC_US
     device: str = "unknown"
     # Where the coefficients came from — "measured" (fresh micro-bench
     # this process), "cache" (persisted JSON hit), "fallback" (built-in
@@ -104,39 +127,41 @@ class CostModel:
         return float(np.asarray(n_cells, np.float64)
                      * (self.cell_cost_us(cap_t) - self.cell_cost_us(pad_t)))
 
-    # A compaction round is not one dispatch: the host loop pays an
-    # activity sync plus gather + scatter + chunk-step dispatches before
-    # the next chunk can launch (measured ~5-7 dispatch-equivalents on
-    # the recorded BENCH_sweep hosts).
-    ROUND_DISPATCHES = 6.0
-
     def compact_interval(self, n_lanes: int, pad_t: int) -> int:
         """Auto compaction interval K (epochs between active-lane checks).
 
-        Each check costs ``ROUND_DISPATCHES * dispatch_us`` (host sync +
-        gather/scatter + re-dispatch), paid ``1/K`` per epoch.  Checking
-        late wastes work only on lanes that retire *mid-chunk* — on a
-        tail-heavy grid lanes retire at roughly ``n / (2t + 2)`` per
-        epoch (the batch drains over its epoch bound), and each such lane
-        wastes on average ``K/2`` epochs of ``t``-wide stepping.
-        Balancing ``ROUND_DISPATCHES * dispatch / K`` against
-        ``K * epoch_lane * t * n / (2t + 2) / 2`` gives the root below;
-        clamped so degenerate calibrations stay usable."""
+        A dispatch-lean round (DESIGN.md §13) costs ``sync_us`` (the
+        blocking ``[n_step, n_active]`` scalar pull) plus ``dispatch_us``
+        (the chunk-step launch), paid ``1/K`` per epoch; the full
+        gather/scatter chain is only paid on rounds that actually shrink
+        the batch, so it does not belong in the steady-state round price
+        (the retired ``ROUND_DISPATCHES = 6`` multiplier priced every
+        round as if it compacted).  Checking late wastes work only on
+        lanes that retire *mid-chunk* — on a tail-heavy grid lanes retire
+        at roughly ``n / (2t + 2)`` per epoch (the batch drains over its
+        epoch bound), and each such lane wastes on average ``K/2`` epochs
+        of ``t``-wide stepping.  Balancing ``(sync + dispatch) / K``
+        against ``K * epoch_lane * t * n / (2t + 2) / 2`` gives the root
+        below; clamped to [:data:`COMPACT_INTERVAL_MIN`,
+        :data:`COMPACT_INTERVAL_MAX`] so degenerate calibrations stay
+        usable."""
         retire_rate = max(n_lanes, 1) / (2.0 * max(pad_t, 1) + 2.0)
         per_epoch = max(self.epoch_lane_us * max(pad_t, 1) * retire_rate,
                         1e-9)
-        k = np.sqrt(2.0 * self.ROUND_DISPATCHES * self.dispatch_us
-                    / per_epoch)
-        return int(np.clip(round(k), 1, 64))
+        k = np.sqrt(2.0 * (self.sync_us + self.dispatch_us) / per_epoch)
+        return int(np.clip(round(k), COMPACT_INTERVAL_MIN,
+                           COMPACT_INTERVAL_MAX))
 
     def to_json(self) -> dict:
         return {"dispatch_us": self.dispatch_us,
-                "epoch_lane_us": self.epoch_lane_us}
+                "epoch_lane_us": self.epoch_lane_us,
+                "sync_us": self.sync_us}
 
 
 def fallback_cost_model(device: str = "fallback") -> CostModel:
     return CostModel(dispatch_us=_FALLBACK_DISPATCH_US,
-                     epoch_lane_us=_FALLBACK_EPOCH_LANE_US, device=device,
+                     epoch_lane_us=_FALLBACK_EPOCH_LANE_US,
+                     sync_us=_FALLBACK_SYNC_US, device=device,
                      source="fallback")
 
 
@@ -203,6 +228,28 @@ def measure(reps: int = 5) -> CostModel:
             best = min(best, time.perf_counter() - t0)
         return best * 1e6
 
+    import jax.numpy as jnp
+
+    @jax.jit
+    def scalar_probe(i):
+        # a fresh device scalar per rep (the +i defeats constant folding
+        # across calls), shaped like the compact loop's fused
+        # [n_step, n_active] readback
+        return jnp.sum(jnp.arange(256, dtype=jnp.int32)) + i
+
+    def sync_floor_us():
+        # time ONLY the blocking device->host pull of a *ready* scalar:
+        # the per-round overhead the lean loop pays is the readback
+        # round-trip, not the compute the pull may happen to wait on
+        best = float("inf")
+        for r in range(max(reps, 3) * 3):
+            s = scalar_probe(jnp.int32(r))
+            jax.block_until_ready(s)
+            t0 = time.perf_counter()
+            int(s)
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
     small = _probe_batch(8, n_maps=7)                  # T = 8
     big = _probe_batch(64, n_maps=15)                  # T = 16
     t_small_1, t_small_9 = floor_us(small, 1), floor_us(small, 9)
@@ -210,8 +257,10 @@ def measure(reps: int = 5) -> CostModel:
     slope_small = max((t_small_9 - t_small_1) / 8.0, 0.0)
     dispatch = max(t_small_1 - slope_small, 1.0)
     epoch_lane = max((t_big_36 - t_big_4) / 32.0, 1e-6) / (64 * 16)
+    sync = max(sync_floor_us(), 0.01)
     return CostModel(dispatch_us=round(dispatch, 2),
                      epoch_lane_us=round(epoch_lane, 6),
+                     sync_us=round(sync, 2),
                      device=device_key(), source="measured")
 
 
@@ -255,6 +304,7 @@ def load_cost_model(path, device: str | None = None) -> CostModel:
     entry = models[device]
     return CostModel(dispatch_us=float(entry["dispatch_us"]),
                      epoch_lane_us=float(entry["epoch_lane_us"]),
+                     sync_us=float(entry["sync_us"]),
                      device=device, source="cache")
 
 

@@ -34,7 +34,7 @@ from .control import (ControlPolicy, DeadlinePolicy, earliest_finish,
 from .telemetry import (EV_FINISH, EV_KILL, EV_PREEMPT, EV_SCALE_CLOSE,
                         EV_SCALE_OPEN, EV_SHED, EV_START, TraceBuffers,
                         event_capacity, timeseries_capacity)
-from .util import pow2_pad
+from .util import pow2_pad, validate_pow2_floor
 
 _BIG = 1e30          # stand-in for +inf that survives arithmetic
 _TIME_EPS = 1e-6     # relative tie window for simultaneous events
@@ -1261,16 +1261,23 @@ def _active_batch(batch: ScenarioArrays, c: _Carry, control: bool = False):
 _output_batch = jax.jit(jax.vmap(_sim_output))
 
 
-@partial(jax.jit, static_argnames=("k", "control", "trace"))
-def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
-                      active: jax.Array, remaining: jax.Array, k: int,
-                      control: bool = False, trace: bool = False):
+def _step_epoch_chunk_impl(batch: ScenarioArrays, inv: _EpochInv,
+                           carry: _Carry, active: jax.Array,
+                           remaining: jax.Array, k: int,
+                           control: bool = False, trace: bool = False):
     """Advance the batch up to ``k`` epochs (early-exiting on
     ``any(active)`` and the dynamic ``remaining`` budget) — the one
     compiled stepper both the dense-resume and compacted shapes share.
-    Returns ``(carry, active, epochs_executed)``; identical epoch-body
-    ops to :func:`simulate_batch_arrays`, so chaining chunks reproduces
-    the single while_loop bit for bit."""
+
+    Returns ``(carry, active, counts, order)`` where ``counts`` is the
+    fused ``i32[2] = [epochs_executed, n_still_active]`` pair — the ONLY
+    value the dispatch-lean host loop pulls per round — and ``order`` is
+    the on-device active-first permutation (``argsort`` of ``~active``;
+    jnp argsort is stable, so it reproduces the host-side
+    ``concatenate([nonzero(act), nonzero(~act)])`` order bit for bit).
+    The host pulls ``order`` only on rounds that actually compact.
+    Identical epoch-body ops to :func:`simulate_batch_arrays`, so
+    chaining chunks reproduces the single while_loop bit for bit."""
     def cond(state):
         _, act, i = state
         return jnp.any(act) & (i < jnp.minimum(jnp.int32(k), remaining))
@@ -1284,7 +1291,32 @@ def _step_epoch_chunk(batch: ScenarioArrays, inv: _EpochInv, carry: _Carry,
                 jax.vmap(partial(_lane_active, control=control))(batch, c2),
                 i + 1)
 
-    return jax.lax.while_loop(cond, body, (carry, active, jnp.int32(0)))
+    carry, act, i = jax.lax.while_loop(cond, body,
+                                       (carry, active, jnp.int32(0)))
+    counts = jnp.stack([i, jnp.sum(act, dtype=jnp.int32)])
+    return carry, act, counts, jnp.argsort(~act)
+
+
+_step_epoch_chunk = jax.jit(_step_epoch_chunk_impl,
+                            static_argnames=("k", "control", "trace"))
+# Donating variant (the train/trainer.py idiom): the carry pytree and
+# activity mask buffers are reused in place across rounds instead of
+# copied per chunk.  Safe because the host loop never re-reads a carry
+# it has stepped past (see _compact_loop_lean's store-merge invariant).
+_step_epoch_chunk_donated = jax.jit(_step_epoch_chunk_impl,
+                                    static_argnames=("k", "control",
+                                                     "trace"),
+                                    donate_argnums=(2, 3))
+
+
+@partial(jax.jit, static_argnames="control")
+def _activity_batch(batch: ScenarioArrays, c: _Carry,
+                    control: bool = False):
+    """Initial-round twin of the stepper's activity reduction: the lane
+    mask plus the on-device still-active count and active-first order,
+    so round zero also costs one scalar pull, not a ``bool[N]`` mask."""
+    act = jax.vmap(partial(_lane_active, control=control))(batch, c)
+    return act, jnp.sum(act, dtype=jnp.int32), jnp.argsort(~act)
 
 
 @jax.jit
@@ -1293,18 +1325,26 @@ def _take_lanes(tree, idx: jax.Array):
     return jax.tree.map(lambda x: x[idx], tree)
 
 
-@jax.jit
-def _put_lanes(store, idx: jax.Array, sub):
+def _put_lanes_impl(store, idx: jax.Array, sub):
     """Scatter a lane subset back into the dense store (distinct indices,
     so the write order cannot matter)."""
     return jax.tree.map(lambda s, x: s.at[idx].set(x), store, sub)
+
+
+_put_lanes = jax.jit(_put_lanes_impl)
+# Donates only the store (arg 0): its output leaves match the input
+# shapes exactly so XLA reuses the buffers; ``sub`` is the pad-sized
+# working carry whose shapes differ, and donating unusable buffers just
+# trips jax's donation warning.
+_put_lanes_donated = jax.jit(_put_lanes_impl, donate_argnums=(0,))
 
 
 def simulate_batch_arrays_compact(
         batch: ScenarioArrays, *, k: int | str = "auto",
         floor: int = 8, cost_model=None, control: bool | None = None,
         trace: bool = False, trace_events: int | None = None,
-        stats: dict | None = None):
+        stats: dict | None = None, donate: bool = True,
+        legacy: bool = False):
     """:func:`simulate_batch_arrays` with sparse active-lane compaction.
 
     Tail-heavy batches (mixed-policy / elastic grids) realize 20+ epochs
@@ -1337,8 +1377,17 @@ def simulate_batch_arrays_compact(
     other leaf, so traced compacted runs are bitwise-identical to the
     dense driver's.  ``stats`` (a dict, mutated in place) collects host
     telemetry for :class:`~repro.core.telemetry.RunReport`: ``syncs``
-    (host activity syncs), ``compactions`` (gather rounds) and
-    ``dispatches`` (chunk-stepper launches).
+    (full mask/permutation device→host pulls — paid only on rounds that
+    actually compact), ``scalar_syncs`` (the per-round fused
+    ``[n_step, n_active]`` scalar pulls), ``compactions`` (gather
+    rounds) and ``dispatches`` (chunk-stepper launches).
+
+    ``donate=True`` routes rounds through the buffer-donating stepper /
+    store-scatter jits (carries update in place instead of copying every
+    chunk); ``legacy=True`` runs the pre-dispatch-lean host loop — one
+    full ``bool[N]`` mask pull per round, host-side ordering, no
+    donation — kept as the honest benchmark comparator and the
+    reference semantics for the lean loop's tests.
     """
     if control is None:
         control = _control_active(batch)
@@ -1367,14 +1416,114 @@ def simulate_batch_arrays_compact(
     if k < 1:
         raise ValueError(f"simulate_batch_arrays_compact: k must be >= 1 "
                          f"or 'auto', got {k}")
+    validate_pow2_floor(floor)
     tr = _trace_caps(T, batch.vm_mips.shape[1], control, trace,
                      trace_events)
     if stats is None:
         stats = {}
     stats.setdefault("syncs", 0)
+    stats.setdefault("scalar_syncs", 0)
     stats.setdefault("compactions", 0)
     stats.setdefault("dispatches", 0)
     inv, c0 = _setup_batch(batch, control=control, trace=tr)
+    loop = _compact_loop_legacy if legacy else _compact_loop_lean
+    return loop(batch, inv, c0, bound=bound, k=k, floor=floor,
+                control=control, tr=tr, stats=stats, donate=donate)
+
+
+def _compact_loop_lean(batch: ScenarioArrays, inv, c0, *, bound: int,
+                       k: int, floor: int, control: bool, tr, stats: dict,
+                       donate: bool):
+    """Dispatch-lean host loop (DESIGN.md §13): one fused scalar pull per
+    round; the full active-first permutation crosses the host boundary
+    only on rounds that actually compact; carries are donated in place.
+
+    Store-merge invariant (what makes donation safe): ``carry_store`` is
+    ``None`` until the first compaction — before that, ``cur_carry`` IS
+    the full batch in original lane order, so there is no N-sized copy
+    aliasing ``c0`` for the donating stepper to invalidate.  Afterwards
+    the store holds exactly the lanes *outside* ``cur_idx`` (plus stale
+    copies of lanes inside it, which every merge overwrites), and the
+    host never re-reads a carry object after passing it to a donating
+    jit — each round rebinds ``cur_carry`` to the stepper's output, and
+    the final ``_output_batch``/``_trace_of`` reads only the merged
+    result, never a donated argument."""
+    N = batch.task_job.shape[0]
+    cur_batch, cur_inv, cur_carry = batch, inv, c0
+    cur_active, n_act_dev, order_dev = _activity_batch(batch, c0,
+                                                       control=control)
+    n_act = int(n_act_dev)
+    stats["scalar_syncs"] += 1
+    carry_store = None
+    # freshness flags: ``_epoch_setup``/``initial_state``-style jits can
+    # forward an input array unchanged, so the t=0 carry may alias batch
+    # leaves — donating a buffer that also rides in the same call's
+    # operands is an XLA error.  Only carries/stores produced by a
+    # compute op inside this loop (gather or stepper output) are donated.
+    carry_fresh = store_fresh = False
+    cur_idx = np.arange(N)
+    realized = 0
+    while realized < bound:
+        if n_act == 0:
+            break
+        pad = pow2_pad(n_act, cap=len(cur_idx), floor=floor)
+        if pad < len(cur_idx):
+            # retire the working set into the dense store, then gather the
+            # active lanes (pow2-padded with finished lanes, which step
+            # idempotently) into a compacted view of the original batch —
+            # the device-computed order crosses the host boundary here
+            # and only here
+            order = np.asarray(order_dev)[:pad]
+            stats["syncs"] += 1
+            if carry_store is None:
+                carry_store, store_fresh = cur_carry, carry_fresh
+            else:
+                carry_store = (_put_lanes_donated if donate and store_fresh
+                               else _put_lanes)(carry_store,
+                                                jnp.asarray(cur_idx),
+                                                cur_carry)
+                store_fresh = True
+            cur_idx = cur_idx[order]
+            take = jnp.asarray(cur_idx)
+            cur_batch = _take_lanes(batch, take)
+            cur_inv = _take_lanes(inv, take)
+            cur_carry = _take_lanes(carry_store, take)
+            carry_fresh = True
+            cur_active = _active_batch(cur_batch, cur_carry,
+                                       control=control)
+            stats["compactions"] += 1
+        step = (_step_epoch_chunk_donated if donate and carry_fresh
+                else _step_epoch_chunk)
+        cur_carry, cur_active, counts, order_dev = step(
+            cur_batch, cur_inv, cur_carry, cur_active,
+            jnp.int32(bound - realized), k, control=control,
+            trace=tr is not None)
+        carry_fresh = True
+        stats["dispatches"] += 1
+        n_step, n_act = (int(v) for v in np.asarray(counts))
+        stats["scalar_syncs"] += 1
+        realized += n_step
+    if carry_store is None:
+        final = cur_carry
+    else:
+        final = (_put_lanes_donated if donate and store_fresh
+                 else _put_lanes)(carry_store, jnp.asarray(cur_idx),
+                                  cur_carry)
+    out = _output_batch(batch, final), jnp.int32(realized)
+    if tr is not None:
+        return out + (_trace_of(final),)
+    return out
+
+
+def _compact_loop_legacy(batch: ScenarioArrays, inv, c0, *, bound: int,
+                         k: int, floor: int, control: bool, tr,
+                         stats: dict, donate: bool):
+    """The pre-dispatch-lean host loop, verbatim: a full ``bool[N]`` mask
+    pull + host-side ordering every round, no donation.  Kept as the
+    honest A/B comparator for the recorded compaction benches and as the
+    reference the lean loop's bitwise tests pin against."""
+    del donate                     # the legacy loop never donated
+    N = batch.task_job.shape[0]
     carry_store = c0
     cur_batch, cur_inv, cur_carry = batch, inv, c0
     cur_active = _active_batch(batch, c0, control=control)
@@ -1388,9 +1537,6 @@ def simulate_batch_arrays_compact(
             break
         pad = pow2_pad(n_act, cap=len(cur_idx), floor=floor)
         if pad < len(cur_idx):
-            # retire the working set into the dense store, then gather the
-            # active lanes (pow2-padded with finished lanes, which step
-            # idempotently) into a compacted view of the original batch
             carry_store = _put_lanes(carry_store, jnp.asarray(cur_idx),
                                      cur_carry)
             order = np.concatenate([np.nonzero(act_np)[0],
@@ -1403,12 +1549,14 @@ def simulate_batch_arrays_compact(
             cur_active = _active_batch(cur_batch, cur_carry,
                                        control=control)
             stats["compactions"] += 1
-        cur_carry, cur_active, n_step = _step_epoch_chunk(
+        cur_carry, cur_active, counts, _ = _step_epoch_chunk(
             cur_batch, cur_inv, cur_carry, cur_active,
             jnp.int32(bound - realized), k, control=control,
             trace=tr is not None)
         stats["dispatches"] += 1
-        realized += int(n_step)
+        n_step = int(counts[0])
+        stats["scalar_syncs"] += 1
+        realized += n_step
     carry_store = _put_lanes(carry_store, jnp.asarray(cur_idx), cur_carry)
     out = _output_batch(batch, carry_store), jnp.int32(realized)
     if tr is not None:

@@ -1064,9 +1064,11 @@ def _finish_report(buckets, n_cells: int, backend, compact, cost,
         encoder_cache_hits=ei1.hits - ei0.hits,
         encoder_cache_misses=ei1.misses - ei0.misses,
         compaction_syncs=sum(b.compact_syncs for b in buckets),
+        scalar_syncs=sum(b.compact_scalar_syncs for b in buckets),
         dispatches=sum(b.dispatches for b in buckets),
         cost_model={"dispatch_us": cost.dispatch_us,
                     "epoch_lane_us": cost.epoch_lane_us,
+                    "sync_us": cost.sync_us,
                     "device": cost.device, "source": cost.source},
         device=costmodel_mod.device_key(),
         provenance=dict(telemetry.provenance()),
@@ -1087,7 +1089,8 @@ def _execute_grid(cols: dict[str, np.ndarray], N: int, pad_tasks: int,
     groups = _bucket_groups(cols, pad_tasks, pad_vms, bucket, cost)
     parts = []
     for idx, gcols, statics, tb, vb in groups:
-        stats = {"dispatches": 0, "syncs": 0, "compactions": 0}
+        stats = {"dispatches": 0, "syncs": 0, "scalar_syncs": 0,
+                 "compactions": 0}
         w0 = time.perf_counter()
         parts.append((idx, *_run_cells(gcols, len(idx), tb, vb, statics,
                                        mesh, chunk, backend, compact, cost,
@@ -1105,6 +1108,7 @@ def _execute_grid(cols: dict[str, np.ndarray], N: int, pad_tasks: int,
                                if tb < pad_tasks else None),
                 dispatches=stats["dispatches"],
                 compact_syncs=stats["syncs"],
+                compact_scalar_syncs=stats["scalar_syncs"],
                 wall_s=time.perf_counter() - w0))
     n_jobs = int(parts[0][1].makespan.shape[-1])
     metrics: dict[str, np.ndarray] = {}

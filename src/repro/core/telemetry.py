@@ -339,7 +339,9 @@ class BucketReport:
     split_gain_us: float | None      # cost-model gain that justified the
     #                                  split (None: base shape bucket)
     dispatches: int = 0              # device dispatches issued
-    compact_syncs: int = 0           # host activity syncs (compact driver)
+    compact_syncs: int = 0           # full mask/permutation pulls (paid
+    #                                  only on rounds that compact)
+    compact_scalar_syncs: int = 0    # per-round fused scalar pulls
     wall_s: float = 0.0              # wall time executing this bucket
 
 
@@ -355,10 +357,12 @@ class RunReport:
     compile_cache_misses: int        # fused-runner lru misses (compiles)
     encoder_cache_hits: int          # grid-encoder lru hits during the run
     encoder_cache_misses: int
-    compaction_syncs: int            # total host activity syncs
+    compaction_syncs: int            # total full mask/permutation pulls
+    scalar_syncs: int                # total per-round scalar pulls
     dispatches: int                  # total device dispatches
     cost_model: dict                 # measured coefficients + provenance
-    #                                  {dispatch_us, epoch_lane_us, device,
+    #                                  {dispatch_us, epoch_lane_us, sync_us,
+    #                                   device,
     #                                   source: measured|cache|fallback|...}
     device: str
     provenance: dict

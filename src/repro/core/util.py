@@ -18,11 +18,30 @@ import numpy as np
 _MAX_DOUBLINGS = 50
 
 
+def validate_pow2_floor(floor: int) -> int:
+    """Reject nonsensical padding floors with ``ValueError``.
+
+    The ``floor * 2**j`` ladder only makes sense for a positive
+    power-of-two floor: zero/negative floors collapse the table to
+    garbage (every pad rounds to 0) and a non-pow2 floor silently
+    produces pads like 24 that defeat the compile-cache-friendly shape
+    set the rounding exists to guarantee.  Every entry point that
+    accepts a ``floor=`` kwarg funnels through here so the failure is
+    loud at the call site, not downstream in a shape mismatch."""
+    f = int(floor)
+    if f < 1 or (f & (f - 1)) != 0:
+        raise ValueError(
+            f"pow2 padding floor must be a positive power of two, got "
+            f"{floor!r}")
+    return f
+
+
 def pow2_pads(need, cap: int, floor: int = 4) -> np.ndarray:
     """Vectorized :func:`pow2_pad`: smallest ``floor * 2**j >= need``
     elementwise, clamped to ``cap``.  ``need`` may be any integer array;
     entries ``<= floor`` round to ``floor``, entries past ``cap`` clamp
     to ``cap`` (the grid-wide max or an explicit pad override)."""
+    floor = validate_pow2_floor(floor)
     need = np.asarray(need, np.int64)
     table = floor * (np.int64(1) << np.arange(_MAX_DOUBLINGS, dtype=np.int64))
     idx = np.searchsorted(table, np.maximum(need, 1), side="left")

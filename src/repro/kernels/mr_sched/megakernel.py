@@ -636,19 +636,18 @@ def initial_state(task_len, ready0, is_red, valid, vm_start=None,
     return base
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("tile", "interpret", "max_pes",
-                                    "epoch_limit", "control", "trace"))
-def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
-             vm_mips, vm_pes, sched_policy=None, vm_start=None,
-             vm_stop=None, spinup=None, prio=None, vm_valid=None,
-             vm_fail=None, vm_restore=None, vm_auto=None, ctl_policy=None,
-             ctl_queue=None, ctl_busy=None, redispatch=None, task_vm2=None,
-             refetch=None, task_deadline=None, dl_policy=None,
-             dl_slack=None, preempt=None, preempt_resume=None, state=None,
-             *, tile: int = 64, max_pes: int = 8, interpret: bool = True,
-             epoch_limit: int | None = None, control: bool = False,
-             trace: bool = False):
+def _mr_epoch_impl(task_len, task_vm, ready0, is_red, valid, shuffle,
+                   vm_mips, vm_pes, sched_policy=None, vm_start=None,
+                   vm_stop=None, spinup=None, prio=None, vm_valid=None,
+                   vm_fail=None, vm_restore=None, vm_auto=None,
+                   ctl_policy=None, ctl_queue=None, ctl_busy=None,
+                   redispatch=None, task_vm2=None, refetch=None,
+                   task_deadline=None, dl_policy=None, dl_slack=None,
+                   preempt=None, preempt_resume=None, state=None,
+                   *, tile: int = 64, max_pes: int = 8,
+                   interpret: bool = True, epoch_limit: int | None = None,
+                   control: bool = False, trace: bool = False,
+                   block_lanes: int | None = None):
     """All args lead with the scenario dim N (padded to a tile multiple).
 
     task_len/ready0: (N,T) f32; task_vm: (N,T) i32; is_red/valid: (N,T) i32;
@@ -686,7 +685,21 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     ``max_pes`` must be >= the largest per-VM PE count in the batch (it
     bounds the static admission scan); ``tile`` lanes share one early-exit
     epoch loop.  Returns the advanced carry state (same 8-leaf layout;
-    15 leaves under control).
+    15 leaves under control).  ``ready0`` may be ``None`` when ``state``
+    is given (the resume path never reads it) — required so the compacted
+    driver can donate the state pytree without also holding a live alias
+    of its ready leaf in the argument list.
+
+    ``block_lanes`` (static) re-tiles each ``tile``-lane macro tile
+    across a second, minor grid dimension of ``tile // block_lanes``
+    steps of ``block_lanes`` lanes each.  On real TPU hardware the minor
+    grid dimension iterates sequentially per core, so Pallas's pipeline
+    emitter double-buffers the HBM→VMEM input streams across consecutive
+    blocks — the next block's operands DMA in while the current block's
+    event loop runs (the ``flash_attention`` kernel's mechanism).  Lanes
+    are independent, so the multi-tile lowering is bitwise-equal to the
+    single-tile one (asserted in interpret mode); ``None`` keeps the
+    original one-dimensional grid and compiled-shape cache keys.
 
     ``trace=True`` (static, DESIGN.md §12) appends the per-epoch
     time-series leaf ``ts (N, C*8) f32`` to the carry — one
@@ -719,6 +732,9 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         raise ValueError("mr_epoch: trace=True requires vm_valid (the "
                          "open-VM observable needs the real-VM mask)")
     if state is None:
+        if ready0 is None:
+            raise ValueError("mr_epoch: ready0 is required when no resume "
+                             "state is given (it seeds initial_state)")
         state = initial_state(
             task_len, ready0, is_red, valid,
             vm_start=vm_start, vm_stop=vm_stop,
@@ -730,14 +746,31 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
     tile = min(tile, N)
     while N % tile:
         tile //= 2
-    grid = (N // tile,)
+    block = tile
+    if block_lanes is not None:
+        # minor lane-tile grid dim: pow2 halving mirrors the tile
+        # adjustment so any (tile, block_lanes) request lowers cleanly
+        block = max(1, min(int(block_lanes), tile))
+        while tile % block:
+            block //= 2
+    nsub = tile // block
+    if block_lanes is None:
+        grid = (N // tile,)
 
-    def row(i):
-        return (i, 0)
+        def row(i):
+            return (i, 0)
+    else:
+        # (macro tile, sub-block) grid: the minor dim is sequential on
+        # TPU, giving Pallas's pipeline emitter the double-buffering
+        # window described in the docstring
+        grid = (N // tile, nsub)
 
-    spec_t = pl.BlockSpec((tile, T), row)
-    spec_1 = pl.BlockSpec((tile, 1), row)
-    spec_v = pl.BlockSpec((tile, V), row)
+        def row(i, j):
+            return (i * nsub + j, 0)
+
+    spec_t = pl.BlockSpec((block, T), row)
+    spec_1 = pl.BlockSpec((block, 1), row)
+    spec_v = pl.BlockSpec((block, V), row)
     data = [task_len, task_vm, state[5], is_red, valid, shuffle,
             vm_mips, vm_pes, sched_policy, vm_start, vm_stop, spinup, prio]
     data_specs = [spec_t, spec_t, spec_t, spec_t, spec_t, spec_1,
@@ -767,7 +800,7 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         state_specs = state_specs + (spec_t, spec_v, spec_v, spec_1,
                                      spec_t, spec_t, spec_1)
     if trace:
-        spec_ts = pl.BlockSpec((tile, state[-1].shape[1]), row)
+        spec_ts = pl.BlockSpec((block, state[-1].shape[1]), row)
         state_in += [state[-1]]
         state_in_specs += [spec_ts]
         state_specs = state_specs + (spec_ts,)
@@ -784,3 +817,16 @@ def mr_epoch(task_len, task_vm, ready0, is_red, valid, shuffle,
         interpret=interpret,
     )(*data, *state_in)
     return out
+
+
+_MR_STATIC = ("tile", "interpret", "max_pes", "epoch_limit", "control",
+              "trace", "block_lanes")
+
+mr_epoch = jax.jit(_mr_epoch_impl, static_argnames=_MR_STATIC)
+# Resume-path variant that donates the ``state`` carry pytree: the
+# output leaves match the input state's shapes exactly, so XLA reuses
+# the buffers in place instead of copying the full carry every K-epoch
+# chunk.  Callers (``ops.epoch_schedule_compact``) must pass
+# ``ready0=None`` and never re-read a donated state object.
+mr_epoch_donated = jax.jit(_mr_epoch_impl, static_argnames=_MR_STATIC,
+                           donate_argnames="state")

@@ -20,12 +20,12 @@ import numpy as np
 from repro.core import network, storage
 from repro.core.control import failover_targets
 from repro.core.engine import (ScenarioArrays, SimOutput, _take_lanes,
-                               _put_lanes)
+                               _put_lanes, _put_lanes_donated)
 from repro.core.telemetry import timeseries_capacity
-from repro.core.util import pow2_pad
+from repro.core.util import pow2_pad, validate_pow2_floor
 
 from .kernel import mr_schedule
-from .megakernel import _BIG, initial_state, mr_epoch
+from .megakernel import _BIG, initial_state, mr_epoch, mr_epoch_donated
 
 
 def _derived_inputs(batch: ScenarioArrays):
@@ -118,7 +118,8 @@ def _control_lane_data(batch: ScenarioArrays, pad, task_vm2, refetch):
 def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
                    max_pes: int | None = None,
                    interpret: bool | None = None,
-                   control: bool = False, trace: bool = False):
+                   control: bool = False, trace: bool = False,
+                   block_lanes: int | None = None):
     """Run the fused ``mr_epoch`` megakernel over a stacked J=1 batch.
 
     ``max_pes`` bounds the static per-VM admission scan and must cover the
@@ -137,6 +138,10 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
     per-epoch time-series rows ``(N, C, 8)`` in ``telemetry.TS_COLUMNS``
     layout — bitwise the engine recorder's in interpret mode:
     ``(SimOutput, ts)`` instead of ``SimOutput``.
+
+    ``block_lanes`` re-tiles each macro tile across a minor grid
+    dimension (double-buffered HBM→VMEM streaming on real TPUs, bitwise
+    in interpret mode — see ``mr_epoch``).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -178,7 +183,7 @@ def epoch_schedule(batch: ScenarioArrays, *, tile: int = 64,
         pad(batch.task_prio.astype(jnp.float32)),
         *ctl,
         tile=tile, max_pes=max_pes, interpret=interpret, control=control,
-        trace=trace)
+        trace=trace, block_lanes=block_lanes)
     out = _sim_output_of_state(batch, st, N, control=control)
     if trace:
         C = st[-1].shape[1] // 8
@@ -223,11 +228,30 @@ def _sim_output_of_state(batch: ScenarioArrays, st, N: int, *,
                      shed=shed, n_evict=n_evict, work_lost=work_lost)
 
 
+@jax.jit
+def _state_activity(valid, finish, shed):
+    """On-device activity reduction for the Pallas compact loop: the
+    still-active lane count (ONE scalar crosses the host boundary per
+    round) and the stable active-first permutation (pulled only on
+    rounds that compact).  ``shed`` is the control carry's shed leaf or
+    ``None`` open-loop (a static pytree difference, like the engine's
+    ``control`` flag)."""
+    unfin = (valid != 0) & (finish >= _BIG / 2)
+    if shed is not None:
+        # shed tasks never finish by design — they must not keep their
+        # lane in the gather (engine._has_unfinished)
+        unfin &= shed == 0
+    act = jnp.any(unfin, axis=1)
+    return jnp.sum(act, dtype=jnp.int32), jnp.argsort(~act)
+
+
 def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
                            tile: int = 64, max_pes: int | None = None,
                            interpret: bool | None = None, floor: int = 8,
                            cost_model=None, control: bool = False,
-                           trace: bool = False, stats: dict | None = None):
+                           trace: bool = False, stats: dict | None = None,
+                           donate: bool = True,
+                           block_lanes: int | None = None):
     """Sparse active-lane compaction over the ``mr_epoch`` megakernel
     (DESIGN.md §9) — the Pallas twin of
     ``engine.simulate_batch_arrays_compact``.
@@ -261,16 +285,26 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
     the dense traced path's; returns ``(SimOutput, realized, ts)``.
 
     ``stats`` (a dict, mutated in place) collects host-loop counters
-    with the engine compact driver's keys — ``syncs`` (device->host
-    activity readbacks), ``compactions`` (gather/scatter re-tiles) and
-    ``dispatches`` (kernel chunk launches) — feeding the sweep
+    with the engine compact driver's keys — ``syncs`` (full permutation
+    device→host pulls, paid only on rounds that actually compact),
+    ``scalar_syncs`` (the per-round still-active scalar pulls),
+    ``compactions`` (gather/scatter re-tiles) and ``dispatches`` (kernel
+    chunk launches) — feeding the sweep
     :class:`~repro.core.telemetry.RunReport`.
+
+    ``donate=True`` steps chunks through the state-donating kernel jit
+    (``mr_epoch_donated``) and the donating store-scatter, so the carry
+    updates in place instead of copying every chunk (the engine lean
+    loop's store-merge invariant, see
+    ``engine._compact_loop_lean``).
     """
     if stats is None:
         stats = {}
     stats.setdefault("syncs", 0)
+    stats.setdefault("scalar_syncs", 0)
     stats.setdefault("compactions", 0)
     stats.setdefault("dispatches", 0)
+    validate_pow2_floor(floor)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if max_pes is None:
@@ -325,48 +359,74 @@ def epoch_schedule_compact(batch: ScenarioArrays, *, k="auto",
         # vm_valid joins the lane data (and the gather) — positionally
         # the next mr_epoch arg after prio
         lanes = lanes + (pad(batch.vm_valid.astype(jnp.int32)),)
-    store = initial_state(lanes[0], pad(ready0.astype(jnp.float32)),
-                          lanes[2], lanes[3],
-                          vm_start=lanes[8], vm_stop=lanes[9],
-                          vm_auto=lanes[15] if control else None,
-                          trace_capacity=(timeseries_capacity(T, V, control)
-                                          if trace else None))
-    valid_np = np.asarray(lanes[3]) != 0                 # (N', T) host
+    cur_state = initial_state(lanes[0], pad(ready0.astype(jnp.float32)),
+                              lanes[2], lanes[3],
+                              vm_start=lanes[8], vm_stop=lanes[9],
+                              vm_auto=lanes[15] if control else None,
+                              trace_capacity=(timeseries_capacity(
+                                  T, V, control) if trace else None))
+    # ``store`` is None until the first compaction (before that,
+    # ``cur_state`` IS the dense store in original lane order) — the
+    # engine lean loop's store-merge invariant, which is what makes
+    # donating ``cur_state`` into each chunk safe: no N-sized alias of
+    # the donated carry ever exists on the host side.  The freshness
+    # flags guard the other aliasing hazard: ``initial_state`` forwards
+    # some lane arrays as state leaves unchanged (state[1] IS task_len),
+    # and donating a buffer that also rides in the same call's lane
+    # operands is an XLA error — so only carries/stores produced by a
+    # compute op inside this loop are ever donated.
+    store = None
+    state_fresh = store_fresh = False
     cur_idx = np.arange(N + n_pad)
-    cur_lanes, cur_state = lanes, store
+    cur_lanes = lanes
+    n_act_dev, order_dev = _state_activity(
+        cur_lanes[3], cur_state[4], cur_state[12] if control else None)
+    n_act = int(n_act_dev)
+    stats["scalar_syncs"] += 1
     total = 0
     while total < bound:
-        finish_np = np.asarray(cur_state[4])
-        stats["syncs"] += 1
-        unfin = valid_np[cur_idx] & (finish_np >= _BIG / 2)
-        if control:
-            # shed tasks never finish by design — they must not keep
-            # their lane in the gather (engine._has_unfinished)
-            unfin &= np.asarray(cur_state[12]) == 0
-        act = unfin.any(axis=1)
-        n_act = int(act.sum())
         if n_act == 0:
             break
         pad_n = pow2_pad(n_act, cap=len(cur_idx), floor=floor)
         if pad_n < len(cur_idx):
             # active lanes first; the pow2 padding is filled with
-            # finished lanes, which step idempotently
-            store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
-            order = np.concatenate([np.nonzero(act)[0],
-                                    np.nonzero(~act)[0]])[:pad_n]
+            # finished lanes, which step idempotently — the
+            # device-computed order crosses the host boundary here and
+            # only here
+            order = np.asarray(order_dev)[:pad_n]
+            stats["syncs"] += 1
+            if store is None:
+                store, store_fresh = cur_state, state_fresh
+            else:
+                store = (_put_lanes_donated if donate and store_fresh
+                         else _put_lanes)(store, jnp.asarray(cur_idx),
+                                          cur_state)
+                store_fresh = True
             cur_idx = cur_idx[order]
             take = jnp.asarray(cur_idx)
             cur_lanes = _take_lanes(lanes, take)
             cur_state = _take_lanes(store, take)
+            state_fresh = True
             stats["compactions"] += 1
         limit = min(k, bound - total)
         stats["dispatches"] += 1
-        cur_state = mr_epoch(*cur_lanes[:2], cur_state[5], *cur_lanes[2:],
-                             state=cur_state, tile=tile, max_pes=max_pes,
-                             interpret=interpret, epoch_limit=limit,
-                             control=control, trace=trace)
+        step = mr_epoch_donated if donate and state_fresh else mr_epoch
+        cur_state = step(*cur_lanes[:2], None, *cur_lanes[2:],
+                         state=cur_state, tile=tile, max_pes=max_pes,
+                         interpret=interpret, epoch_limit=limit,
+                         control=control, trace=trace,
+                         block_lanes=block_lanes)
+        state_fresh = True
         total += limit
-    store = _put_lanes(store, jnp.asarray(cur_idx), cur_state)
+        n_act_dev, order_dev = _state_activity(
+            cur_lanes[3], cur_state[4], cur_state[12] if control else None)
+        n_act = int(n_act_dev)
+        stats["scalar_syncs"] += 1
+    if store is None:
+        store = cur_state
+    else:
+        store = (_put_lanes_donated if donate and store_fresh
+                 else _put_lanes)(store, jnp.asarray(cur_idx), cur_state)
     out = _sim_output_of_state(batch, store, N, control=control)
     if trace:
         C = store[-1].shape[1] // 8

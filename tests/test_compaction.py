@@ -21,8 +21,16 @@ working set is a **bitwise** no-op; this suite pins that claim:
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:              # environment without hypothesis: the
+    HAVE_HYPOTHESIS = False      # seeded-rng cases below still run
 
 from repro.core import BindingPolicy, SchedPolicy, costmodel, engine, sweep
 from repro.core.engine import _BIG
@@ -35,7 +43,7 @@ KS = [1, 4, "auto"]
 
 # one pinned calibration shared by every scheduling-determinism test
 PINNED = costmodel.CostModel(dispatch_us=800.0, epoch_lane_us=0.05,
-                             device="pinned")
+                             sync_us=120.0, device="pinned")
 
 
 def _random_params(n, seed, mixed_policies=True):
@@ -279,11 +287,12 @@ def test_cost_model_roundtrip_and_determinism(tmp_path):
     m1 = costmodel.load_cost_model(path, device="pinned")
     m2 = costmodel.load_cost_model(path)        # single-entry form
     assert m1 == m2 == PINNED
-    # file contents are plain JSON: schema version + the two coefficients
+    # file contents are plain JSON: schema version + the coefficients
     data = json.loads(path.read_text())
     assert data == {"schema": costmodel.SCHEMA_VERSION,
                     "models": {"pinned": {"dispatch_us": 800.0,
-                                          "epoch_lane_us": 0.05}}}
+                                          "epoch_lane_us": 0.05,
+                                          "sync_us": 120.0}}}
 
 
 def test_cost_model_stale_schema_invalidated(tmp_path):
@@ -376,3 +385,257 @@ def test_default_cost_model_prefers_pinned_file(tmp_path, monkeypatch):
     monkeypatch.setattr(costmodel, "_CACHE", {})
     got = costmodel.default_cost_model()
     assert got.dispatch_us == 123.0 and got.epoch_lane_us == 0.01
+
+
+# ---------------------------------------------------------------------------
+# Floor validation (ISSUE 10): nonsensical pow2 floors fail loudly
+# ---------------------------------------------------------------------------
+
+BAD_FLOORS = [0, -1, -8, 3, 6, 12]
+
+
+@pytest.mark.parametrize("floor", BAD_FLOORS)
+def test_pow2_pad_rejects_bad_floor(floor):
+    with pytest.raises(ValueError, match="floor"):
+        pow2_pad(5, cap=64, floor=floor)
+    with pytest.raises(ValueError, match="floor"):
+        pow2_pads(np.array([5, 9]), cap=64, floor=floor)
+
+
+@pytest.mark.parametrize("floor", [0, -4, 6])
+def test_compact_drivers_reject_bad_floor(floor):
+    batch = sweep.grid_arrays(_random_params(8, seed=1),
+                              pad_tasks=23, pad_vms=9)
+    with pytest.raises(ValueError, match="floor"):
+        engine.simulate_batch_arrays_compact(batch, k=2, floor=floor)
+    with pytest.raises(ValueError, match="floor"):
+        epoch_schedule_compact(batch, k=2, tile=8, interpret=True,
+                               floor=floor)
+
+
+# ---------------------------------------------------------------------------
+# Compact-interval clamp: named constants, pinned (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def test_compact_interval_clamp_constants_pinned():
+    """The K* re-derivation (sync_us + dispatch_us round pricing) must not
+    silently change the clamp the pre-split formula used."""
+    assert costmodel.COMPACT_INTERVAL_MIN == 1
+    assert costmodel.COMPACT_INTERVAL_MAX == 64
+    huge = costmodel.CostModel(dispatch_us=1e12, epoch_lane_us=0.05,
+                               sync_us=1e12, device="huge")
+    assert huge.compact_interval(2048, 21) == costmodel.COMPACT_INTERVAL_MAX
+    tiny = costmodel.CostModel(dispatch_us=1e-9, epoch_lane_us=1e9,
+                               sync_us=1e-9, device="tiny")
+    assert tiny.compact_interval(2048, 21) == costmodel.COMPACT_INTERVAL_MIN
+    for n, t in ((8, 8), (64, 21), (2048, 23)):
+        k = PINNED.compact_interval(n, t)
+        assert costmodel.COMPACT_INTERVAL_MIN <= k \
+            <= costmodel.COMPACT_INTERVAL_MAX
+
+
+def test_compact_interval_prices_sync_plus_dispatch():
+    """A round costs one scalar pull plus one chunk launch: moving cost
+    between the two coefficients leaves K* unchanged."""
+    a = costmodel.CostModel(dispatch_us=900.0, epoch_lane_us=0.05,
+                            sync_us=100.0, device="a")
+    b = costmodel.CostModel(dispatch_us=100.0, epoch_lane_us=0.05,
+                            sync_us=900.0, device="b")
+    for n, t in ((64, 8), (512, 21), (2048, 23)):
+        assert a.compact_interval(n, t) == b.compact_interval(n, t)
+    # and a pricier sync alone pushes the interval up (fewer checks)
+    cheap_sync = costmodel.CostModel(dispatch_us=800.0, epoch_lane_us=0.05,
+                                     sync_us=1.0, device="c")
+    dear_sync = costmodel.CostModel(dispatch_us=800.0, epoch_lane_us=0.05,
+                                    sync_us=80000.0, device="d")
+    assert dear_sync.compact_interval(512, 21) \
+        > cheap_sync.compact_interval(512, 21)
+
+
+# ---------------------------------------------------------------------------
+# _take_lanes/_put_lanes round-trip: permutation identity (property)
+# ---------------------------------------------------------------------------
+
+def _check_take_put_roundtrip(seed: int):
+    """Gathering any lane subset and scattering it straight back is the
+    identity, for arbitrary carry-shaped pytrees including ``None``
+    trace/control leaves (the static-off lowerings' pytree form)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 33))
+    m = int(rng.integers(1, n + 1))
+    tree = {
+        "f32": jnp.asarray(rng.normal(size=(n, int(rng.integers(1, 5))))
+                           .astype(np.float32)),
+        "i32": (jnp.asarray(rng.integers(-5, 9, size=(n,))
+                            .astype(np.int32)), None),
+        "bool": jnp.asarray(rng.integers(0, 2, size=(n, 3)) != 0),
+        "trace_off": None,
+    }
+    idx = jnp.asarray(rng.permutation(n)[:m])
+    sub = engine._take_lanes(tree, idx)
+    back = engine._put_lanes(tree, idx, sub)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, back)
+    # distinct-index scatter of gathered rows is exact, so double
+    # application changes nothing either
+    again = engine._put_lanes(back, idx, engine._take_lanes(back, idx))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, again)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_take_put_roundtrip_identity(seed):
+    _check_take_put_roundtrip(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(hst.integers(min_value=0, max_value=2**32 - 1))
+    def test_take_put_roundtrip_identity_hypothesis(seed):
+        _check_take_put_roundtrip(seed)
+
+
+def test_take_put_roundtrip_real_carry():
+    """The property on the engine's actual carry pytree (trace leaves off
+    -> None leaves ride the tree.map exactly like the synthetic case)."""
+    batch = sweep.grid_arrays(_elastic_params(12, seed=2),
+                              pad_tasks=23, pad_vms=9)
+    _, c0 = engine._setup_batch(batch)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.permutation(12)[:8])
+    back = engine._put_lanes(c0, idx, engine._take_lanes(c0, idx))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), c0, back)
+
+
+# ---------------------------------------------------------------------------
+# Donation safety: no use-after-donate on any mode (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_engine_compact_donation_safe_and_bitwise():
+    """donate=True must consume only loop-internal buffers: results match
+    the donation-off and legacy loops bitwise, every output fully
+    materializes, and a second run over the SAME batch arrays (shared,
+    never donated) is identical — a use-after-donate anywhere raises."""
+    batch = sweep.grid_arrays(_elastic_params(48, seed=23),
+                              pad_tasks=23, pad_vms=9)
+    lean, r1 = engine.simulate_batch_arrays_compact(batch, k=2)
+    off, r2 = engine.simulate_batch_arrays_compact(batch, k=2,
+                                                   donate=False)
+    legacy, r3 = engine.simulate_batch_arrays_compact(batch, k=2,
+                                                      legacy=True)
+    again, r4 = engine.simulate_batch_arrays_compact(batch, k=2)
+    _assert_bitwise(lean, off, "donate on vs off")
+    _assert_bitwise(lean, legacy, "lean vs legacy loop")
+    _assert_bitwise(lean, again, "repeat over shared batch")
+    assert int(r1) == int(r2) == int(r3) == int(r4)
+
+
+def test_engine_compact_donation_safe_traced():
+    """The trace leaves ride the donated carry; the buffers the host
+    finally reads must never have been donated."""
+    batch = sweep.grid_arrays(_random_params(24, seed=6),
+                              pad_tasks=23, pad_vms=9)
+    out_a, rz_a, tr_a = engine.simulate_batch_arrays_compact(
+        batch, k=2, trace=True)
+    out_b, rz_b, tr_b = engine.simulate_batch_arrays_compact(
+        batch, k=2, trace=True, legacy=True)
+    _assert_bitwise(out_a, out_b, "traced lean vs legacy")
+    assert int(rz_a) == int(rz_b)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tr_a, tr_b)
+
+
+def test_pallas_compact_donation_safe_and_bitwise():
+    batch = sweep.grid_arrays(_random_params(48, seed=7),
+                              pad_tasks=23, pad_vms=9)
+    lean, r1 = epoch_schedule_compact(batch, k=2, tile=8, interpret=True)
+    off, r2 = epoch_schedule_compact(batch, k=2, tile=8, interpret=True,
+                                     donate=False)
+    again, r3 = epoch_schedule_compact(batch, k=2, tile=8, interpret=True)
+    _assert_bitwise(lean, off, "pallas donate on vs off")
+    _assert_bitwise(lean, again, "pallas repeat over shared batch")
+    assert int(r1) == int(r2) == int(r3)
+
+
+def test_run_modes_survive_repeat_with_donation():
+    """run() encodes grids through an lru cache, so the compact drivers
+    must never donate encoder-owned arrays: every compacted mode must
+    produce identical results when run twice back to back."""
+    plan = _mixed_plan(n=48, seed=13)
+    for kw in (dict(compact=1), dict(chunk=17, compact=2),
+               dict(backend="pallas", compact=2)):
+        first = plan.run(**kw)
+        second = plan.run(**kw)
+        for name in first.metric_names:
+            np.testing.assert_array_equal(first[name], second[name],
+                                          err_msg=f"{name} ({kw})")
+
+
+# ---------------------------------------------------------------------------
+# Host chattiness: the dispatch-lean loop's sync census (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_lean_loop_sync_census():
+    """Acceptance: full mask/permutation pulls drop to <= the number of
+    compaction rounds; every round pays exactly one fused scalar pull."""
+    batch = sweep.grid_arrays(_random_params(64, seed=7),
+                              pad_tasks=23, pad_vms=9)
+    st = {}
+    engine.simulate_batch_arrays_compact(batch, k=1, stats=st)
+    assert st["compactions"] > 0, "grid must actually compact"
+    assert st["syncs"] == st["compactions"]
+    assert st["scalar_syncs"] == st["dispatches"] + 1
+    # the legacy loop paid a full-array pull every round
+    stl = {}
+    engine.simulate_batch_arrays_compact(batch, k=1, stats=stl,
+                                         legacy=True)
+    assert stl["compactions"] == st["compactions"]
+    assert stl["dispatches"] == st["dispatches"]
+    assert stl["syncs"] > st["syncs"]
+    assert stl["syncs"] >= stl["dispatches"]
+
+
+def test_pallas_lean_loop_sync_census():
+    batch = sweep.grid_arrays(_random_params(64, seed=7),
+                              pad_tasks=23, pad_vms=9)
+    st = {}
+    epoch_schedule_compact(batch, k=1, tile=8, interpret=True, stats=st)
+    assert st["compactions"] > 0
+    assert st["syncs"] == st["compactions"]
+    assert st["scalar_syncs"] == st["dispatches"] + 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-tile mr_epoch: bitwise across the compact tile-sweep shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [4, 8, 16])
+def test_mr_epoch_multitile_bitwise(block):
+    batch = sweep.grid_arrays(_random_params(48, seed=7),
+                              pad_tasks=23, pad_vms=9)
+    ref = epoch_schedule(batch, tile=16, interpret=True)
+    mt = epoch_schedule(batch, tile=16, interpret=True, block_lanes=block)
+    _assert_bitwise(ref, mt, f"multi-tile block={block}")
+
+
+def test_pallas_compact_multitile_bitwise():
+    """Compacted pow2 working sets re-tile across the minor grid dim and
+    stay bitwise-equal to the engine across the tile-sweep shapes."""
+    batch = sweep.grid_arrays(_random_params(48, seed=7),
+                              pad_tasks=23, pad_vms=9)
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    for tile, block in ((8, 4), (16, 8), (32, 8)):
+        comp, rz = epoch_schedule_compact(batch, k=4, tile=tile,
+                                          interpret=True,
+                                          block_lanes=block)
+        _assert_bitwise(eng, comp, f"compact tile={tile} block={block}")
+
+
+def test_mr_epoch_multitile_elastic_stranded_bitwise():
+    batch = sweep.grid_arrays(_elastic_params(32, seed=23),
+                              pad_tasks=23, pad_vms=9)
+    eng, _ = jax.jit(engine.simulate_batch_arrays)(batch)
+    comp, _ = epoch_schedule_compact(batch, k=4, tile=8, interpret=True,
+                                     block_lanes=4)
+    _assert_bitwise(eng, comp, "multi-tile compact (stranded)")

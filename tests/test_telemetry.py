@@ -305,7 +305,7 @@ def test_timeseries_table_and_parquet(tmp_path):
 # ---------------------------------------------------------------------------
 
 _PINNED = costmodel.CostModel(dispatch_us=100.0, epoch_lane_us=0.05,
-                              device="pinned")
+                              sync_us=40.0, device="pinned")
 
 
 def test_run_report_observational():
@@ -317,7 +317,8 @@ def test_run_report_observational():
     assert rep.n_cells == 8 and rep.n_buckets == len(rep.buckets) >= 1
     assert rep.dispatches == sum(b.dispatches for b in rep.buckets) >= 1
     assert rep.cost_model == {"dispatch_us": 100.0, "epoch_lane_us": 0.05,
-                              "device": "pinned", "source": "static"}
+                              "sync_us": 40.0, "device": "pinned",
+                              "source": "static"}
     assert rep.provenance["jax_version"]
     assert rep.wall_s > 0 and all(b.wall_s > 0 for b in rep.buckets)
     # second identical run hits the fused-runner cache for every bucket
@@ -335,9 +336,16 @@ def test_run_report_compact_counts_syncs():
         if f == "realized_epochs":
             continue
         np.testing.assert_array_equal(base[f], res[f], err_msg=f)
-    assert rep.compaction_syncs > 0
+    # dispatch-lean loop (DESIGN.md §13): every round pulls one fused
+    # scalar pair; full mask/permutation pulls happen only on rounds that
+    # actually compact — this 4-cell plan never shrinks below the pow2
+    # floor, so its full-pull count is exactly zero
+    assert rep.scalar_syncs > 0
+    assert rep.compaction_syncs == 0
     assert rep.compact == 1
-    assert all(b.compact_syncs > 0 for b in rep.buckets)
+    assert all(b.compact_scalar_syncs > 0 for b in rep.buckets)
+    assert all(b.compact_syncs <= b.compact_scalar_syncs
+               for b in rep.buckets)
 
 
 def test_run_report_cost_source_surfaces():
